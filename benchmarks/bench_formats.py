@@ -1,0 +1,78 @@
+"""Paper Tables 1-2: block-fill statistics + storage occupancy + conversion
+cost for the synthetic Set-A/Set-B analogues (SuiteSparse is offline;
+DESIGN.md §8.5)."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import formats as F
+from repro.core import matgen
+from repro.kernels import ops
+
+TABLE_BLOCKS = [(1, 8), (2, 4), (2, 8), (4, 4), (4, 8), (8, 4)]
+
+
+def stats_table(matrices: Dict, quick: bool = False) -> List[Dict]:
+    rows = []
+    names = list(matrices)
+    if quick:
+        names = names[:6]
+    for name in names:
+        csr = matrices[name]()
+        row = {"name": name, "dim": csr.shape[0], "nnz": csr.nnz,
+               "nnz_per_row": csr.nnz / csr.shape[0]}
+        for rc in TABLE_BLOCKS:
+            nb, avg = F.block_stats(csr, *rc)
+            row[f"avg_{rc[0]}x{rc[1]}"] = avg
+            row[f"fill_{rc[0]}x{rc[1]}"] = avg / (rc[0] * rc[1])
+        # occupancy vs CSR (paper eqs. 2/3) for the beta(1,8) format
+        mat = F.csr_to_spc5(csr, 1, 8)
+        row["occ_csr_mb"] = csr.occupancy_bytes() / 1e6
+        row["occ_spc5_1x8_mb"] = mat.occupancy_bytes() / 1e6
+        rows.append(row)
+    return rows
+
+
+def conversion_cost(name: str = "atmosmodd") -> Dict:
+    """Paper claim: conversion from CSR ~= 2x one sequential SpMV."""
+    csr = matgen.SET_A[name]()
+    t0 = time.perf_counter()
+    mat = F.csr_to_spc5(csr, 1, 8)
+    t_conv = time.perf_counter() - t0
+    h = ops.prepare(mat, cb=512)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(csr.shape[1]),
+                    jnp.float32)
+    y = ops.spmv(h, x, use_pallas=False).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(8):
+        y = ops.spmv(h, x, use_pallas=False)
+    y.block_until_ready()
+    t_spmv = (time.perf_counter() - t0) / 8
+    return {"name": name, "conv_s": t_conv, "spmv_s": t_spmv,
+            "ratio": t_conv / max(t_spmv, 1e-9)}
+
+
+def run(quick: bool = False):
+    lines = []
+    for set_name, mats in [("A", matgen.SET_A), ("B", matgen.SET_B)]:
+        rows = stats_table(mats, quick=quick)
+        for r in rows:
+            lines.append(
+                f"formats.set{set_name}.{r['name']},0,"
+                f"avg1x8={r['avg_1x8']:.2f};fill4x8={r['fill_4x8']:.2f};"
+                f"occ_ratio={r['occ_spc5_1x8_mb']/r['occ_csr_mb']:.3f}")
+        if quick:
+            break
+    c = conversion_cost()
+    lines.append(f"formats.conversion.{c['name']},{c['conv_s']*1e6:.0f},"
+                 f"conv_over_spmv={c['ratio']:.2f}")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

@@ -1,0 +1,75 @@
+"""LM substrate micro-benchmarks (single device, reduced configs):
+train-step and decode-step wall time per arch family + SparseLinear vs dense.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.sparse_linear import SparseLinear, prune_by_magnitude
+from repro.data.synthetic import SyntheticLM
+from repro.models import model as MD
+from repro.models.config import ShapeConfig
+from repro.optim import AdamWConfig, adamw_init
+from repro.train.step import make_train_step
+
+
+def _time(fn, iters=5):
+    out = fn()
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run(quick: bool = False) -> List[str]:
+    lines = []
+    archs = ["yi-6b", "mamba2-370m"] if quick else [
+        "yi-6b", "phi3.5-moe-42b-a6.6b", "mamba2-370m", "recurrentgemma-9b",
+        "seamless-m4t-medium"]
+    for arch in archs:
+        cfg = get_smoke_config(arch)
+        shape = ShapeConfig("b", 128, 4, "train")
+        params = MD.init_params(cfg, jax.random.PRNGKey(0))
+        opt = adamw_init(params)
+        step = jax.jit(make_train_step(cfg, AdamWConfig(), None))
+        data = SyntheticLM(cfg, shape.seq_len, shape.global_batch)
+        batch = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+        t = _time(lambda: step(params, opt, batch)[2]["loss"])
+        lines.append(f"lm.train_step.{arch},{t*1e6:.0f},"
+                     f"tok_per_s={shape.global_batch*shape.seq_len/t:.0f}")
+        cache = MD.init_cache(cfg, 4, 128)
+        dstep = jax.jit(
+            lambda p, c, t_, pos: MD.decode_step(p, c, t_, pos, cfg))
+        tok = jnp.zeros((4, 1), jnp.int32)
+        t = _time(lambda: dstep(params, cache, tok, jnp.asarray(5))[0])
+        lines.append(f"lm.decode_step.{arch},{t*1e6:.0f},"
+                     f"tok_per_s={4/t:.0f}")
+
+    # SparseLinear vs dense matmul at decode batch (the paper's SpMM-in-LM)
+    rng = np.random.default_rng(0)
+    d_out, d_in = 1024, 1024
+    w = rng.standard_normal((d_out, d_in)).astype(np.float32)
+    x = jnp.asarray(rng.standard_normal((8, d_in)), jnp.float32)
+    wd = jnp.asarray(w)
+    t_dense = _time(lambda: x @ wd.T)
+    for dens in [0.1, 0.3]:
+        sl = SparseLinear.from_dense(w, density=dens)
+        t_sp = _time(lambda: sl(x))
+        lines.append(
+            f"lm.sparse_linear.d{int(dens*100)},{t_sp*1e6:.0f},"
+            f"dense_us={t_dense*1e6:.0f};block={sl.handle.r}x{sl.handle.c};"
+            f"nnz_ratio={sl.density:.3f}")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in run(quick=True):
+        print(line)

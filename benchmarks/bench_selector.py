@@ -1,0 +1,80 @@
+"""Paper Table 3 / Fig. 6: kernel-selection quality.
+
+Fits the polynomial interpolation on Set-A records (from bench_spmv_seq),
+then selects kernels for Set-A and the independent Set-B, reporting the
+speed difference between the selected and the objectively best kernel.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import formats as F
+from repro.core import matgen
+from repro.core.selector import (DEFAULT_KERNELS, RecordStore, kernel_block,
+                                 select_kernel)
+from .bench_spmv_seq import bench_matrix, time_fn
+from repro.kernels import ops
+
+_MEASURABLE = tuple(k for k in DEFAULT_KERNELS if not k.endswith("_test"))
+
+
+def measure_all_kernels(csr) -> Dict[str, float]:
+    """Actual GFlop/s of every kernel on a matrix."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(csr.shape[1]), jnp.float32)
+    out = {}
+    for k in _MEASURABLE:
+        rc = kernel_block(k)
+        mat = F.csr_to_spc5(csr, *rc)
+        h = ops.prepare(mat, cb=512, dtype=np.float32)
+        t = time_fn(lambda: ops.spmv(h, x, use_pallas=False), iters=5)
+        out[k] = 2.0 * csr.nnz / t / 1e9
+    return out
+
+
+def run(quick: bool = False, store: Optional[RecordStore] = None
+        ) -> List[str]:
+    set_a = ["atmosmodd", "bone010", "pdb1HYS", "kron_g500-logn21",
+             "mixtank_new", "Dense-800"] if quick else list(matgen.SET_A)
+    set_b = ["bundle_adj", "wikipedia-20060925"] if quick else list(
+        matgen.SET_B)
+
+    if store is None or not store.records:
+        store = RecordStore()
+        for name in set_a:
+            csr = matgen.SET_A[name]()
+            bench_matrix(name, csr, store=store)
+
+    lines = []
+    for set_name, names, gens in [("A", set_a, matgen.SET_A),
+                                  ("B", set_b, matgen.SET_B)]:
+        correct = 0
+        diffs = []
+        for name in names:
+            csr = gens[name]()
+            selected, predicted, _ = select_kernel(
+                csr, store, workers=1, kernels=_MEASURABLE)
+            actual = measure_all_kernels(csr)
+            best = max(actual, key=lambda k: actual[k])
+            diff = (actual[best] - actual[selected]) / actual[best] * 100
+            diffs.append(diff)
+            correct += int(diff < 1e-6)
+            lines.append(
+                f"selector.set{set_name}.{name},0,"
+                f"selected={selected};best={best};"
+                f"pred={predicted:.2f};actual={actual[selected]:.2f};"
+                f"diff_pct={diff:.2f}")
+        lines.append(
+            f"selector.set{set_name}.summary,0,"
+            f"optimal={correct}/{len(names)};"
+            f"mean_diff_pct={np.mean(diffs):.2f};"
+            f"max_diff_pct={np.max(diffs):.2f}")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in run(quick=True):
+        print(line)

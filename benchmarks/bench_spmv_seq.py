@@ -1,0 +1,96 @@
+"""Paper Fig. 3: sequential SpMV throughput per kernel per matrix.
+
+MKL-CSR / CSR5 are unavailable offline; the baseline is a jnp CSR
+(segment-sum) SpMV on the same data. Absolute GFlop/s on this CPU container
+are NOT Skylake numbers -- the deliverable is the RELATIVE format comparison
+and the records that feed the paper's selector (bench_selector.py).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import formats as F
+from repro.core import matgen
+from repro.core.selector import RecordStore
+from repro.kernels import ops
+
+KERNELS = [(1, 8), (2, 4), (2, 8), (4, 4), (4, 8), (8, 4)]
+
+
+@functools.partial(jax.jit, static_argnames=("nrows",))
+def csr_spmv(rowlen_rows, colidx, values, x, *, nrows):
+    """Baseline CSR SpMV: gather + segment-sum (row ids precomputed)."""
+    prod = values * x[colidx]
+    return jax.ops.segment_sum(prod, rowlen_rows, num_segments=nrows)
+
+
+def time_fn(fn, iters: int = 8) -> float:
+    fn().block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters
+
+
+def bench_matrix(name: str, csr, store: Optional[RecordStore] = None,
+                 workers: int = 1) -> List[str]:
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(csr.shape[1]), jnp.float32)
+    flops = 2.0 * csr.nnz
+    lines = []
+    # CSR baseline
+    row_ids = jnp.asarray(np.repeat(np.arange(csr.nrows),
+                                    np.diff(csr.rowptr)).astype(np.int32))
+    colidx = jnp.asarray(csr.colidx)
+    values = jnp.asarray(csr.values.astype(np.float32))
+    t = time_fn(lambda: csr_spmv(row_ids, colidx, values, x,
+                                 nrows=csr.nrows))
+    gf_csr = flops / t / 1e9
+    lines.append(f"spmv_seq.{name}.csr,{t*1e6:.1f},gflops={gf_csr:.3f}")
+    for rc in KERNELS:
+        mat = F.csr_to_spc5(csr, *rc)
+        h = ops.prepare(mat, cb=512, dtype=np.float32)
+        t = time_fn(lambda: ops.spmv(h, x, use_pallas=False))
+        gf = flops / t / 1e9
+        kname = f"{rc[0]}x{rc[1]}"
+        lines.append(f"spmv_seq.{name}.{kname},{t*1e6:.1f},"
+                     f"gflops={gf:.3f};speedup_vs_csr={gf/gf_csr:.2f}")
+        if store is not None:
+            store.add(kname, mat.avg_nnz_per_block, workers, gf, matrix=name)
+        # paper's beta(r,c)_test variants for the small blocks
+        if rc in ((1, 8), (2, 4)):
+            ht = ops.prepare_test(mat, cb=512, dtype=np.float32)
+            tt = time_fn(lambda: ops.spmv_test(ht, x, use_pallas=False))
+            gft = flops / tt / 1e9
+            lines.append(
+                f"spmv_seq.{name}.{kname}_test,{tt*1e6:.1f},"
+                f"gflops={gft:.3f};singles="
+                f"{int(ht.single_values.shape[0])}")
+            if store is not None:
+                store.add(f"{kname}_test", mat.avg_nnz_per_block, workers,
+                          gft, matrix=name)
+    return lines
+
+
+def run(quick: bool = False, store: Optional[RecordStore] = None):
+    names = list(matgen.SET_A)
+    if quick:
+        names = ["atmosmodd", "bone010", "kron_g500-logn21", "pdb1HYS",
+                 "Dense-800", "ns3Da"]
+    lines = []
+    for name in names:
+        csr = matgen.SET_A[name]()
+        lines.extend(bench_matrix(name, csr, store=store))
+    return lines
+
+
+if __name__ == "__main__":
+    for line in run(quick=True):
+        print(line)

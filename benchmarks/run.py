@@ -1,0 +1,77 @@
+"""Benchmark harness: one section per paper table/figure + the LM substrate.
+
+Prints ``name,us_per_call,derived`` CSV lines (one per measurement).
+``--quick`` runs a representative subset (a few minutes on CPU);
+``--full`` runs every Set-A/Set-B matrix.
+Roofline rows appear when experiments/dryrun/*.json exists (run
+``python -m repro.launch.dryrun`` first; see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="all matrices (slower); default is --quick subset")
+    args = ap.parse_args(argv)
+    quick = not args.full
+
+    from repro.core.selector import RecordStore
+    store = RecordStore()
+
+    sections = []
+
+    from . import bench_formats
+    sections.append(("formats", lambda: bench_formats.run(quick=quick)))
+
+    from . import bench_spmv_seq
+    sections.append(("spmv_seq",
+                     lambda: bench_spmv_seq.run(quick=quick, store=store)))
+
+    from . import bench_spmv_par
+    sections.append(("spmv_par", lambda: bench_spmv_par.run(quick=quick)))
+
+    from . import bench_selector
+    sections.append(("selector",
+                     lambda: bench_selector.run(quick=quick, store=store)))
+
+    from . import bench_lm_step
+    sections.append(("lm", lambda: bench_lm_step.run(quick=quick)))
+
+    from . import roofline
+    def _roofline():
+        rows = roofline.main(csv=False)
+        out = []
+        for r in rows:
+            if "skipped" in r:
+                out.append(
+                    f"roofline.{r['arch']}.{r['shape']}.{r['mesh']},skip,0")
+            else:
+                out.append(
+                    f"roofline.{r['arch']}.{r['shape']}.{r['mesh']},"
+                    f"{r['bound_s']*1e6:.1f},"
+                    f"frac={r['roofline_fraction']*100:.2f}pct;"
+                    f"dom={r['dominant']}")
+        return out
+    sections.append(("roofline", _roofline))
+
+    failed = 0
+    for name, fn in sections:
+        print(f"# --- {name} ---")
+        try:
+            for line in fn():
+                print(line)
+        except Exception as e:  # noqa: BLE001 -- keep the harness running
+            failed += 1
+            print(f"{name}.ERROR,0,{e!r}", file=sys.stderr)
+            traceback.print_exc()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

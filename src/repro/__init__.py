@@ -1,0 +1,10 @@
+"""SPC5-JAX: block-sparse kernels without zero padding + multi-pod LM stack.
+
+Public API re-exports; see README.md.
+"""
+from repro.core.formats import (CSRMatrix, SPC5Matrix, csr_from_dense,  # noqa: F401
+                                csr_to_spc5)
+from repro.core.selector import RecordStore, select_kernel  # noqa: F401
+from repro.core.sparse_linear import SparseLinear  # noqa: F401
+
+__version__ = "1.0.0"

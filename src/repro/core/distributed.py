@@ -1,0 +1,149 @@
+"""Distributed SPC5 SpMV over a jax mesh (paper §Parallelization on TPU).
+
+Mapping of the paper's shared-memory design onto SPMD devices:
+
+  paper                                  | here
+  ---------------------------------------+--------------------------------
+  OpenMP threads, static block balance   | mesh devices, same interval algo
+  per-NUMA-node copies of the 4 arrays   | per-device shards (shard_map)
+  x allocated on master, read by all     | x replicated across the mesh
+  y merged without synchronisation       | disjoint row slabs; one
+                                         | all_gather AFTER compute (only
+                                         | when the caller needs the full
+                                         | vector, e.g. between CG steps)
+
+Each device holds equal-shape padded arrays (chunk count and value length
+padded to the max across shards) so the stacked global arrays shard evenly;
+padding chunks have mask==0 and contribute nothing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import formats as F
+from . import ref_spmv as R
+from .partition import partition_matrix, partition_row_starts
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedSPC5:
+    """Stacked per-device chunked arrays, leading dim == n_devices."""
+
+    values: jax.Array       # (ndev, nvals_max)
+    chunk_col: jax.Array    # (ndev, nchunks_max, cb)
+    chunk_mask: jax.Array   # (ndev, nchunks_max, cb)
+    chunk_voff: jax.Array   # (ndev, nchunks_max, cb)
+    chunk_row: jax.Array    # (ndev, nchunks_max, cb) LOCAL rows
+    chunk_vbase: jax.Array  # (ndev, nchunks_max)
+    row_start: jax.Array    # (ndev,) global first row of the shard
+    r: int
+    c: int
+    cb: int
+    vmax: int
+    rows_max: int           # padded local row count (uniform)
+    nrows: int
+    ncols: int
+    nnz: int
+
+    @property
+    def ndev(self) -> int:
+        return self.chunk_col.shape[0]
+
+
+def shard_matrix(mat: F.SPC5Matrix, ndev: int, cb: int = 256,
+                 mesh: Optional[Mesh] = None, axis: str = "data",
+                 dtype=None) -> ShardedSPC5:
+    """Partition + chunk + stack + (optionally) device_put with sharding."""
+    parts = partition_matrix(mat, ndev)
+    row_starts = partition_row_starts(mat, ndev)
+    chunked = [F.to_chunked(p, cb=cb) for p in parts]
+    nch = max(ch.nchunks for ch in chunked)
+    vmax = max(ch.vmax for ch in chunked)
+    nvals = max(ch.values.shape[0] + vmax for ch in chunked)
+    rows_max = max(p.shape[0] for p in parts)
+
+    def pad2(a, n):  # pad axis0 of (nchunks, cb)
+        return np.pad(a, ((0, n - a.shape[0]), (0, 0)))
+
+    dt = dtype or mat.values.dtype
+    stacked = ShardedSPC5(
+        values=jnp.asarray(np.stack([
+            np.pad(ch.values, (0, nvals - ch.values.shape[0]))
+            for ch in chunked]).astype(dt)),
+        chunk_col=jnp.asarray(np.stack([pad2(ch.chunk_col, nch) for ch in chunked])),
+        chunk_mask=jnp.asarray(np.stack([pad2(ch.chunk_mask, nch).astype(np.int32)
+                                         for ch in chunked])),
+        chunk_voff=jnp.asarray(np.stack([pad2(ch.chunk_voff, nch) for ch in chunked])),
+        chunk_row=jnp.asarray(np.stack([pad2(ch.chunk_row, nch) for ch in chunked])),
+        chunk_vbase=jnp.asarray(np.stack([
+            np.pad(ch.chunk_vbase, (0, nch - ch.chunk_vbase.shape[0]))
+            for ch in chunked])),
+        row_start=jnp.asarray(row_starts),
+        r=mat.r, c=mat.c, cb=cb, vmax=vmax, rows_max=rows_max,
+        nrows=mat.shape[0], ncols=mat.shape[1], nnz=mat.nnz,
+    )
+    if mesh is not None:
+        spec = P(axis)
+        put = lambda a: jax.device_put(a, NamedSharding(mesh, spec))
+        stacked = dataclasses.replace(
+            stacked,
+            values=put(stacked.values), chunk_col=put(stacked.chunk_col),
+            chunk_mask=put(stacked.chunk_mask), chunk_voff=put(stacked.chunk_voff),
+            chunk_row=put(stacked.chunk_row), chunk_vbase=put(stacked.chunk_vbase),
+            row_start=put(stacked.row_start))
+    return stacked
+
+
+def _local_spmv(sh: ShardedSPC5, values, col, mask, voff, row, vbase, x):
+    """SpMV on one shard's arrays (leading device dim already squeezed)."""
+    dev = R.SPC5Device(values=values, chunk_col=col, chunk_mask=mask,
+                       chunk_voff=voff, chunk_row=row, chunk_vbase=vbase)
+    return R.spmv(dev, x, r=sh.r, c=sh.c, nrows=sh.rows_max, ncols=sh.ncols)
+
+
+def make_distributed_spmv(sh: ShardedSPC5, mesh: Mesh, axis: str = "data",
+                          gather: bool = True):
+    """Build a jit'd y = A @ x over the mesh.
+
+    With gather=True the result is the full replicated y (one all_gather at
+    the end -- the only collective; the paper's no-sync merge). With
+    gather=False the caller keeps the row-slab layout (ndev, rows_max),
+    sharded over ``axis``, e.g. to chain into an operator that consumes
+    row-sharded activations with zero collectives.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    def body(values, col, mask, voff, row, vbase, row_start, x):
+        # squeeze leading shard dim
+        y_loc = _local_spmv(sh, values[0], col[0], mask[0], voff[0], row[0],
+                            vbase[0], x)
+        if not gather:
+            return y_loc[None]
+        ys = jax.lax.all_gather(y_loc, axis)               # (ndev, rows_max)
+        starts = jax.lax.all_gather(row_start[0], axis)    # (ndev,)
+        # scatter slabs into the global vector; pads land past nrows-1 rows
+        # only if rows_max overruns -- clamp adds zeros there (values are 0).
+        idx = starts[:, None] + jnp.arange(sh.rows_max)[None, :]
+        y = jnp.zeros((sh.nrows + sh.rows_max,), dtype=ys.dtype)
+        y = y.at[idx.reshape(-1)].add(ys.reshape(-1))
+        return y[:sh.nrows]
+
+    in_specs = (P(axis), P(axis), P(axis), P(axis), P(axis), P(axis), P(axis),
+                P())
+    out_specs = P() if gather else P(axis)
+    fn = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=False)
+
+    @jax.jit
+    def run(x):
+        return fn(sh.values, sh.chunk_col, sh.chunk_mask, sh.chunk_voff,
+                  sh.chunk_row, sh.chunk_vbase, sh.row_start, x)
+
+    return run

@@ -1,0 +1,448 @@
+"""SPC5 block-sparse matrix formats without zero padding (paper: Bramas & Kus 2018).
+
+Host-side (numpy) storage + conversion, mirroring the paper's CSR -> beta(r,c)
+preprocessing, plus the chunked device layout consumed by the Pallas kernels.
+
+The beta(r,c) format (paper fig. 2):
+  * blocks are r-row aligned (top row of a block is a multiple of r) but may
+    start at ANY column;
+  * ``values`` holds ONLY the nonzeros (no padding), in block order and
+    row-major inside each block;
+  * ``block_colidx`` holds the leftmost column of each block;
+  * ``block_rowptr[i]`` is the index of the first block of row-interval i
+    (interval = rows [i*r, (i+1)*r));
+  * ``block_masks`` holds one r*c-bit mask per block; bit (lr*c + j) set means
+    position (row lr, col j) inside the block is a nonzero.
+
+We additionally precompute ``block_voffset`` (exclusive prefix popcount of the
+masks) so kernels can address a block's values in O(1); this is derived data,
+not extra storage semantics (the paper's asm kernel tracks the same quantity
+in a register as it streams blocks).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+SUPPORTED_BLOCKS: Tuple[Tuple[int, int], ...] = (
+    (1, 4), (1, 8), (2, 4), (2, 8), (4, 4), (4, 8), (8, 4),
+)
+
+_SENTINEL = np.int32(0)
+
+
+@dataclasses.dataclass
+class CSRMatrix:
+    """Compressed sparse row, the de-facto baseline format (paper fig. 1)."""
+
+    shape: Tuple[int, int]
+    rowptr: np.ndarray  # int32/int64, (nrows + 1,)
+    colidx: np.ndarray  # int32, (nnz,)
+    values: np.ndarray  # float, (nnz,)
+
+    @property
+    def nnz(self) -> int:
+        return int(self.values.shape[0])
+
+    @property
+    def nrows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def ncols(self) -> int:
+        return self.shape[1]
+
+    def to_dense(self) -> np.ndarray:
+        out = np.zeros(self.shape, dtype=self.values.dtype)
+        for i in range(self.nrows):
+            lo, hi = int(self.rowptr[i]), int(self.rowptr[i + 1])
+            out[i, self.colidx[lo:hi]] = self.values[lo:hi]
+        return out
+
+    def occupancy_bytes(self, s_int: int = 4) -> int:
+        """Paper eq. (3): O_CSR = NNZ*S_f + N_rows*S_i + NNZ*S_i."""
+        s_float = self.values.dtype.itemsize
+        return self.nnz * s_float + (self.nrows + 1) * s_int + self.nnz * s_int
+
+
+@dataclasses.dataclass
+class SPC5Matrix:
+    """The paper's beta(r, c) block format with bitmasks, no zero padding."""
+
+    shape: Tuple[int, int]
+    r: int
+    c: int
+    block_rowptr: np.ndarray   # int32, (ceil(nrows/r) + 1,)
+    block_colidx: np.ndarray   # int32, (nblocks,)
+    block_masks: np.ndarray    # uint32, (nblocks,)  (r*c <= 32 bits used)
+    block_voffset: np.ndarray  # int64, (nblocks,)  exclusive prefix popcount
+    values: np.ndarray         # float, (nnz,) -- exactly nnz, no padding
+
+    @property
+    def nnz(self) -> int:
+        return int(self.values.shape[0])
+
+    @property
+    def nblocks(self) -> int:
+        return int(self.block_colidx.shape[0])
+
+    @property
+    def nrows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def ncols(self) -> int:
+        return self.shape[1]
+
+    @property
+    def avg_nnz_per_block(self) -> float:
+        """Avg(r, c) = NNZ / N_blocks(r, c) -- the paper's selection feature."""
+        return self.nnz / max(self.nblocks, 1)
+
+    @property
+    def fill_ratio(self) -> float:
+        """Average block fill in [0, 1] (paper tables 1-2 percentages)."""
+        return self.avg_nnz_per_block / (self.r * self.c)
+
+    def occupancy_bytes(self, s_int: int = 4) -> int:
+        """Paper eq. (1)/(2) measured exactly on this instance."""
+        s_float = self.values.dtype.itemsize
+        n_intervals = self.block_rowptr.shape[0] - 1
+        mask_bytes = self.nblocks * max(1, (self.r * self.c) // 8)
+        return (self.nnz * s_float
+                + (n_intervals + 1) * s_int
+                + self.nblocks * s_int
+                + mask_bytes)
+
+    def to_dense(self) -> np.ndarray:
+        out = np.zeros(self.shape, dtype=self.values.dtype)
+        r, c = self.r, self.c
+        vi = 0
+        n_intervals = self.block_rowptr.shape[0] - 1
+        for it in range(n_intervals):
+            row0 = it * r
+            for b in range(int(self.block_rowptr[it]), int(self.block_rowptr[it + 1])):
+                col0 = int(self.block_colidx[b])
+                mask = int(self.block_masks[b])
+                for k in range(r * c):
+                    if (mask >> k) & 1:
+                        lr, lc = divmod(k, c)
+                        out[row0 + lr, col0 + lc] = self.values[vi]
+                        vi += 1
+        assert vi == self.nnz
+        return out
+
+
+def occupancy_model_spc5(nnz: int, nrows: int, avg: float, r: int, c: int,
+                         s_float: int = 8, s_int: int = 4) -> float:
+    """Paper eq. (2): the closed-form occupancy model (bytes)."""
+    return (nnz * s_float
+            + nrows * s_int / r
+            + nnz * (8 * s_int + r * c) / (8 * max(avg, 1e-12)))
+
+
+def occupancy_model_csr(nnz: int, nrows: int, s_float: int = 8,
+                        s_int: int = 4) -> float:
+    """Paper eq. (3)."""
+    return nnz * s_float + nrows * s_int + nnz * s_int
+
+
+def beta_breakeven_avg(r: int, c: int, s_int: int = 4) -> float:
+    """Paper eq. (4): minimum Avg(r,c) for beta(r,c) to beat CSR's last term."""
+    return 1.0 + (r * c) / (8.0 * s_int)
+
+
+# ----------------------------------------------------------------------------
+# Construction / conversion
+# ----------------------------------------------------------------------------
+
+def csr_from_dense(dense: np.ndarray) -> CSRMatrix:
+    nrows, _ = dense.shape
+    rowptr = np.zeros(nrows + 1, dtype=np.int64)
+    cols, vals = [], []
+    for i in range(nrows):
+        nz = np.nonzero(dense[i])[0]
+        rowptr[i + 1] = rowptr[i] + nz.shape[0]
+        cols.append(nz.astype(np.int32))
+        vals.append(dense[i, nz])
+    colidx = (np.concatenate(cols) if cols else np.zeros(0, np.int32))
+    values = (np.concatenate(vals) if vals else np.zeros(0, dense.dtype))
+    return CSRMatrix((nrows, dense.shape[1]), rowptr, colidx, values)
+
+
+def csr_from_coo(shape: Tuple[int, int], rows: np.ndarray, cols: np.ndarray,
+                 vals: np.ndarray) -> CSRMatrix:
+    """Build CSR from COO triplets (duplicates summed)."""
+    nrows, ncols = shape
+    order = np.lexsort((cols, rows))
+    rows, cols, vals = rows[order], cols[order], vals[order]
+    # collapse duplicates
+    if rows.shape[0]:
+        key = rows.astype(np.int64) * ncols + cols.astype(np.int64)
+        uniq, inv = np.unique(key, return_inverse=True)
+        summed = np.zeros(uniq.shape[0], dtype=vals.dtype)
+        np.add.at(summed, inv, vals)
+        rows = (uniq // ncols).astype(np.int64)
+        cols = (uniq % ncols).astype(np.int32)
+        vals = summed
+    rowptr = np.zeros(nrows + 1, dtype=np.int64)
+    np.add.at(rowptr, rows + 1, 1)
+    rowptr = np.cumsum(rowptr)
+    return CSRMatrix(shape, rowptr, cols.astype(np.int32), vals)
+
+
+def csr_to_spc5(csr: CSRMatrix, r: int, c: int) -> SPC5Matrix:
+    """Convert CSR to beta(r, c).
+
+    Greedy left-to-right block construction per r-row interval, exactly the
+    coverage the paper's figures show: a block opens at the leftmost uncovered
+    nonzero column of the interval and spans c columns.
+    """
+    if r * c > 32:
+        raise ValueError(f"mask must fit uint32, got r*c={r*c}")
+    nrows, ncols = csr.shape
+    n_intervals = -(-nrows // r)
+
+    rowptr = np.zeros(n_intervals + 1, dtype=np.int64)
+    all_colidx, all_masks, all_values = [], [], []
+
+    for it in range(n_intervals):
+        row0, row1 = it * r, min((it + 1) * r, nrows)
+        lo, hi = int(csr.rowptr[row0]), int(csr.rowptr[row1])
+        if lo == hi:
+            rowptr[it + 1] = rowptr[it]
+            continue
+        cols = csr.colidx[lo:hi].astype(np.int64)
+        vals = csr.values[lo:hi]
+        # local row of each nnz within the interval
+        lrows = np.repeat(
+            np.arange(row0, row1) - row0,
+            np.diff(csr.rowptr[row0:row1 + 1]).astype(np.int64),
+        )
+        # Greedy block starts over the sorted unique columns -- one loop
+        # iteration per BLOCK (not per nnz).
+        ucols = np.unique(cols)
+        starts = []
+        i = 0
+        while i < ucols.shape[0]:
+            s = ucols[i]
+            starts.append(s)
+            i = int(np.searchsorted(ucols, s + c, side="left"))
+        starts = np.asarray(starts, dtype=np.int64)
+        # Assign each nnz to its block.
+        bidx = np.searchsorted(starts, cols, side="right") - 1
+        bit = lrows * c + (cols - starts[bidx])
+        # values in block order, row-major inside block == sort by
+        # (block, local_row, col)
+        order = np.lexsort((cols, lrows, bidx))
+        masks = np.zeros(starts.shape[0], dtype=np.uint32)
+        np.bitwise_or.at(masks, bidx, (np.uint32(1) << bit.astype(np.uint32)))
+        all_colidx.append(starts.astype(np.int32))
+        all_masks.append(masks)
+        all_values.append(vals[order])
+        rowptr[it + 1] = rowptr[it] + starts.shape[0]
+
+    colidx = (np.concatenate(all_colidx) if all_colidx else np.zeros(0, np.int32))
+    masks = (np.concatenate(all_masks) if all_masks else np.zeros(0, np.uint32))
+    values = (np.concatenate(all_values) if all_values else np.zeros(0, csr.values.dtype))
+    pop = popcount_u32(masks).astype(np.int64)
+    voffset = np.concatenate([[0], np.cumsum(pop)[:-1]]) if masks.shape[0] else np.zeros(0, np.int64)
+    return SPC5Matrix((nrows, ncols), r, c, rowptr, colidx.astype(np.int32),
+                      masks, voffset.astype(np.int64), values)
+
+
+def spc5_to_csr(mat: SPC5Matrix) -> CSRMatrix:
+    """Exact inverse of :func:`csr_to_spc5` (used by round-trip tests)."""
+    return csr_from_dense(mat.to_dense())
+
+
+def popcount_u32(x: np.ndarray) -> np.ndarray:
+    x = x.astype(np.uint32)
+    out = np.zeros(x.shape, dtype=np.int32)
+    for k in range(32):
+        out += ((x >> np.uint32(k)) & np.uint32(1)).astype(np.int32)
+    return out
+
+
+def block_stats(csr: CSRMatrix, r: int, c: int) -> Tuple[int, float]:
+    """(N_blocks(r,c), Avg(r,c)) without materializing the format's values.
+
+    This is the cheap statistic the paper's selector uses *before* conversion.
+    """
+    nrows = csr.shape[0]
+    n_intervals = -(-nrows // r)
+    nblocks = 0
+    for it in range(n_intervals):
+        row0, row1 = it * r, min((it + 1) * r, nrows)
+        lo, hi = int(csr.rowptr[row0]), int(csr.rowptr[row1])
+        if lo == hi:
+            continue
+        ucols = np.unique(csr.colidx[lo:hi].astype(np.int64))
+        i = 0
+        while i < ucols.shape[0]:
+            i = int(np.searchsorted(ucols, ucols[i] + c, side="left"))
+            nblocks += 1
+    return nblocks, csr.nnz / max(nblocks, 1)
+
+
+# ----------------------------------------------------------------------------
+# beta_test variant: segregate singleton blocks (paper's `test` kernels)
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SPC5TestSplit:
+    """Storage-level equivalent of the paper's beta(r,c)_test dual-loop kernel.
+
+    Blocks whose mask has a single set bit are pulled out into a COO tail
+    (rows/cols/values); the remaining multi-nnz blocks stay in beta(r,c).
+    On TPU the specialisation is done at storage level because in-kernel
+    branching has no benefit on a divergence-free SIMD machine (DESIGN.md §2).
+    """
+
+    multi: SPC5Matrix
+    single_rows: np.ndarray   # int32 (n_single,)
+    single_cols: np.ndarray   # int32 (n_single,)
+    single_values: np.ndarray  # float (n_single,)
+
+    @property
+    def nnz(self) -> int:
+        return self.multi.nnz + int(self.single_values.shape[0])
+
+
+def split_singletons(mat: SPC5Matrix) -> SPC5TestSplit:
+    pop = popcount_u32(mat.block_masks)
+    is_single = pop == 1
+    r, c = mat.r, mat.c
+    n_intervals = mat.block_rowptr.shape[0] - 1
+    interval_of_block = np.repeat(
+        np.arange(n_intervals, dtype=np.int64), np.diff(mat.block_rowptr))
+
+    # Singleton extraction (vectorized)
+    sblocks = np.nonzero(is_single)[0]
+    if sblocks.shape[0]:
+        smask = mat.block_masks[sblocks].astype(np.uint32)
+        bitpos = np.zeros(sblocks.shape[0], dtype=np.int64)
+        tmp = smask.copy()
+        for k in range(r * c):
+            bitpos[(tmp == np.uint32(1) << np.uint32(k))] = k
+        srow = interval_of_block[sblocks] * r + bitpos // c
+        scol = mat.block_colidx[sblocks].astype(np.int64) + bitpos % c
+        svals = mat.values[mat.block_voffset[sblocks]]
+    else:
+        srow = np.zeros(0, np.int64)
+        scol = np.zeros(0, np.int64)
+        svals = np.zeros(0, mat.values.dtype)
+
+    # Remaining multi blocks
+    keep = np.nonzero(~is_single)[0]
+    rowptr = np.zeros(n_intervals + 1, dtype=np.int64)
+    np.add.at(rowptr, interval_of_block[keep] + 1, 1)
+    rowptr = np.cumsum(rowptr)
+    # gather values of kept blocks
+    if keep.shape[0]:
+        lens = popcount_u32(mat.block_masks[keep]).astype(np.int64)
+        starts = mat.block_voffset[keep]
+        vidx = np.concatenate([np.arange(s, s + l) for s, l in zip(starts, lens)])
+        kvals = mat.values[vidx]
+        kvoff = np.concatenate([[0], np.cumsum(lens)[:-1]])
+    else:
+        kvals = np.zeros(0, mat.values.dtype)
+        kvoff = np.zeros(0, np.int64)
+    multi = SPC5Matrix(mat.shape, r, c, rowptr,
+                       mat.block_colidx[keep], mat.block_masks[keep],
+                       kvoff.astype(np.int64), kvals)
+    return SPC5TestSplit(multi, srow.astype(np.int32), scol.astype(np.int32),
+                         svals)
+
+
+# ----------------------------------------------------------------------------
+# Chunked device layout for the Pallas kernels
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SPC5Chunked:
+    """Fixed-size chunks of CB blocks each, value windows 8-value aligned.
+
+    This is the device-facing layout: every per-chunk tile has a static shape
+    so Pallas BlockSpecs are uniform; the values array stays packed except
+    chunk starts are rounded up to ``align`` values (<0.5%% overhead, see
+    DESIGN.md "alignment padding note"). Pad blocks have mask == 0 (they load
+    nothing and contribute nothing).
+    """
+
+    shape: Tuple[int, int]
+    r: int
+    c: int
+    cb: int                 # blocks per chunk
+    vmax: int               # max values per chunk window (static tile size)
+    nchunks: int
+    chunk_col: np.ndarray   # int32 (nchunks, cb)   block left column
+    chunk_mask: np.ndarray  # uint32 (nchunks, cb)  0 => padding block
+    chunk_voff: np.ndarray  # int32 (nchunks, cb)   value offset within window
+    chunk_row: np.ndarray   # int32 (nchunks, cb)   global top row of block
+    chunk_vbase: np.ndarray  # int32 (nchunks,)     aligned start into values
+    values: np.ndarray      # float (nvals_padded,)
+    nnz: int
+
+    @property
+    def nrows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def ncols(self) -> int:
+        return self.shape[1]
+
+
+def to_chunked(mat: SPC5Matrix, cb: int = 256, align: int = 8) -> SPC5Chunked:
+    r, c = mat.r, mat.c
+    nblocks = mat.nblocks
+    nchunks = max(1, -(-nblocks // cb))
+    n_intervals = mat.block_rowptr.shape[0] - 1
+    interval_of_block = np.repeat(
+        np.arange(n_intervals, dtype=np.int64), np.diff(mat.block_rowptr))
+    pop = popcount_u32(mat.block_masks).astype(np.int64)
+
+    chunk_col = np.zeros((nchunks, cb), dtype=np.int32)
+    chunk_mask = np.zeros((nchunks, cb), dtype=np.uint32)
+    chunk_voff = np.zeros((nchunks, cb), dtype=np.int32)
+    chunk_row = np.zeros((nchunks, cb), dtype=np.int32)
+    chunk_vbase = np.zeros((nchunks,), dtype=np.int32)
+
+    vals_out = []
+    vcursor = 0
+    vmax = 0
+    for ch in range(nchunks):
+        b0, b1 = ch * cb, min((ch + 1) * cb, nblocks)
+        n = b1 - b0
+        if n <= 0:
+            chunk_vbase[ch] = vcursor
+            continue
+        lens = pop[b0:b1]
+        local_off = np.concatenate([[0], np.cumsum(lens)[:-1]])
+        total = int(lens.sum())
+        chunk_col[ch, :n] = mat.block_colidx[b0:b1]
+        chunk_mask[ch, :n] = mat.block_masks[b0:b1]
+        chunk_voff[ch, :n] = local_off
+        chunk_row[ch, :n] = (interval_of_block[b0:b1] * r).astype(np.int32)
+        chunk_vbase[ch] = vcursor
+        v0 = int(mat.block_voffset[b0])
+        vals_out.append(mat.values[v0:v0 + total])
+        vmax = max(vmax, total)
+        vcursor += total
+        pad = (-vcursor) % align
+        if pad:
+            vals_out.append(np.zeros(pad, mat.values.dtype))
+            vcursor += pad
+    # round the static window up to alignment, at least one vector
+    vmax = max(align, vmax + (-vmax) % align)
+    values = (np.concatenate(vals_out) if vals_out
+              else np.zeros(0, mat.values.dtype))
+    # tail padding so the last window load stays in bounds
+    tail_need = (int(chunk_vbase[-1]) + vmax) - values.shape[0]
+    if tail_need > 0:
+        values = np.concatenate([values, np.zeros(tail_need, mat.values.dtype)])
+    return SPC5Chunked(mat.shape, r, c, cb, int(vmax), nchunks, chunk_col,
+                       chunk_mask, chunk_voff, chunk_row, chunk_vbase, values,
+                       mat.nnz)

@@ -1,0 +1,71 @@
+"""Static block-balanced row partitioning (paper §Parallelization).
+
+Row intervals are chosen so every worker owns ~N_blocks/N_workers blocks,
+never splitting an r-row interval across workers: the paper's OpenMP split,
+reused verbatim for mesh devices (and pods). Ownership of disjoint row ranges
+is what lets the merge happen with no synchronization (on TPU: no collective
+inside the SpMV hot loop).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from .formats import SPC5Matrix
+
+
+def block_balanced_intervals(block_rowptr: np.ndarray, nparts: int
+                             ) -> List[Tuple[int, int]]:
+    """Partition row-interval indices [0, n_intervals) into nparts slices.
+
+    Boundary for part t sits where the cumulative block count is closest to
+    (t+1) * N_blocks / nparts (the paper's |(tid+1)*N_b/t - cum| test).
+    """
+    cum = np.asarray(block_rowptr, dtype=np.int64)
+    n_intervals = cum.shape[0] - 1
+    total = int(cum[-1])
+    bounds = [0]
+    for t in range(1, nparts):
+        target = t * total / nparts
+        j = int(np.searchsorted(cum, target))
+        # pick the closer of the two neighbours, clamped monotone
+        if j > 0 and (j >= cum.shape[0]
+                      or abs(cum[j - 1] - target) <= abs(cum[j] - target)):
+            j = j - 1
+        j = min(max(j, bounds[-1]), n_intervals)
+        bounds.append(j)
+    bounds.append(n_intervals)
+    return [(bounds[i], bounds[i + 1]) for i in range(nparts)]
+
+
+def partition_matrix(mat: SPC5Matrix, nparts: int) -> List[SPC5Matrix]:
+    """Split into per-worker sub-matrices over disjoint row intervals.
+
+    Each part gets its own four arrays (the paper's NUMA localisation: the
+    sub-arrays are placed on the owning worker's memory). Row indices stay
+    GLOBAL: part p covers rows [iv0*r, iv1*r).
+    """
+    parts: List[SPC5Matrix] = []
+    r = mat.r
+    for iv0, iv1 in block_balanced_intervals(mat.block_rowptr, nparts):
+        b0, b1 = int(mat.block_rowptr[iv0]), int(mat.block_rowptr[iv1])
+        v0 = int(mat.block_voffset[b0]) if b0 < mat.nblocks else mat.nnz
+        v1 = int(mat.block_voffset[b1]) if b1 < mat.nblocks else mat.nnz
+        rowptr = (mat.block_rowptr[iv0:iv1 + 1] - b0).astype(mat.block_rowptr.dtype)
+        parts.append(SPC5Matrix(
+            shape=((iv1 - iv0) * r, mat.shape[1]),
+            r=r, c=mat.c,
+            block_rowptr=rowptr,
+            block_colidx=mat.block_colidx[b0:b1],
+            block_masks=mat.block_masks[b0:b1],
+            block_voffset=(mat.block_voffset[b0:b1] - v0),
+            values=mat.values[v0:v1],
+        ))
+    return parts
+
+
+def partition_row_starts(mat: SPC5Matrix, nparts: int) -> np.ndarray:
+    """Global first row of each part (int32, (nparts,))."""
+    ivs = block_balanced_intervals(mat.block_rowptr, nparts)
+    return np.array([iv0 * mat.r for iv0, _ in ivs], dtype=np.int32)

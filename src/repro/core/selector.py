@@ -1,0 +1,159 @@
+"""Record-based kernel selection (paper §Performance prediction).
+
+The best beta(r,c) depends on the matrix. Following the paper:
+
+  * sequential: per-kernel polynomial interpolation of throughput vs
+    Avg NNZ/block (paper fig. 5), argmax over kernels;
+  * parallel: non-linear 2-D regression over (threads/devices, Avg NNZ/block)
+    (paper fig. 6);
+  * records come from previous executions and persist in a JSON store, so the
+    selector can be used "before converting a matrix into the format" --
+    ``block_stats`` is computable straight from CSR.
+
+Kernels are keyed "r x c" plus the "_test" suffix for the singleton-split
+variant, mirroring the paper's beta(r,c)_test naming.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .formats import SUPPORTED_BLOCKS, CSRMatrix, block_stats
+
+DEFAULT_KERNELS: Tuple[str, ...] = tuple(
+    f"{r}x{c}" for (r, c) in SUPPORTED_BLOCKS if (r, c) != (1, 4)
+) + ("1x8_test", "2x4_test")
+
+
+def kernel_block(kernel: str) -> Tuple[int, int]:
+    rc = kernel.split("_")[0]
+    r, c = rc.split("x")
+    return int(r), int(c)
+
+
+@dataclasses.dataclass
+class Record:
+    kernel: str
+    avg: float        # Avg NNZ/block for this kernel's (r,c) on the matrix
+    workers: int      # 1 == sequential
+    gflops: float
+    matrix: str = ""
+
+
+class RecordStore:
+    """Persistent store of (kernel, avg, workers) -> throughput records."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self.records: List[Record] = []
+        if path and os.path.exists(path):
+            with open(path) as f:
+                self.records = [Record(**r) for r in json.load(f)]
+
+    def add(self, kernel: str, avg: float, workers: int, gflops: float,
+            matrix: str = "") -> None:
+        self.records.append(Record(kernel, float(avg), int(workers),
+                                   float(gflops), matrix))
+
+    def save(self, path: Optional[str] = None) -> None:
+        path = path or self.path
+        if not path:
+            raise ValueError("no path for RecordStore.save")
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump([dataclasses.asdict(r) for r in self.records], f)
+        os.replace(tmp, path)
+
+    def kernels(self) -> List[str]:
+        return sorted({r.kernel for r in self.records})
+
+
+class SequentialPredictor:
+    """Per-kernel polyfit of gflops vs Avg NNZ/block (paper fig. 5)."""
+
+    def __init__(self, store: RecordStore, degree: int = 2):
+        self.coeffs: Dict[str, np.ndarray] = {}
+        for k in store.kernels():
+            pts = [(r.avg, r.gflops) for r in store.records
+                   if r.kernel == k and r.workers == 1]
+            if not pts:
+                continue
+            xs = np.array([p[0] for p in pts])
+            ys = np.array([p[1] for p in pts])
+            deg = min(degree, max(0, len(pts) - 1))
+            self.coeffs[k] = np.polyfit(xs, ys, deg)
+            self._clip = (float(xs.min()), float(xs.max()))
+
+    def predict(self, kernel: str, avg: float) -> float:
+        if kernel not in self.coeffs:
+            return -np.inf
+        return float(np.polyval(self.coeffs[kernel], avg))
+
+
+class ParallelPredictor:
+    """2-D non-linear least squares over (avg, workers) (paper fig. 6).
+
+    Basis: [1, a, w, a*w, a^2, w^2] with a=avg, w=log2(workers) -- "simple
+    interpolation of results from previous executions", per the paper.
+    """
+
+    @staticmethod
+    def _basis(avg: np.ndarray, workers: np.ndarray) -> np.ndarray:
+        a = np.asarray(avg, dtype=np.float64)
+        w = np.log2(np.maximum(np.asarray(workers, dtype=np.float64), 1.0))
+        return np.stack([np.ones_like(a), a, w, a * w, a * a, w * w], axis=-1)
+
+    def __init__(self, store: RecordStore):
+        self.coeffs: Dict[str, np.ndarray] = {}
+        for k in store.kernels():
+            pts = [(r.avg, r.workers, r.gflops) for r in store.records
+                   if r.kernel == k]
+            if len(pts) < 2:
+                continue
+            arr = np.array(pts, dtype=np.float64)
+            X = self._basis(arr[:, 0], arr[:, 1])
+            y = arr[:, 2]
+            self.coeffs[k], *_ = np.linalg.lstsq(X, y, rcond=None)
+
+    def predict(self, kernel: str, avg: float, workers: int) -> float:
+        if kernel not in self.coeffs:
+            return -np.inf
+        X = self._basis(np.array([avg]), np.array([workers]))
+        return float((X @ self.coeffs[kernel])[0])
+
+
+def matrix_features(csr: CSRMatrix,
+                    kernels: Sequence[str] = DEFAULT_KERNELS
+                    ) -> Dict[str, float]:
+    """Avg NNZ/block per kernel, computed from CSR without conversion."""
+    feats: Dict[str, float] = {}
+    cache: Dict[Tuple[int, int], float] = {}
+    for k in kernels:
+        rc = kernel_block(k)
+        if rc not in cache:
+            _, avg = block_stats(csr, *rc)
+            cache[rc] = avg
+        feats[k] = cache[rc]
+    return feats
+
+
+def select_kernel(csr: CSRMatrix, store: RecordStore, workers: int = 1,
+                  kernels: Sequence[str] = DEFAULT_KERNELS
+                  ) -> Tuple[str, float, Dict[str, float]]:
+    """Pick the kernel with the highest predicted throughput.
+
+    Returns (kernel, predicted_gflops, per-kernel predictions).
+    """
+    feats = matrix_features(csr, kernels)
+    if workers == 1:
+        pred = SequentialPredictor(store)
+        scores = {k: pred.predict(k, feats[k]) for k in kernels}
+    else:
+        pred = ParallelPredictor(store)
+        scores = {k: pred.predict(k, feats[k], workers) for k in kernels}
+    best = max(scores, key=lambda k: scores[k])
+    return best, scores[best], scores

@@ -1,0 +1,140 @@
+"""jit'd public wrappers for the SPC5 Pallas kernels.
+
+Dispatches by backend: on TPU the Pallas kernels run natively; elsewhere they
+run in ``interpret=True`` (the kernel body executed in Python, per-op) when
+``force_pallas`` is set, and otherwise fall back to the jnp reference, which
+is numerically identical. Conversion helpers take host ``SPC5Matrix`` /
+``SPC5Chunked`` objects and return device handles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import formats as F
+from repro.core import ref_spmv as R
+from . import spc5_spmv, spc5_spmm
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@dataclasses.dataclass(frozen=True)
+class SPC5Handle:
+    """Device-resident chunked beta(r,c) matrix + static meta.
+
+    Registered as a pytree (arrays = leaves, geometry = static aux) so sparse
+    weights can live inside model parameter pytrees and cross jit boundaries.
+    """
+
+    dev: R.SPC5Device
+    r: int
+    c: int
+    cb: int
+    vmax: int
+    nrows: int
+    ncols: int
+    nnz: int
+
+    @property
+    def shape(self):
+        return (self.nrows, self.ncols)
+
+
+def _handle_flatten(h: SPC5Handle):
+    return (tuple(h.dev),), (h.r, h.c, h.cb, h.vmax, h.nrows, h.ncols, h.nnz)
+
+
+def _handle_unflatten(aux, children):
+    return SPC5Handle(R.SPC5Device(*children[0]), *aux)
+
+
+jax.tree_util.register_pytree_node(SPC5Handle, _handle_flatten,
+                                   _handle_unflatten)
+
+
+def prepare(mat: F.SPC5Matrix, cb: int = 256, align: int = 8,
+            dtype=None) -> SPC5Handle:
+    ch = F.to_chunked(mat, cb=cb, align=align)
+    return SPC5Handle(dev=R.device_put(ch, dtype=dtype), r=ch.r, c=ch.c,
+                      cb=ch.cb, vmax=ch.vmax, nrows=ch.nrows, ncols=ch.ncols,
+                      nnz=ch.nnz)
+
+
+def spmv(h: SPC5Handle, x: jax.Array, *, use_pallas: Optional[bool] = None,
+         double_buffer: bool = True, interpret: Optional[bool] = None
+         ) -> jax.Array:
+    """y = A @ x."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return R.spmv(h.dev, x, r=h.r, c=h.c, nrows=h.nrows, ncols=h.ncols)
+    if interpret is None:
+        interpret = not _on_tpu()
+    fn = spc5_spmv.spmv_pallas_db if double_buffer else spc5_spmv.spmv_pallas
+    return fn(h.dev.chunk_vbase, h.dev.chunk_col, h.dev.chunk_mask,
+              h.dev.chunk_voff, h.dev.chunk_row, h.dev.values, x,
+              r=h.r, c=h.c, cb=h.cb, vmax=h.vmax, nrows=h.nrows,
+              ncols=h.ncols, interpret=interpret)
+
+
+@dataclasses.dataclass(frozen=True)
+class SPC5TestHandle:
+    """beta(r,c)_test: multi-nnz blocks via the block kernel + singleton
+    blocks via a COO tail (the paper's dual-loop specialisation as a storage
+    split -- DESIGN.md §2)."""
+
+    multi: SPC5Handle
+    single_rows: jax.Array
+    single_cols: jax.Array
+    single_values: jax.Array
+
+
+def _test_flatten(h: SPC5TestHandle):
+    return ((h.multi, h.single_rows, h.single_cols, h.single_values),), None
+
+
+jax.tree_util.register_pytree_node(
+    SPC5TestHandle, _test_flatten,
+    lambda aux, ch: SPC5TestHandle(*ch[0]))
+
+
+def prepare_test(mat: F.SPC5Matrix, cb: int = 256, align: int = 8,
+                 dtype=None) -> SPC5TestHandle:
+    split = F.split_singletons(mat)
+    dt = dtype or mat.values.dtype
+    return SPC5TestHandle(
+        multi=prepare(split.multi, cb=cb, align=align, dtype=dtype),
+        single_rows=jnp.asarray(split.single_rows),
+        single_cols=jnp.asarray(split.single_cols),
+        single_values=jnp.asarray(split.single_values.astype(dt)),
+    )
+
+
+def spmv_test(h: SPC5TestHandle, x: jax.Array, **kw) -> jax.Array:
+    """y = A @ x over the beta_test split."""
+    y = spmv(h.multi, x, **kw)
+    if h.single_values.shape[0] == 0:
+        return y
+    return y + R.spmv_coo(h.single_rows, h.single_cols, h.single_values, x,
+                          nrows=h.multi.nrows)
+
+
+def spmm(h: SPC5Handle, x: jax.Array, *, use_pallas: Optional[bool] = None,
+         nvt: int = 128, interpret: Optional[bool] = None) -> jax.Array:
+    """Y = A @ X, X of shape (ncols, nvec)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return R.spmm(h.dev, x, r=h.r, c=h.c, nrows=h.nrows, ncols=h.ncols)
+    if interpret is None:
+        interpret = not _on_tpu()
+    return spc5_spmm.spmm_pallas(
+        h.dev.chunk_vbase, h.dev.chunk_col, h.dev.chunk_mask,
+        h.dev.chunk_voff, h.dev.chunk_row, h.dev.values, x,
+        r=h.r, c=h.c, cb=h.cb, vmax=h.vmax, nrows=h.nrows, ncols=h.ncols,
+        nvt=min(nvt, x.shape[1]), interpret=interpret)

@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: SPC5 block-sparse x dense multi-vector (SpMM).
+
+The paper names "multiplication by multiple vectors" as the natural extension
+of the block kernels; in the LM framework this is the SparseLinear matmul
+(sparse pruned weight @ dense activations). Grid is (nvec tiles, chunks):
+the value-window DMA pattern is identical to the SpMV kernel, x/y are tiled
+over the vector dimension in lane-aligned (…, nvt) tiles, and the per-block
+product unrolls the (r, c) geometry into VPU multiply-adds (tiny r*c GEMMs
+would waste the 128x128 MXU -- DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _spmm_kernel(vbase_ref, col_ref, mask_ref, voff_ref, row_ref, values_hbm,
+                 x_ref, y_ref, vwin, sem, *, r: int, c: int, cb: int,
+                 vmax: int, nrows: int, ncols: int):
+    i = pl.program_id(1)  # chunk index (inner, sequential)
+
+    @pl.when(i == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    base = vbase_ref[i]
+    copy = pltpu.make_async_copy(values_hbm.at[pl.ds(base, vmax)], vwin, sem)
+    copy.start()
+    copy.wait()
+
+    rc = r * c
+    mask = mask_ref[0]
+    voff = voff_ref[0]
+    col = col_ref[0]
+    row = row_ref[0]
+    k = jnp.arange(rc, dtype=jnp.int32)
+    bits = ((mask[:, None] >> k[None, :]) & 1).astype(jnp.int32)    # (cb, rc)
+    ranks = jnp.cumsum(bits, axis=1) - bits
+    vidx = jnp.clip(voff[:, None] + ranks, 0, vmax - 1)
+    vals = jnp.take(vwin[...], vidx, axis=0) * bits.astype(vwin.dtype)
+
+    # Gather the c columns of x once: (cb, c, nvt)
+    xcol = jnp.clip(col[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :],
+                    0, ncols - 1)
+    xg = jnp.take(x_ref[...], xcol, axis=0)                          # (cb,c,nvt)
+
+    y = y_ref[...]
+    for lr in range(r):                      # static unroll over block rows
+        acc = jnp.zeros((cb, y.shape[1]), dtype=y.dtype)
+        for lc in range(c):                  # static unroll over block cols
+            acc = acc + vals[:, lr * c + lc, None] * xg[:, lc, :]
+        yrow = jnp.clip(row + lr, 0, nrows - 1)
+        y = y.at[yrow].add(acc)
+    y_ref[...] = y
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("r", "c", "cb", "vmax", "nrows", "ncols", "nvt",
+                     "interpret"))
+def spmm_pallas(chunk_vbase, chunk_col, chunk_mask, chunk_voff, chunk_row,
+                values, x, *, r: int, c: int, cb: int, vmax: int, nrows: int,
+                ncols: int, nvt: int = 128, interpret: bool = False):
+    """Y = A @ X with A chunked beta(r,c) and X of shape (ncols, nvec)."""
+    nchunks = chunk_col.shape[0]
+    nvec = x.shape[1]
+    nvt = min(nvt, nvec)
+    if nvec % nvt:
+        raise ValueError(f"nvec={nvec} not divisible by tile {nvt}")
+    kernel = functools.partial(_spmm_kernel, r=r, c=c, cb=cb, vmax=vmax,
+                               nrows=nrows, ncols=ncols)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nvec // nvt, nchunks),
+        in_specs=[
+            pl.BlockSpec((1, cb), lambda j, i, vb: (i, 0)),
+            pl.BlockSpec((1, cb), lambda j, i, vb: (i, 0)),
+            pl.BlockSpec((1, cb), lambda j, i, vb: (i, 0)),
+            pl.BlockSpec((1, cb), lambda j, i, vb: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec((ncols, nvt), lambda j, i, vb: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((nrows, nvt), lambda j, i, vb: (0, j)),
+        scratch_shapes=[
+            pltpu.VMEM((vmax,), values.dtype),
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nrows, nvec), values.dtype),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+    )(chunk_vbase, chunk_col, chunk_mask.astype(jnp.int32), chunk_voff,
+      chunk_row, values, x)

@@ -1,0 +1,169 @@
+"""Pallas TPU kernel: SPC5 mask-expand SpMV (beta(r,c), no zero padding).
+
+TPU adaptation of the paper's AVX-512 ``vexpandpd`` kernel (DESIGN.md §2):
+
+  * the packed ``values`` array lives in HBM (``pl.ANY``) and each grid step
+    DMAs exactly one chunk's 8-value-aligned window into a VMEM scratch --
+    HBM traffic is the packed bytes, the paper's central property;
+  * the expand is ``rank = cumsum(mask_bits) - mask_bits`` + a VMEM gather,
+    replacing the in-register expand (identical semantics, zero HBM cost);
+  * per grid step a chunk of ``cb`` blocks is decoded with (8,128)-friendly
+    vector ops; ``x`` is VMEM-resident (the kernel is row-interval local, the
+    distributed layer shards rows so each device's x slice fits VMEM);
+  * y is accumulated across sequential grid steps in VMEM and written once
+    (the paper's "merge without synchronization" -- rows are owned uniquely).
+
+Scalar prefetch carries the per-chunk value-window offsets, the analogue of
+the asm kernel's running value cursor (%r12 in the paper's code 1).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _decode_chunk(mask, voff, col, vwin, x, *, r: int, c: int, ncols: int,
+                  vmax: int):
+    """Mask-expand one chunk: returns contrib (cb, r*c) and local row offsets."""
+    rc = r * c
+    k = jnp.arange(rc, dtype=jnp.int32)
+    bits = ((mask[:, None] >> k[None, :]) & 1).astype(jnp.int32)   # (cb, rc)
+    ranks = jnp.cumsum(bits, axis=1) - bits
+    vidx = jnp.clip(voff[:, None] + ranks, 0, vmax - 1)
+    vals = jnp.take(vwin, vidx, axis=0) * bits.astype(vwin.dtype)
+    xcol = jnp.clip(col[:, None] + (k % c)[None, :], 0, ncols - 1)
+    xg = jnp.take(x, xcol, axis=0)
+    return vals * xg
+
+
+def _spmv_kernel(vbase_ref, col_ref, mask_ref, voff_ref, row_ref, values_hbm,
+                 x_ref, y_ref, vwin, sem, *, r: int, c: int, cb: int,
+                 vmax: int, nrows: int, ncols: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    # Stream this chunk's packed value window HBM -> VMEM (dynamic offset).
+    base = vbase_ref[i]
+    copy = pltpu.make_async_copy(values_hbm.at[pl.ds(base, vmax)], vwin, sem)
+    copy.start()
+    copy.wait()
+
+    mask = mask_ref[0]
+    contrib = _decode_chunk(mask, voff_ref[0], col_ref[0], vwin[...],
+                            x_ref[...], r=r, c=c, ncols=ncols, vmax=vmax)
+    k = jnp.arange(r * c, dtype=jnp.int32)
+    yrow = jnp.clip(row_ref[0][:, None] + (k // c)[None, :], 0, nrows - 1)
+    y = y_ref[...]
+    y_ref[...] = y.at[yrow.reshape(-1)].add(contrib.reshape(-1))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("r", "c", "cb", "vmax", "nrows", "ncols", "interpret"))
+def spmv_pallas(chunk_vbase, chunk_col, chunk_mask, chunk_voff, chunk_row,
+                values, x, *, r: int, c: int, cb: int, vmax: int, nrows: int,
+                ncols: int, interpret: bool = False) -> jax.Array:
+    nchunks = chunk_col.shape[0]
+    kernel = functools.partial(_spmv_kernel, r=r, c=c, cb=cb, vmax=vmax,
+                               nrows=nrows, ncols=ncols)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nchunks,),
+        in_specs=[
+            pl.BlockSpec((1, cb), lambda i, vb: (i, 0)),   # chunk_col
+            pl.BlockSpec((1, cb), lambda i, vb: (i, 0)),   # chunk_mask
+            pl.BlockSpec((1, cb), lambda i, vb: (i, 0)),   # chunk_voff
+            pl.BlockSpec((1, cb), lambda i, vb: (i, 0)),   # chunk_row
+            pl.BlockSpec(memory_space=pl.ANY),             # values (HBM)
+            pl.BlockSpec((ncols,), lambda i, vb: (0,)),    # x (VMEM, full)
+        ],
+        out_specs=pl.BlockSpec((nrows,), lambda i, vb: (0,)),
+        scratch_shapes=[
+            pltpu.VMEM((vmax,), values.dtype),
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nrows,), values.dtype),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+    )(chunk_vbase, chunk_col, chunk_mask.astype(jnp.int32), chunk_voff,
+      chunk_row, values, x)
+
+
+def _spmv_db_kernel(vbase_ref, col_ref, mask_ref, voff_ref, row_ref,
+                    values_hbm, x_ref, y_ref, vwin, sem, *, r: int, c: int,
+                    cb: int, vmax: int, nrows: int, ncols: int, nchunks: int):
+    """Double-buffered variant: overlap chunk i+1's value DMA with chunk i's
+    compute (the Pallas analogue of the asm kernel's software pipelining)."""
+    i = pl.program_id(0)
+    slot = jax.lax.rem(i, jnp.int32(2))
+
+    @pl.when(i == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+        pltpu.make_async_copy(values_hbm.at[pl.ds(vbase_ref[0], vmax)],
+                              vwin.at[0], sem.at[0]).start()
+
+    @pl.when(i + 1 < nchunks)
+    def _prefetch_next():
+        nxt = jax.lax.rem(i + jnp.int32(1), jnp.int32(2))
+        pltpu.make_async_copy(values_hbm.at[pl.ds(vbase_ref[i + 1], vmax)],
+                              vwin.at[nxt], sem.at[nxt]).start()
+
+    pltpu.make_async_copy(values_hbm.at[pl.ds(vbase_ref[i], vmax)],
+                          vwin.at[slot], sem.at[slot]).wait()
+
+    contrib = _decode_chunk(mask_ref[0], voff_ref[0], col_ref[0], vwin[slot],
+                            x_ref[...], r=r, c=c, ncols=ncols, vmax=vmax)
+    k = jnp.arange(r * c, dtype=jnp.int32)
+    yrow = jnp.clip(row_ref[0][:, None] + (k // c)[None, :], 0, nrows - 1)
+    y = y_ref[...]
+    y_ref[...] = y.at[yrow.reshape(-1)].add(contrib.reshape(-1))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("r", "c", "cb", "vmax", "nrows", "ncols", "interpret"))
+def spmv_pallas_db(chunk_vbase, chunk_col, chunk_mask, chunk_voff, chunk_row,
+                   values, x, *, r: int, c: int, cb: int, vmax: int,
+                   nrows: int, ncols: int, interpret: bool = False):
+    nchunks = chunk_col.shape[0]
+    kernel = functools.partial(_spmv_db_kernel, r=r, c=c, cb=cb, vmax=vmax,
+                               nrows=nrows, ncols=ncols, nchunks=nchunks)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nchunks,),
+        in_specs=[
+            pl.BlockSpec((1, cb), lambda i, vb: (i, 0)),
+            pl.BlockSpec((1, cb), lambda i, vb: (i, 0)),
+            pl.BlockSpec((1, cb), lambda i, vb: (i, 0)),
+            pl.BlockSpec((1, cb), lambda i, vb: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec((ncols,), lambda i, vb: (0,)),
+        ],
+        out_specs=pl.BlockSpec((nrows,), lambda i, vb: (0,)),
+        scratch_shapes=[
+            pltpu.VMEM((2, vmax), values.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nrows,), values.dtype),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+    )(chunk_vbase, chunk_col, chunk_mask.astype(jnp.int32), chunk_voff,
+      chunk_row, values, x)

@@ -1,0 +1,311 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+# production meshes with ShapeDtypeStruct inputs (no allocation), print
+# memory_analysis()/cost_analysis(), and dump per-cell JSON (including the
+# loop-aware HLO-derived roofline numerators) for benchmarks/roofline.py.
+#
+# The two lines above MUST run before any other import so the CPU platform
+# exposes 512 placeholder devices before jax locks the backend.
+
+import argparse
+import dataclasses
+import functools
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.hlo import analyze_hlo
+from repro.configs import ARCHS, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as MD
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+from repro.optim import AdamWConfig, adamw_init
+from repro.sharding.rules import make_rules
+from repro.train.step import (make_prefill_step, make_serve_step,
+                              make_train_step)
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def cell_skip_reason(cfg: ModelConfig, shape: ShapeConfig):
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return ("full-attention arch at 524k context (quadratic); skipped per "
+                "assignment rules, see DESIGN.md §5")
+    return None
+
+
+def _sds(tree, shardings):
+    return jax.tree.map(
+        lambda s, ns: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=ns),
+        tree, shardings)
+
+
+def _bf16(tree):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape,
+            jnp.bfloat16 if jnp.issubdtype(s.dtype, jnp.floating) else s.dtype),
+        tree)
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Assignment formula: 6*N*D (6*N_active*D for MoE), D = tokens/step.
+    Decode: forward-only on one token per sequence + KV-cache attention."""
+    n = cfg.n_active_params() if cfg.n_experts else cfg.n_params()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    # decode: one token per sequence; attention reads the whole cache
+    attn_layers = sum(1 for i in range(cfg.n_layers)
+                      if cfg.layer_pattern[i % len(cfg.layer_pattern)]
+                      in ("attn", "lattn"))
+    hd = cfg.resolved_head_dim if cfg.n_heads else 0
+    ctx = shape.seq_len
+    attn = 4.0 * shape.global_batch * attn_layers * cfg.n_heads * hd * min(
+        ctx, max(cfg.window, ctx) if cfg.window == 0 else cfg.window)
+    return 2.0 * n * shape.global_batch + attn
+
+
+def auto_accum(cfg: ModelConfig) -> int:
+    n = cfg.n_params()
+    if cfg.n_experts:
+        return 4     # MoE dispatch buffers are token-linear; keep them small
+    if n > 2e10:
+        return 4
+    if n > 5e9:
+        return 2
+    return 1
+
+
+def auto_kv(cfg: ModelConfig, shape: ShapeConfig, n_devices: int) -> str:
+    """int8 KV quantisation when the bf16 cache would exceed ~4 GiB/device
+    (v5e HBM budget next to TP-resident weights)."""
+    attn_layers = sum(1 for i in range(cfg.n_layers)
+                      if cfg.layer_pattern[i % len(cfg.layer_pattern)]
+                      in ("attn", "lattn"))
+    if cfg.is_encdec:
+        attn_layers = 2 * cfg.n_layers
+    hd = cfg.resolved_head_dim if cfg.n_heads else 0
+    bytes_bf16 = (2 * attn_layers * shape.global_batch * shape.seq_len
+                  * cfg.kv_heads * hd * 2) / n_devices
+    return "int8" if bytes_bf16 > 4 * 2**30 else "bfloat16"
+
+
+def auto_fsdp(cfg: ModelConfig) -> bool:
+    """Baseline: FSDP everywhere (uniform strategy; measured 12.5 GiB/dev on
+    deepseek-67b with accum=4). The ZeRO-1+cast_once alternative stays
+    available via --no-fsdp for the §Perf hillclimb."""
+    return True
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+               remat: str = "nothing", kv_dtype: str = "bfloat16",
+               fsdp: bool = True, seq_shard: bool = True,
+               accum: int = 0, tp_enabled: bool = True):
+    """Build + lower the step for one cell. Returns (lowered, meta)."""
+    if accum == 0:
+        accum = auto_accum(cfg)
+    if shape.kind == "train":
+        fsdp = fsdp and auto_fsdp(cfg)
+        rules = make_rules(mesh, fsdp=fsdp, seq_shard=seq_shard,
+                           tp_enabled=tp_enabled)
+        params_s = jax.eval_shape(
+            lambda: MD.init_params(cfg, jax.random.PRNGKey(0)))
+        mvshard = rules.opt_shardings(params_s)
+        # non-FSDP mode: masters live fully sharded (ZeRO); bf16 compute copy
+        # is gathered once per step inside the train step (cast_once)
+        pshard = rules.param_shardings(params_s) if fsdp else mvshard
+        opt_s = jax.eval_shape(adamw_init, params_s)
+        oshard = {"m": mvshard, "v": mvshard,
+                  "step": rules.ns(jax.sharding.PartitionSpec())}
+        batch_s = MD.input_specs(cfg, shape, dtype=cfg.dtype)
+        bshard = {k: rules.input_sharding(v.shape, k)
+                  for k, v in batch_s.items()}
+        step = make_train_step(cfg, AdamWConfig(), rules, remat,
+                               accum_steps=accum, cast_once=not fsdp)
+        jitted = jax.jit(step, donate_argnums=(0, 1))
+        args = (_sds(params_s, pshard), _sds(opt_s, oshard),
+                _sds(batch_s, bshard))
+    elif shape.kind == "prefill":
+        rules = make_rules(mesh, fsdp=False, seq_shard=seq_shard,
+                           tp_enabled=tp_enabled)
+        params_s = _bf16(jax.eval_shape(
+            lambda: MD.init_params(cfg, jax.random.PRNGKey(0))))
+        pshard = rules.param_shardings(params_s)
+        batch_s = MD.input_specs(cfg, shape, dtype=cfg.dtype)
+        batch_s.pop("labels", None)
+        bshard = {k: rules.input_sharding(v.shape, k)
+                  for k, v in batch_s.items()}
+        step = make_prefill_step(cfg, rules)
+        jitted = jax.jit(step)
+        args = (_sds(params_s, pshard), _sds(batch_s, bshard))
+    else:  # decode
+        rules = make_rules(mesh, fsdp=False, seq_shard=False,
+                           tp_enabled=tp_enabled)
+        params_s = _bf16(jax.eval_shape(
+            lambda: MD.init_params(cfg, jax.random.PRNGKey(0))))
+        pshard = rules.param_shardings(params_s)
+        if kv_dtype == "auto":
+            kv_dtype = auto_kv(cfg, shape, len(mesh.devices.flat))
+        cache_s = MD.cache_specs(cfg, shape, kv_dtype=kv_dtype)
+        cshard = rules.cache_shardings(cache_s)
+        dec = MD.decode_input_specs(cfg, shape)
+        step = make_serve_step(cfg, rules)
+        jitted = jax.jit(step, donate_argnums=(1,))
+        args = (
+            _sds(params_s, pshard), _sds(cache_s, cshard),
+            jax.ShapeDtypeStruct(dec["token"].shape, dec["token"].dtype,
+                                 sharding=rules.input_sharding(
+                                     dec["token"].shape, "token")),
+            jax.ShapeDtypeStruct((), jnp.int32,
+                                 sharding=rules.ns(
+                                     jax.sharding.PartitionSpec())),
+        )
+    t0 = time.time()
+    lowered = jitted.lower(*args)
+    return lowered, {"lower_s": time.time() - t0}
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             remat: str = "nothing", kv_dtype: str = "auto",
+             fsdp: bool = True, seq_shard: bool = True, accum: int = 0,
+             tp_enabled: bool = True, ssd_bf16: bool = False,
+             out_dir: str = OUT_DIR, tag: str = "", verbose: bool = True):
+    cfg = get_config(arch)
+    if ssd_bf16:
+        cfg = dataclasses.replace(cfg, ssd_dtype="bfloat16")
+    shape = SHAPES[shape_name]
+    if kv_dtype == "auto":
+        kv_dtype = auto_kv(cfg, shape, 512 if multi_pod else 256)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind, "remat": remat, "kv_dtype": kv_dtype,
+        "fsdp": fsdp, "seq_shard": seq_shard, "tag": tag,
+        "accum": accum or auto_accum(cfg), "tp_enabled": tp_enabled,
+        "n_devices": 512 if multi_pod else 256,
+        "n_params": cfg.n_params(),
+        "n_active_params": cfg.n_active_params(),
+        "model_flops": model_flops(cfg, shape),
+    }
+    skip = cell_skip_reason(cfg, shape)
+    if skip:
+        rec["skipped"] = skip
+        _write(rec, out_dir, arch, shape_name, mesh_name, tag)
+        if verbose:
+            print(f"[dryrun] SKIP {arch} x {shape_name} x {mesh_name}: {skip}")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    lowered, meta = lower_cell(cfg, shape, mesh, remat=remat,
+                               kv_dtype=kv_dtype, fsdp=fsdp,
+                               seq_shard=seq_shard, accum=accum,
+                               tp_enabled=tp_enabled)
+    rec.update(meta)
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes": int(mem.argument_size_in_bytes),
+        "output_bytes": int(mem.output_size_in_bytes),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "alias_bytes": int(mem.alias_size_in_bytes),
+        "peak_bytes_per_device": int(mem.argument_size_in_bytes
+                                     + mem.output_size_in_bytes
+                                     + mem.temp_size_in_bytes
+                                     - mem.alias_size_in_bytes),
+    }
+    ca = compiled.cost_analysis()
+    rec["xla_cost_analysis"] = {k: float(v) for k, v in ca.items()
+                                if isinstance(v, (int, float))}
+
+    hlo_cost = analyze_hlo(compiled.as_text())
+    rec["hlo"] = {
+        "flops_per_device": hlo_cost.flops,
+        "hbm_bytes_per_device": hlo_cost.hbm_bytes,
+        "coll_bytes_per_device": hlo_cost.coll_bytes,
+        "coll_by_kind": hlo_cost.coll_by_kind,
+        "coll_count": hlo_cost.coll_count,
+    }
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: "
+              f"compile {rec['compile_s']:.1f}s, "
+              f"peak/dev {rec['memory']['peak_bytes_per_device']/2**30:.2f} GiB, "
+              f"flops/dev {hlo_cost.flops:.3e}, "
+              f"coll/dev {hlo_cost.coll_bytes/2**20:.1f} MiB")
+        print("  memory_analysis:", mem)
+        print("  cost_analysis flops:", ca.get("flops"),
+              "bytes:", ca.get("bytes accessed"))
+    _write(rec, out_dir, arch, shape_name, mesh_name, tag)
+    return rec
+
+
+def _write(rec, out_dir, arch, shape_name, mesh_name, tag=""):
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    path = os.path.join(out_dir,
+                        f"{arch}__{shape_name}__{mesh_name}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all",
+                    help=f"one of {ARCHS} or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help=f"one of {tuple(SHAPES)} or 'all'")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--remat", default="nothing",
+                    choices=["nothing", "dots", "everything"])
+    ap.add_argument("--kv-dtype", default="auto",
+                    choices=["auto", "bfloat16", "int8"])
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--no-seq-shard", action="store_true")
+    ap.add_argument("--dp-only", action="store_true",
+                    help="fold the model axis into data (no TP)")
+    ap.add_argument("--ssd-bf16", action="store_true",
+                    help="bf16 intra-chunk SSD math (ssm archs)")
+    ap.add_argument("--accum", type=int, default=0,
+                    help="microbatch count (0 = auto)")
+    ap.add_argument("--out-dir", default=OUT_DIR)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args(argv)
+
+    archs = list(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    run_cell(arch, shape, multi_pod=mp, remat=args.remat,
+                             kv_dtype=args.kv_dtype, fsdp=not args.no_fsdp,
+                             seq_shard=not args.no_seq_shard,
+                             accum=args.accum,
+                             tp_enabled=not args.dp_only,
+                             ssd_bf16=args.ssd_bf16,
+                             out_dir=args.out_dir, tag=args.tag)
+                except Exception as e:  # noqa: BLE001 -- report all cells
+                    failures.append((arch, shape, mp, repr(e)[:500]))
+                    print(f"[dryrun] FAIL {arch} x {shape} multi_pod={mp}: "
+                          f"{e!r}", file=sys.stderr)
+    if failures:
+        print(f"[dryrun] {len(failures)} failures", file=sys.stderr)
+        sys.exit(1)
+    print("[dryrun] all requested cells compiled")
+
+
+if __name__ == "__main__":
+    main()

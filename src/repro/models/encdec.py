@@ -1,0 +1,170 @@
+"""Encoder-decoder backbone (seamless-m4t family).
+
+Encoder consumes precomputed frame embeddings (modality frontend is a stub
+per the assignment); decoder is a causal LM with cross-attention into the
+encoder output. Both stacks are scanned over layers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .config import ModelConfig
+from .transformer import chunked_ce_loss
+from repro.sharding.rules import constrain
+
+Params = Dict[str, Any]
+
+
+def _init_enc_layer(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 2)
+    d = cfg.d_model
+    return {"norm": L.zinit((d,)), "attn": L.init_attn(ks[0], cfg),
+            "norm2": L.zinit((d,)), "mlp": L.init_mlp(ks[1], cfg)}
+
+
+def _init_dec_layer(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {"norm": L.zinit((d,)), "attn": L.init_attn(ks[0], cfg),
+            "norm_x": L.zinit((d,)), "xattn": L.init_attn(ks[1], cfg),
+            "norm2": L.zinit((d,)), "mlp": L.init_mlp(ks[2], cfg)}
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    enc_keys = jax.random.split(ks[0], cfg.enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    params: Params = {
+        "embed": L.ninit(ks[2], (cfg.vocab_padded, d), scale=1.0),
+        "enc": jax.vmap(functools.partial(_init_enc_layer, cfg))(enc_keys),
+        "dec": jax.vmap(functools.partial(_init_dec_layer, cfg))(dec_keys),
+        "enc_norm": L.zinit((d,)),
+        "final_norm": L.zinit((d,)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.ninit(ks[3], (d, cfg.vocab_padded))
+    return params
+
+
+def encode(params: Params, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """frames: (B, S_enc, D) precomputed embeddings -> encoder output."""
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    x = constrain(x, "act")
+
+    def layer(x, p):
+        h = L.rmsnorm(x, p["norm"], cfg.norm_eps)
+        x = x + L.attention_fwd(p["attn"], h, cfg, causal=False)
+        h2 = L.rmsnorm(x, p["norm2"], cfg.norm_eps)
+        x = x + L.mlp_fwd(p["mlp"], h2, cfg)
+        return constrain(x, "act"), None
+
+    x, _ = jax.lax.scan(jax.checkpoint(layer), x, params["enc"])
+    return L.rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def decode_train(params: Params, enc_out: jax.Array, tokens: jax.Array,
+                 cfg: ModelConfig) -> jax.Array:
+    """Teacher-forced decoder forward -> hidden states (B, S_dec, D)."""
+    x = params["embed"].astype(jnp.dtype(cfg.dtype))[tokens]
+    x = constrain(x, "act")
+
+    def layer(x, p):
+        h = L.rmsnorm(x, p["norm"], cfg.norm_eps)
+        x = x + L.attention_fwd(p["attn"], h, cfg, causal=True)
+        hx = L.rmsnorm(x, p["norm_x"], cfg.norm_eps)
+        kv = (L._split_heads(
+                  enc_out @ p["xattn"]["wk"].astype(x.dtype), cfg.kv_heads,
+                  cfg.resolved_head_dim),
+              L._split_heads(
+                  enc_out @ p["xattn"]["wv"].astype(x.dtype), cfg.kv_heads,
+                  cfg.resolved_head_dim))
+        x = x + L.attention_fwd(p["xattn"], hx, cfg, causal=False,
+                                kv_override=kv, rope=False)
+        h2 = L.rmsnorm(x, p["norm2"], cfg.norm_eps)
+        x = x + L.mlp_fwd(p["mlp"], h2, cfg)
+        return constrain(x, "act"), None
+
+    x, _ = jax.lax.scan(jax.checkpoint(layer), x, params["dec"])
+    return x
+
+
+def forward_loss(params: Params, batch: Dict[str, jax.Array],
+                 cfg: ModelConfig, remat_policy: str = "nothing"
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    enc_out = encode(params, batch["frames"], cfg)
+    x = decode_train(params, enc_out, batch["tokens"], cfg)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    loss = chunked_ce_loss(x, head, batch["labels"], cfg)
+    return loss, {"ce_loss": loss}
+
+
+# ---------------------------------------------------------------------------
+# decode (serving)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, enc_len: int,
+               kv_dtype: str = "bfloat16") -> Params:
+    hd = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    Ld = cfg.n_layers
+    return {
+        "self_k": jnp.zeros((Ld, batch, max_seq, cfg.kv_heads, hd), dt),
+        "self_v": jnp.zeros((Ld, batch, max_seq, cfg.kv_heads, hd), dt),
+        # cross-attention K/V precomputed once from the encoder output
+        "cross_k": jnp.zeros((Ld, batch, enc_len, cfg.kv_heads, hd), dt),
+        "cross_v": jnp.zeros((Ld, batch, enc_len, cfg.kv_heads, hd), dt),
+    }
+
+
+def build_cross_cache(params: Params, enc_out: jax.Array, cfg: ModelConfig,
+                      cache: Params) -> Params:
+    hd = cfg.resolved_head_dim
+
+    def one(p):
+        k = L._split_heads(enc_out @ p["xattn"]["wk"].astype(enc_out.dtype),
+                           cfg.kv_heads, hd)
+        v = L._split_heads(enc_out @ p["xattn"]["wv"].astype(enc_out.dtype),
+                           cfg.kv_heads, hd)
+        return k, v
+
+    ks, vs = jax.vmap(one)(params["dec"])
+    return dict(cache, cross_k=ks, cross_v=vs)
+
+
+def decode_step(params: Params, cache: Params, token: jax.Array,
+                pos: jax.Array, cfg: ModelConfig
+                ) -> Tuple[jax.Array, Params]:
+    dt = jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    x = params["embed"].astype(dt)[token]
+    x = constrain(x, "act_decode")
+
+    def layer(x, inp):
+        p, sk, sv, ck, cv = inp
+        h = L.rmsnorm(x, p["norm"], cfg.norm_eps)
+        o, new_c = L.attention_decode(p["attn"], h, {"k": sk, "v": sv},
+                                      pos, cfg)
+        x = x + o
+        hx = L.rmsnorm(x, p["norm_x"], cfg.norm_eps)
+        x = x + L.attention_fwd(p["xattn"], hx, cfg, causal=False,
+                                kv_override=(ck.astype(dt), cv.astype(dt)),
+                                rope=False)
+        h2 = L.rmsnorm(x, p["norm2"], cfg.norm_eps)
+        x = x + L.mlp_fwd(p["mlp"], h2, cfg)
+        return constrain(x, "act_decode"), (new_c["k"], new_c["v"])
+
+    x, (nk, nv) = jax.lax.scan(
+        layer, x, (params["dec"], cache["self_k"], cache["self_v"],
+                   cache["cross_k"], cache["cross_v"]))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x[:, 0] @ head.astype(dt)).astype(jnp.float32)
+    new_cache = dict(cache, self_k=nk, self_v=nv)
+    return logits[:, :cfg.vocab], new_cache

@@ -1,0 +1,327 @@
+"""Shared neural layers: norms, RoPE, attention (train/prefill/decode), MLP.
+
+Conventions:
+  * params are stored float32 (master); compute casts to cfg.dtype;
+  * softmax/norm statistics accumulate in float32;
+  * attention keeps GQA groups explicit -- no kv-head repeat materialisation;
+  * sequence length <= PLAIN_ATTN_MAX uses plain masked attention (cheap HLO,
+    remat-friendly for training); longer sequences use a scan-based
+    flash attention (online softmax, bounded VMEM/HBM footprint);
+  * decode uses a dedicated one-token path over the KV cache, with optional
+    int8 cache quantisation and ring-buffer windows for local attention.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+PLAIN_ATTN_MAX = 1_024   # use plain attention at/below this seq len
+FLASH_QB = 1_024
+FLASH_KVB = 1_024
+
+
+# ----------------------------------------------------------------------------
+# init helpers
+# ----------------------------------------------------------------------------
+
+def ninit(key, shape, scale: Optional[float] = None) -> jax.Array:
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale)
+
+
+def zinit(shape) -> jax.Array:
+    return jnp.zeros(shape, dtype=jnp.float32)
+
+
+# ----------------------------------------------------------------------------
+# norms / rope
+# ----------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope_freqs(hd: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, hd, 2, dtype=np.float32) / hd))
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D) or (..., S, D); pos broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))               # (hd/2,)
+    ang = pos[..., None].astype(jnp.float32) * freqs         # (..., S, hd/2)
+    if x.ndim == ang.ndim + 1:                               # head dim present
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# attention
+# ----------------------------------------------------------------------------
+
+def init_attn(key, cfg: ModelConfig) -> Dict[str, jax.Array]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": ninit(ks[0], (d, cfg.n_heads * hd)),
+        "wk": ninit(ks[1], (d, cfg.kv_heads * hd)),
+        "wv": ninit(ks[2], (d, cfg.kv_heads * hd)),
+        "wo": ninit(ks[3], (cfg.n_heads * hd, d), scale=(cfg.n_heads * hd) ** -0.5),
+    }
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(*x.shape[:-1], n, hd)
+
+
+def _mask_bias(qpos, kpos, causal: bool, window: int) -> jax.Array:
+    """(…, Sq, Sk) additive mask in f32."""
+    ok = jnp.ones((qpos.shape[-1], kpos.shape[-1]), dtype=bool)
+    if causal:
+        ok &= kpos[None, :] <= qpos[:, None]
+    if window:
+        ok &= kpos[None, :] > qpos[:, None] - window
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def plain_attention(q, k, v, *, causal: bool, window: int = 0,
+                    q0: int = 0) -> jax.Array:
+    """q, k, v: (B, S, H, D) (KV already expanded to H heads so the head dim
+    shards n_model-ways under GSPMD). Returns (B, Sq, H, D)."""
+    hd = q.shape[-1]
+    s = jnp.einsum("bqhd,bshd->bhqs", q, k,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    qpos = jnp.arange(q.shape[1]) + q0
+    kpos = jnp.arange(k.shape[1])
+    s = s + _mask_bias(qpos, kpos, causal, window)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqs,bshd->bqhd", p, v)
+
+
+def flash_attention(q, k, v, *, causal: bool, window: int = 0,
+                    qb: int = FLASH_QB, kvb: int = FLASH_KVB) -> jax.Array:
+    """Scan-based flash attention; same shapes as plain_attention.
+
+    Outer scan over q blocks (remat'd), inner scan over kv blocks with an
+    online-softmax carry, so peak memory is O(qb*kvb) logits instead of S^2.
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    qb = min(qb, Sq)
+    kvb = min(kvb, Sk)
+    assert Sq % qb == 0 and Sk % kvb == 0, (Sq, qb, Sk, kvb)
+    nq, nk = Sq // qb, Sk // kvb
+    qs = jnp.moveaxis(q.reshape(B, nq, qb, H, D), 1, 0)      # (nq,B,qb,H,D)
+    ks = jnp.moveaxis(k.reshape(B, nk, kvb, H, D), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, nk, kvb, H, D), 1, 0)
+
+    def q_block(carry, inp):
+        qi, qblk = inp                                        # (B,qb,H,D)
+
+        def kv_step(st, kv):
+            m, l, acc = st
+            kj, kblk, vblk = kv
+            s = jnp.einsum("bqhd,bshd->bhqs", qblk, kblk,
+                           preferred_element_type=jnp.float32) * (D ** -0.5)
+            qpos = qi * qb + jnp.arange(qb)
+            kpos = kj * kvb + jnp.arange(kvb)
+            ok = jnp.ones((qb, kvb), dtype=bool)
+            if causal:
+                ok &= kpos[None, :] <= qpos[:, None]
+            if window:
+                ok &= kpos[None, :] > qpos[:, None] - window
+            s = jnp.where(ok, s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            # guard fully-masked rows
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(ok, p, 0.0)
+            alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l_new = l * alpha + p.sum(axis=-1)
+            pv = jnp.einsum("bhqs,bshd->bhqd", p.astype(vblk.dtype), vblk,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * alpha[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, qb), -jnp.inf, dtype=jnp.float32)
+        l0 = jnp.zeros((B, H, qb), dtype=jnp.float32)
+        a0 = jnp.zeros((B, H, qb, D), dtype=jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), ks, vs))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        out = jnp.moveaxis(out, 2, 1)                         # (B,qb,H,D)
+        return carry, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(jax.checkpoint(q_block), 0,
+                           (jnp.arange(nq), qs))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, H, D)
+    return out
+
+
+def attention_fwd(params, x, cfg: ModelConfig, *, causal: bool = True,
+                  window: int = 0, kv_override: Optional[Tuple] = None,
+                  rope: bool = True) -> jax.Array:
+    """Full-sequence attention (train/prefill). x: (B, S, D).
+
+    KV heads are broadcast to the full H before the score einsums so the head
+    dimension shards model-parallel regardless of kv_heads (GQA/MQA); the
+    broadcast is a transient (remat'd inside the layer scan), the stored
+    weights/caches stay at kv_heads.
+    """
+    from repro.sharding.rules import constrain
+    hd = cfg.resolved_head_dim
+    K, H = cfg.kv_heads, cfg.n_heads
+    G = H // K
+    dt = x.dtype
+    q = _split_heads(x @ params["wq"].astype(dt), H, hd)
+    if kv_override is None:
+        k = _split_heads(x @ params["wk"].astype(dt), K, hd)
+        v = _split_heads(x @ params["wv"].astype(dt), K, hd)
+    else:
+        k, v = kv_override
+    if rope and kv_override is None:
+        pos = jnp.arange(x.shape[1])[None, :]
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    elif rope:
+        pos = jnp.arange(x.shape[1])[None, :]
+        q = apply_rope(q, pos, cfg.rope_theta)
+    if G > 1:
+        # replicate the small kv tensors over tp BEFORE the head broadcast so
+        # the expand is a local slice (avoids SPMD "involuntary full remat")
+        k = constrain(k, "kv_small")
+        v = constrain(v, "kv_small")
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    q = constrain(q, "qkv")
+    k = constrain(k, "qkv")
+    v = constrain(v, "qkv")
+    fn = plain_attention if x.shape[1] <= PLAIN_ATTN_MAX else flash_attention
+    o = fn(q, k, v, causal=causal, window=window)
+    o = o.reshape(*o.shape[:2], H * hd)
+    return o @ params["wo"].astype(dt)
+
+
+def attention_prefill_kv(params, x, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Compute the (roped) K/V cache for a prompt. Returns (k, v)."""
+    hd = cfg.resolved_head_dim
+    dt = x.dtype
+    k = _split_heads(x @ params["wk"].astype(dt), cfg.kv_heads, hd)
+    v = _split_heads(x @ params["wv"].astype(dt), cfg.kv_heads, hd)
+    pos = jnp.arange(x.shape[1])[None, :]
+    k = apply_rope(k, pos, cfg.rope_theta)
+    return k, v
+
+
+def quantize_kv(k: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-(token, head) symmetric int8 quantisation of a cache tensor."""
+    scale = jnp.max(jnp.abs(k), axis=-1, keepdims=True) / 127.0 + 1e-8
+    return jnp.round(k / scale).astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def dequantize_kv(kq: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (kq.astype(jnp.float32) * scale).astype(dtype)
+
+
+def attention_decode(params, x, cache: Dict[str, jax.Array], pos,
+                     cfg: ModelConfig, *, window: int = 0) -> Tuple[jax.Array, Dict]:
+    """One-token decode. x: (B, 1, D); cache: {k, v[, k_scale, v_scale]} with
+    k/v of shape (B, Scache, K, hd). ``pos`` is the current position (scalar).
+
+    For windowed layers the cache is a ring buffer of length W = min(S, window)
+    indexed by pos % W; absolute positions are reconstructed for masking.
+    """
+    hd = cfg.resolved_head_dim
+    K, H = cfg.kv_heads, cfg.n_heads
+    G = H // K
+    dt = x.dtype
+    q = _split_heads(x @ params["wq"].astype(dt), H, hd)
+    k_new = _split_heads(x @ params["wk"].astype(dt), K, hd)
+    v_new = _split_heads(x @ params["wv"].astype(dt), K, hd)
+    posb = jnp.full((x.shape[0], 1), pos)
+    q = apply_rope(q, posb, cfg.rope_theta)
+    k_new = apply_rope(k_new, posb, cfg.rope_theta)
+
+    S = cache["k"].shape[1]
+    slot = jnp.where(window > 0, pos % jnp.asarray(max(window, 1)), pos)
+    slot = jnp.minimum(slot, S - 1)
+
+    # Masked (one-hot) update instead of dynamic_update_slice: a DUS at a
+    # traced index on the SHARDED cache-seq dim forces GSPMD to fully
+    # rematerialise the cache (measured 43 GiB/dev on deepseek decode);
+    # the masked formulation is elementwise and stays sharded.
+    sel = (jnp.arange(S) == slot)[None, :, None, None]
+
+    def put(old, new):
+        return jnp.where(sel, new.astype(old.dtype), old)
+
+    int8 = "k_scale" in cache
+    if int8:
+        kq, ksc = quantize_kv(k_new)
+        vq, vsc = quantize_kv(v_new)
+        cache = dict(cache)
+        cache["k"] = put(cache["k"], kq)
+        cache["v"] = put(cache["v"], vq)
+        cache["k_scale"] = put(cache["k_scale"], ksc)
+        cache["v_scale"] = put(cache["v_scale"], vsc)
+        k = dequantize_kv(cache["k"], cache["k_scale"], dt)
+        v = dequantize_kv(cache["v"], cache["v_scale"], dt)
+    else:
+        cache = dict(cache)
+        cache["k"] = put(cache["k"], k_new)
+        cache["v"] = put(cache["v"], v_new)
+        k, v = cache["k"].astype(dt), cache["v"].astype(dt)
+
+    qh = q.reshape(q.shape[0], 1, K, G, hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qh, k,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    idx = jnp.arange(S)
+    if window > 0:
+        # absolute position stored in ring slot i
+        apos = pos - jnp.mod(pos - idx, jnp.asarray(max(window, 1)))
+        ok = (apos >= 0) & (apos <= pos) & (apos > pos - window)
+    else:
+        ok = idx <= pos
+    s = jnp.where(ok[None, None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1).astype(dt)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v).reshape(x.shape[0], 1, H * hd)
+    return o @ params["wo"].astype(dt), cache
+
+
+# ----------------------------------------------------------------------------
+# MLP
+# ----------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w_in": ninit(ks[0], (d, f)),
+         "w_out": ninit(ks[1], (f, d), scale=f ** -0.5)}
+    if cfg.glu:
+        p["w_gate"] = ninit(ks[2], (d, f))
+    return p
+
+
+def mlp_fwd(params, x, cfg: ModelConfig) -> jax.Array:
+    dt = x.dtype
+    act = jax.nn.silu if cfg.act == "silu" else functools.partial(
+        jax.nn.gelu, approximate=True)
+    h = x @ params["w_in"].astype(dt)
+    if cfg.glu:
+        h = act(x @ params["w_gate"].astype(dt)) * h
+    else:
+        h = act(h)
+    return h @ params["w_out"].astype(dt)

@@ -1,0 +1,101 @@
+"""Unified model facade: dispatch by family + input_specs for the dry-run."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, transformer
+from .config import ModelConfig, ShapeConfig
+
+Params = Dict[str, Any]
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    if cfg.is_encdec:
+        return encdec.init_params(cfg, key)
+    return transformer.init_params(cfg, key)
+
+
+def forward_loss(params, batch, cfg: ModelConfig,
+                 remat_policy: str = "nothing"):
+    if cfg.is_encdec:
+        return encdec.forward_loss(params, batch, cfg, remat_policy)
+    return transformer.forward_loss(params, batch, cfg, remat_policy)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               kv_dtype: str = "bfloat16") -> Params:
+    if cfg.is_encdec:
+        return encdec.init_cache(cfg, batch, max_seq,
+                                 enc_len=max_seq, kv_dtype=kv_dtype)
+    return transformer.init_cache(cfg, batch, max_seq, kv_dtype)
+
+
+def decode_step(params, cache, token, pos, cfg: ModelConfig):
+    if cfg.is_encdec:
+        return encdec.decode_step(params, cache, token, pos, cfg)
+    return transformer.decode_step(params, cache, token, pos, cfg)
+
+
+def prefill(params, batch, cfg: ModelConfig):
+    if cfg.is_encdec:
+        enc_out = encdec.encode(params, batch["frames"], cfg)
+        x = encdec.decode_train(params, enc_out, batch["tokens"], cfg)
+        import repro.models.layers as L
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"])
+        logits = (x[:, -1] @ head.astype(x.dtype)).astype(jnp.float32)
+        return logits[:, :cfg.vocab], x
+    return transformer.prefill(params, batch["tokens"], cfg,
+                               prefix=batch.get("prefix"))
+
+
+# ----------------------------------------------------------------------------
+# input specs (ShapeDtypeStructs -- no allocation; dry-run + shape contracts)
+# ----------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                dtype: str = "bfloat16") -> Dict[str, jax.ShapeDtypeStruct]:
+    """Stand-ins for every model input of a train/prefill step."""
+    B, Sq = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = jnp.dtype(dtype)
+    if cfg.is_encdec:
+        Sd = max(256, Sq // cfg.dec_ratio)
+        return {
+            "frames": jax.ShapeDtypeStruct((B, Sq, cfg.d_model), dt),
+            "tokens": jax.ShapeDtypeStruct((B, Sd), i32),
+            "labels": jax.ShapeDtypeStruct((B, Sd), i32),
+        }
+    if cfg.frontend == "patches":
+        St = Sq - cfg.n_prefix
+        return {
+            "prefix": jax.ShapeDtypeStruct((B, cfg.n_prefix, cfg.d_model), dt),
+            "tokens": jax.ShapeDtypeStruct((B, St), i32),
+            "labels": jax.ShapeDtypeStruct((B, St), i32),
+        }
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, Sq), i32),
+        "labels": jax.ShapeDtypeStruct((B, Sq), i32),
+    }
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig,
+                kv_dtype: str = "bfloat16") -> Params:
+    """ShapeDtypeStruct pytree mirroring init_cache (no allocation)."""
+    B, Sq = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, B, Sq, kv_dtype=kv_dtype))
+    return cache
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig
+                       ) -> Dict[str, jax.ShapeDtypeStruct]:
+    B = shape.global_batch
+    return {
+        "token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }

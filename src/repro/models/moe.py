@@ -1,0 +1,119 @@
+"""Mixture-of-Experts layer: top-k routing, locality-aware sort dispatch.
+
+Dispatch is performed PER DATA-SHARD ("local capacity", as production MoE
+systems do): the token stream is reshaped to (G, n_loc, D) with G aligned to
+the data axes of the active sharding scope, and the sort/scatter/gather
+machinery is vmapped over G -- every data-dependent gather/scatter then stays
+within one shard and GSPMD never replicates a global dispatch buffer
+(a global-sort formulation measured 200+ GiB/device on granite-moe).
+The expert GEMM batches over (G, E) with E model-sharded when divisible.
+Tokens over local capacity are dropped to the residual stream (standard).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import ninit
+
+
+def init_moe(key, cfg: ModelConfig) -> Dict[str, jax.Array]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": ninit(ks[0], (d, e)),
+        "w_in": ninit(ks[1], (e, d, f)),
+        "w_out": ninit(ks[2], (e, f, d), scale=f ** -0.5),
+    }
+    if cfg.glu:
+        p["w_gate"] = ninit(ks[3], (e, d, f))
+    return p
+
+
+def capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = int(n_tokens * cfg.topk / cfg.n_experts * cfg.capacity_factor)
+    # multiple of 8 so (G, E, C, D) shards/tile cleanly
+    return max(8, -(-c // 8) * 8)
+
+
+def _local_dispatch(xl, gate_l, eid_l, E: int, C: int, K: int):
+    """One shard's dispatch. xl: (n, D); gate/eid: (n, K).
+    Returns (h_in (E, C, D), combine metadata)."""
+    n, D = xl.shape
+    eids = eid_l.reshape(-1)                              # (n*K,)
+    order = jnp.argsort(eids, stable=True)
+    sorted_eids = eids[order]
+    tok_of = order // K
+    gate_of = gate_l.reshape(-1)[order]
+    first = jnp.searchsorted(sorted_eids, sorted_eids, side="left")
+    slot = jnp.arange(n * K) - first
+    keep = slot < C
+    dst = jnp.where(keep, sorted_eids * C + slot, E * C)  # OOB => dropped
+    buf = jnp.zeros((E * C, D), dtype=xl.dtype)
+    buf = buf.at[dst].set(xl[tok_of], mode="drop")
+    return buf.reshape(E, C, D), (tok_of, gate_of, keep, dst)
+
+
+def _local_combine(h_out, meta, n: int, K: int):
+    """h_out: (E, C, D) -> y (n, D)."""
+    tok_of, gate_of, keep, dst = meta
+    E, C, D = h_out.shape
+    flat = h_out.reshape(E * C, D)
+    src = jnp.where(keep, dst, 0)
+    contrib = flat[src] * (gate_of * keep).astype(h_out.dtype)[:, None]
+    return jnp.zeros((n, D), dtype=h_out.dtype).at[tok_of].add(contrib)
+
+
+def moe_fwd(params, x: jax.Array, cfg: ModelConfig
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out, aux_loss). Load-balance aux loss per Switch."""
+    from repro.sharding.rules import constrain, dp_world
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.topk
+    N = B * S
+    dt = x.dtype
+
+    G = dp_world()
+    if B % G or N % G:
+        G = 1
+    n_loc = N // G
+    C = capacity(n_loc, cfg)
+
+    xg = constrain(x.reshape(G, n_loc, D), "moe_group")
+    logits = (xg @ params["router"].astype(dt)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)               # (G, n, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)       # (G, n, K)
+    gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+    gate_vals = constrain(gate_vals.astype(dt), "moe_g1")
+    expert_idx = constrain(expert_idx, "moe_g1")
+
+    # load-balance auxiliary loss (Switch eq. 4): E * sum_e f_e * p_e
+    me = probs.mean(axis=(0, 1))
+    ce = jnp.zeros((E,), jnp.float32).at[expert_idx.reshape(-1)].add(
+        jnp.ones((G * n_loc * K,), jnp.float32)) / (N * K)
+    aux = E * jnp.sum(me * ce)
+
+    h_in, meta = jax.vmap(
+        lambda xl, gl, el: _local_dispatch(xl, gl, el, E, C, K)
+    )(xg, gate_vals, expert_idx)
+    h_in = constrain(h_in, "moe_gbuf")                    # (G, E, C, D)
+
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    w_in = constrain(params["w_in"].astype(dt), "moe_w_in")
+    w_out = constrain(params["w_out"].astype(dt), "moe_w_out")
+    h = jnp.einsum("gecd,edf->gecf", h_in, w_in)
+    if cfg.glu:
+        w_gate = constrain(params["w_gate"].astype(dt), "moe_w_in")
+        g = jnp.einsum("gecd,edf->gecf", h_in, w_gate)
+        h = act(g) * h
+    else:
+        h = act(h)
+    h_out = jnp.einsum("gecf,efd->gecd", h, w_out)
+    h_out = constrain(h_out, "moe_gbuf")
+
+    y = jax.vmap(lambda ho, m: _local_combine(ho, m, n_loc, K))(h_out, meta)
+    y = constrain(y, "moe_group")
+    return y.reshape(B, S, D), aux

@@ -1,0 +1,98 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
+a_t = exp(-c * softplus(Lambda) * r_t),  r/i = input-dependent sigmoids.
+
+Training path uses jax.lax.associative_scan over the linear recurrence
+(log-depth); decode is a single-step update. Block layout follows Griffin's
+recurrent block: two input branches (conv+RG-LRU branch, gelu gate branch),
+elementwise merge, output projection.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import ninit
+
+_C = 8.0  # Griffin's fixed gate sharpness
+
+
+def init_rec(key, cfg: ModelConfig) -> Dict[str, jax.Array]:
+    d, w = cfg.d_model, cfg.resolved_lru_width
+    ks = jax.random.split(key, 6)
+    return {
+        "w_x": ninit(ks[0], (d, w)),
+        "w_gate": ninit(ks[1], (d, w)),
+        "conv_w": ninit(ks[2], (cfg.conv_width, w), scale=0.5),
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        "w_rg": ninit(ks[3], (w, w)),          # recurrence gate
+        "w_ig": ninit(ks[4], (w, w)),          # input gate
+        "lam": jnp.full((w,), 2.0, jnp.float32),  # Lambda (softplus -> decay)
+        "w_out": ninit(ks[5], (w, d), scale=w ** -0.5),
+    }
+
+
+def _conv(x, w, b, state=None):
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype)
+            for i in range(W))
+    new_state = xp[:, -(W - 1):, :] if W > 1 else state
+    return y + b[None, None, :].astype(x.dtype), new_state
+
+
+def _gates(params, xb):
+    """(log_a, gated_input) both f32, shapes (B, S, W)."""
+    f32 = jnp.float32
+    r = jax.nn.sigmoid((xb @ params["w_rg"].astype(xb.dtype)).astype(f32))
+    i = jax.nn.sigmoid((xb @ params["w_ig"].astype(xb.dtype)).astype(f32))
+    log_a = -_C * jax.nn.softplus(params["lam"])[None, None, :] * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xb.astype(f32))
+    return a, b
+
+
+def rec_fwd(params, x, cfg: ModelConfig) -> jax.Array:
+    """Training/prefill forward. x: (B, S, D)."""
+    from repro.sharding.rules import constrain
+    dt = x.dtype
+    xb = constrain(x @ params["w_x"].astype(dt), "rec_inner")
+    gate = jax.nn.gelu(constrain(x @ params["w_gate"].astype(dt),
+                                 "rec_inner"))
+    xb, _ = _conv(xb, params["conv_w"], params["conv_b"])
+    a, b = _gates(params, xb)
+
+    def combine(u, v):
+        a1, b1 = u
+        a2, b2 = v
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = h.astype(dt) * gate
+    return y @ params["w_out"].astype(dt)
+
+
+def rec_init_cache(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jax.Array]:
+    w = cfg.resolved_lru_width
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+        "state": jnp.zeros((batch, w), jnp.float32),
+    }
+
+
+def rec_decode(params, x, cache, cfg: ModelConfig) -> Tuple[jax.Array, Dict]:
+    dt = x.dtype
+    xb = x @ params["w_x"].astype(dt)                       # (B, 1, W)
+    gate = jax.nn.gelu(x @ params["w_gate"].astype(dt))
+    xb, conv_state = _conv(xb, params["conv_w"], params["conv_b"],
+                           cache["conv"])
+    a, b = _gates(params, xb)
+    h = a[:, 0] * cache["state"] + b[:, 0]                  # (B, W)
+    y = h[:, None, :].astype(dt) * gate
+    return y @ params["w_out"].astype(dt), {"conv": conv_state, "state": h}

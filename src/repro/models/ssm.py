@@ -1,0 +1,197 @@
+"""Mamba-2 SSD (state-space duality) block [arXiv:2405.21060].
+
+Training path: chunked SSD -- intra-chunk quadratic term (masked-decay
+"attention" of size Q x Q) plus inter-chunk linear recurrence over chunk
+states, scanned with jax.lax. Decode path: O(1) per-token state update.
+
+Layout: d_inner = expand * d_model, heads of size ssm_head_dim, a single
+B/C group shared by all heads (n_groups=1), state size N = cfg.ssm_state.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import ninit, rmsnorm
+
+
+def init_ssm(key, cfg: ModelConfig) -> Dict[str, jax.Array]:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 8)
+    # separate projections (z, x, B, C, dt) rather than one fused w_in:
+    # mathematically identical, but every output dim is independently
+    # shardable -- a fused (d, 2di+2n+h) matrix cannot be split on shard
+    # boundaries and costs a collective-permute per layer (measured).
+    return {
+        "w_z": ninit(ks[0], (d, di)),
+        "w_x": ninit(ks[1], (d, di)),
+        "w_B": ninit(ks[2], (d, n)),
+        "w_C": ninit(ks[3], (d, n)),
+        "w_dt": ninit(ks[4], (d, h)),
+        "w_out": ninit(ks[5], (di, d), scale=di ** -0.5),
+        # depthwise convs kept separate per stream for the same reason
+        "conv_xw": ninit(ks[6], (cfg.conv_width, di), scale=0.5),
+        "conv_xb": jnp.zeros((di,), jnp.float32),
+        "conv_Bw": ninit(jax.random.fold_in(ks[6], 1), (cfg.conv_width, n),
+                         scale=0.5),
+        "conv_Bb": jnp.zeros((n,), jnp.float32),
+        "conv_Cw": ninit(jax.random.fold_in(ks[6], 2), (cfg.conv_width, n),
+                         scale=0.5),
+        "conv_Cb": jnp.zeros((n,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h).astype(jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[7], (h,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))),
+        "norm_scale": jnp.zeros((di,), jnp.float32),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d. x: (B, S, C); w: (W, C). Returns (y, state)."""
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype)
+            for i in range(W))
+    y = jax.nn.silu(y + b[None, None, :].astype(x.dtype))
+    new_state = xp[:, -(W - 1):, :] if W > 1 else state
+    return y, new_state
+
+
+def _project(params, x, cfg: ModelConfig):
+    """Separate (z, x, B, C, dt) projections -- shard-clean by construction
+    (a fused (d, 2di+2n+h) matrix cannot be split on shard boundaries and
+    costs a collective-permute per layer; measured in the dry-run)."""
+    from repro.sharding.rules import constrain
+    dt_ = x.dtype
+    z = constrain(x @ params["w_z"].astype(dt_), "rec_inner")
+    xs = constrain(x @ params["w_x"].astype(dt_), "rec_inner")
+    B_ = constrain(x @ params["w_B"].astype(dt_), "ssm_bc")
+    C_ = constrain(x @ params["w_C"].astype(dt_), "ssm_bc")
+    dt = jax.nn.softplus(
+        (x @ params["w_dt"].astype(dt_)).astype(jnp.float32)
+        + params["dt_bias"][None, None, :])
+    dt = constrain(dt, "ssm_dt")
+    return z, xs, B_, C_, dt
+
+
+def ssd_chunked(xh, dt, B_, C_, A, D, chunk: int, intra_dtype=jnp.float32):
+    """Chunked SSD scan, fused: ONE lax.scan over chunks computes both the
+    intra-chunk quadratic term and the inter-chunk state recurrence, so only
+    a single chunk's (B, Q, Q, H) decay tensor is ever live (the pure-jnp
+    analogue of the fused Triton kernel's working set).
+
+    xh: (B, S, H, P); dt: (B, S, H); B_, C_: (B, S, N); A: (H,) positive decay
+    rates. Returns (B, S, H, P). All math in f32.
+    """
+    Bsz, S, H, P = xh.shape
+    N = B_.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    f32 = jnp.float32
+    # (nc, B, Q, ...) scan layout
+    xh_c = jnp.moveaxis(xh.astype(f32).reshape(Bsz, nc, Q, H, P), 1, 0)
+    dt_c = jnp.moveaxis(dt.astype(f32).reshape(Bsz, nc, Q, H), 1, 0)
+    Bm_c = jnp.moveaxis(B_.astype(f32).reshape(Bsz, nc, Q, N), 1, 0)
+    Cm_c = jnp.moveaxis(C_.astype(f32).reshape(Bsz, nc, Q, N), 1, 0)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def step(h, inp):
+        xh_, dt_, Bm, Cm = inp                      # (B,Q,H,P) (B,Q,H) (B,Q,N)
+        dA = dt_ * (-A)[None, None, :]
+        l = jnp.cumsum(dA, axis=1)                  # (B, Q, H)
+        ltot = l[:, -1, :]                          # (B, H)
+        # intra-chunk (optionally bf16: the (Q,Q,H) tensors dominate HBM)
+        cb = jnp.einsum("bqn,bsn->bqs", Cm.astype(intra_dtype),
+                        Bm.astype(intra_dtype))
+        ldiff = l[:, :, None, :] - l[:, None, :, :]          # (B,Q,Q,H)
+        decay = jnp.where(mask[None, :, :, None],
+                          jnp.exp(ldiff).astype(intra_dtype), 0)
+        M = cb[..., None] * decay * dt_[:, None, :, :].astype(intra_dtype)
+        y = jnp.einsum("bqsh,bshp->bqhp", M, xh_.astype(intra_dtype),
+                       preferred_element_type=f32)
+        # inter-chunk contribution from the incoming state
+        y = y + jnp.einsum("bqn,bqh,bhnp->bqhp", Cm, jnp.exp(l), h)
+        # state update
+        sdecay = jnp.exp(ltot[:, None, :] - l) * dt_         # (B,Q,H)
+        h_new = (jnp.exp(ltot)[..., None, None] * h
+                 + jnp.einsum("bqh,bqn,bqhp->bhnp", sdecay, Bm, xh_))
+        return h_new, y
+
+    h0 = jnp.zeros((Bsz, H, N, P), f32)
+    _, ys = jax.lax.scan(jax.checkpoint(step), h0, (xh_c, dt_c, Bm_c, Cm_c))
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, S, H, P)
+    return y + xh.astype(f32) * D[None, None, :, None]
+
+
+def ssm_fwd(params, x, cfg: ModelConfig) -> jax.Array:
+    """Training/prefill forward. x: (B, S, D).
+
+    Internals are channel/head-sharded over "model" with the FULL sequence
+    per device (the SSD recurrence is sequential in S; sharding S would put
+    collectives inside the chunk scan). The depthwise conv is channel-local,
+    so constraining right after the projection keeps it collective-free.
+    """
+    from repro.sharding.rules import constrain
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    # one explicit all-gather at block entry (Megatron AG/RS pattern): all
+    # five projections then read the replicated copy instead of re-gathering
+    x = constrain(x, "act_full")
+    z, xs, B_, C_, dt = _project(params, x, cfg)
+    xs, _ = _causal_conv(xs, params["conv_xw"], params["conv_xb"])
+    B_, _ = _causal_conv(B_, params["conv_Bw"], params["conv_Bb"])
+    C_, _ = _causal_conv(C_, params["conv_Cw"], params["conv_Cb"])
+    A = jnp.exp(params["A_log"])
+    xh = constrain(xs.reshape(*xs.shape[:2], h, p), "ssm_inner")
+    y = ssd_chunked(xh, dt, B_, C_, A, params["D"], cfg.ssm_chunk,
+                    intra_dtype=jnp.dtype(cfg.ssd_dtype))
+    y = y.reshape(*x.shape[:2], di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm_scale"], cfg.norm_eps)
+    return y @ params["w_out"].astype(x.dtype)
+
+
+def ssm_init_cache(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jax.Array]:
+    di, n = cfg.d_inner, cfg.ssm_state
+    w = cfg.conv_width - 1
+    return {
+        "conv_x": jnp.zeros((batch, w, di), dtype),
+        "conv_B": jnp.zeros((batch, w, n), dtype),
+        "conv_C": jnp.zeros((batch, w, n), dtype),
+        "state": jnp.zeros((batch, cfg.ssm_heads, n, cfg.ssm_head_dim),
+                           jnp.float32),
+    }
+
+
+def ssm_decode(params, x, cache, cfg: ModelConfig) -> Tuple[jax.Array, Dict]:
+    """One-token decode. x: (B, 1, D)."""
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xs, B_, C_, dt = _project(params, x, cfg)
+    xs, conv_x = _causal_conv(xs, params["conv_xw"], params["conv_xb"],
+                              cache["conv_x"])
+    B_, conv_B = _causal_conv(B_, params["conv_Bw"], params["conv_Bb"],
+                              cache["conv_B"])
+    C_, conv_C = _causal_conv(C_, params["conv_Cw"], params["conv_Cb"],
+                              cache["conv_C"])
+    xh = xs[:, 0]
+    B0, C0 = B_[:, 0], C_[:, 0]
+    dt0 = dt[:, 0]                                             # (B, H)
+    A = jnp.exp(params["A_log"])
+    a = jnp.exp(-dt0 * A[None, :])                             # (B, H)
+    xhh = xh.reshape(-1, h, p).astype(jnp.float32)
+    upd = (dt0[..., None, None] * B0[:, None, :, None].astype(jnp.float32)
+           * xhh[:, :, None, :])                               # (B,H,N,P)
+    state = a[..., None, None] * cache["state"] + upd
+    y = jnp.einsum("bn,bhnp->bhp", C0.astype(jnp.float32), state)
+    y = y + xhh * params["D"][None, :, None]
+    y = y.reshape(-1, 1, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm_scale"], cfg.norm_eps)
+    return y @ params["w_out"].astype(x.dtype), {
+        "conv_x": conv_x, "conv_B": conv_B, "conv_C": conv_C, "state": state}

@@ -1,0 +1,59 @@
+"""Gradient compression for cross-pod all-reduce (distributed-optimization).
+
+int8 symmetric quantisation per-leaf (per-row scale for matrices) applied
+inside a shard_map psum: quantize -> psum(int32 accumulate) -> dequantize.
+Intended for the slow inter-pod link in the explicit-DP trainer; GSPMD-path
+training keeps full-precision reductions. Error feedback (residual carrying)
+optionalizes the bias the quantiser introduces.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    axes = tuple(range(1, g.ndim)) if g.ndim > 1 else (0,)
+    scale = jnp.max(jnp.abs(g), axis=axes, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(grads: Any, axis_name: str,
+                    residual: Optional[Any] = None) -> Tuple[Any, Any]:
+    """Mean-reduce a grad pytree across ``axis_name`` in int8.
+
+    Returns (reduced_grads_f32, new_residual). Call inside shard_map/pmap.
+    """
+    n = jax.lax.psum(1, axis_name)
+
+    def one(g, r):
+        gf = g.astype(jnp.float32) + (r if r is not None else 0.0)
+        # shared scale (pmax, a tiny f32 collective) so the int32 sum of
+        # payloads dequantizes exactly: sum_i q_i * s == sum_i ~g_i
+        axes = tuple(range(1, gf.ndim)) if gf.ndim > 1 else (0,)
+        s_loc = jnp.max(jnp.abs(gf), axis=axes, keepdims=True) / 127.0
+        s = jax.lax.pmax(s_loc, axis_name) + 1e-12
+        q = jnp.clip(jnp.round(gf / s), -127, 127).astype(jnp.int8)
+        acc = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        deq = acc.astype(jnp.float32) * s / n
+        new_r = gf - q.astype(jnp.float32) * s   # local error feedback
+        return deq, new_r
+
+    if residual is None:
+        residual = jax.tree.map(lambda _: None, grads,
+                                is_leaf=lambda x: x is None)
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residual) if jax.tree.leaves(residual) else [None] * len(flat_g)
+    if len(flat_r) != len(flat_g):
+        flat_r = [None] * len(flat_g)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    red = jax.tree.unflatten(tdef, [o[0] for o in outs])
+    res = jax.tree.unflatten(tdef, [o[1] for o in outs])
+    return red, res

@@ -1,0 +1,2 @@
+from .rules import (ShardingRules, constrain, sharding_scope,  # noqa: F401
+                    make_rules)

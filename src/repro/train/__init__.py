@@ -1,0 +1,2 @@
+from .step import make_serve_step, make_train_step  # noqa: F401
+from .loop import TrainLoopConfig, train_loop  # noqa: F401

@@ -1,0 +1,107 @@
+"""Fault-tolerant training loop: checkpoint/restart, watchdog, preemption.
+
+Production posture (DESIGN.md §6):
+  * auto-resume from the latest complete checkpoint (manifest-validated);
+  * periodic + preemption-signal checkpointing (SIGTERM hook);
+  * straggler watchdog: step times > tolerance x running median are logged
+    and counted (on real fleets this feeds the controller's replacement
+    policy; here it surfaces in metrics);
+  * stateless data pipeline keyed by step -> exact-resume semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import signal
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.data.synthetic import SyntheticLM
+from repro.models.config import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    steps: int = 100
+    ckpt_dir: str = ""
+    ckpt_every: int = 50
+    keep_last: int = 3
+    log_every: int = 10
+    straggler_tolerance: float = 3.0
+    seed: int = 0
+
+
+def train_loop(train_step: Callable, params: Any, opt_state: Any,
+               cfg: ModelConfig, shape: ShapeConfig,
+               loop_cfg: TrainLoopConfig,
+               put_batch: Optional[Callable] = None,
+               log_fn: Callable = print) -> Dict[str, Any]:
+    """Run the loop; returns {params, opt_state, history, stragglers}."""
+    data = SyntheticLM(cfg, shape.seq_len, shape.global_batch,
+                       seed=loop_cfg.seed)
+    start = 0
+    if loop_cfg.ckpt_dir:
+        last = latest_step(loop_cfg.ckpt_dir)
+        if last is not None:
+            state = restore_checkpoint(loop_cfg.ckpt_dir, last,
+                                       {"params": params, "opt": opt_state})
+            params, opt_state = state["params"], state["opt"]
+            start = last
+            log_fn(f"[resume] restored step {last} from {loop_cfg.ckpt_dir}")
+
+    preempted = {"flag": False}
+
+    def _on_term(signum, frame):
+        preempted["flag"] = True
+
+    prev_handler = signal.signal(signal.SIGTERM, _on_term)
+
+    history: List[Dict[str, float]] = []
+    step_times: List[float] = []
+    stragglers = 0
+    try:
+        for step in range(start, loop_cfg.steps):
+            batch = data.batch(step)
+            if put_batch is not None:
+                batch = put_batch(batch)
+            else:
+                batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+            t0 = time.perf_counter()
+            params, opt_state, metrics = train_step(params, opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            step_times.append(dt)
+            med = float(np.median(step_times[-32:]))
+            if len(step_times) > 4 and dt > loop_cfg.straggler_tolerance * med:
+                stragglers += 1
+                log_fn(f"[watchdog] step {step} took {dt:.3f}s "
+                       f"(median {med:.3f}s) -- straggler flagged")
+            if step % loop_cfg.log_every == 0 or step == loop_cfg.steps - 1:
+                row = {k: float(v) for k, v in metrics.items()}
+                row.update(step=step, step_time=dt)
+                history.append(row)
+                log_fn(f"[train] step {step} loss={row['loss']:.4f} "
+                       f"gnorm={row.get('grad_norm', 0):.3f} {dt*1e3:.0f}ms")
+            ckpt_due = (loop_cfg.ckpt_dir
+                        and (step + 1) % loop_cfg.ckpt_every == 0)
+            if ckpt_due or (preempted["flag"] and loop_cfg.ckpt_dir):
+                save_checkpoint(loop_cfg.ckpt_dir, step + 1,
+                                {"params": params, "opt": opt_state},
+                                keep_last=loop_cfg.keep_last)
+            if preempted["flag"]:
+                log_fn(f"[preempt] checkpointed at step {step + 1}, exiting")
+                break
+    finally:
+        signal.signal(signal.SIGTERM, prev_handler)
+
+    if loop_cfg.ckpt_dir and not preempted["flag"]:
+        save_checkpoint(loop_cfg.ckpt_dir, loop_cfg.steps,
+                        {"params": params, "opt": opt_state},
+                        keep_last=loop_cfg.keep_last)
+    return {"params": params, "opt_state": opt_state, "history": history,
+            "stragglers": stragglers, "step_times": step_times}

@@ -1,0 +1,124 @@
+"""train_step / serve_step builders (the functions the dry-run lowers)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as MD
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig, adamw_update
+from repro.sharding.rules import ShardingRules, sharding_scope
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    rules: Optional[ShardingRules] = None,
+                    remat_policy: str = "nothing", accum_steps: int = 1,
+                    cast_once: bool = False):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    Params are f32 masters; the forward casts to cfg.dtype internally.
+    Sharding constraints activate when ``rules`` is provided.
+    ``accum_steps`` > 1 scans over microbatches with gradient accumulation
+    (activation memory scales with batch/accum_steps; the f32 grad
+    accumulator is master-sharded).
+    ``cast_once`` (non-FSDP / ZeRO-1 mode): the fully sharded f32 masters are
+    cast+gathered to a TP-resident bf16 copy ONCE per step, shared by every
+    microbatch (vs FSDP's per-layer-per-microbatch re-gathers); grads convert
+    back to the master sharding with a local slice (no extra collective).
+    """
+    import dataclasses as _dc
+
+    def loss_fn(p, b):
+        loss, metrics = MD.forward_loss(p, b, cfg, remat_policy)
+        return loss, metrics
+
+    compute_rules = (_dc.replace(rules, fsdp=False)
+                     if (rules is not None and cast_once) else None)
+
+    def train_step(params, opt_state, batch):
+        with sharding_scope(rules):
+            if compute_rules is not None:
+                cshard = compute_rules.param_shardings(params)
+                mshard = rules.opt_shardings(params)
+                dt = jnp.dtype(cfg.dtype)
+                cparams = jax.tree.map(
+                    lambda p, s: jax.lax.with_sharding_constraint(
+                        p.astype(dt) if jnp.issubdtype(p.dtype, jnp.floating)
+                        else p, s),
+                    params, cshard)
+                tomaster = lambda g, ms: jax.lax.with_sharding_constraint(
+                    g.astype(jnp.float32), ms)
+            else:
+                cparams = params
+                mshard = jax.tree.map(lambda _: None, params)
+                tomaster = lambda g, ms: g.astype(jnp.float32)
+
+            if accum_steps == 1:
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(cparams, batch)
+                grads = jax.tree.map(tomaster, grads, mshard)
+            else:
+                micro = jax.tree.map(
+                    lambda x: x.reshape(accum_steps,
+                                        x.shape[0] // accum_steps,
+                                        *x.shape[1:]), batch)
+
+                def mb_step(gsum, b):
+                    (l, m), g = jax.value_and_grad(
+                        loss_fn, has_aux=True)(cparams, b)
+                    gsum = jax.tree.map(
+                        lambda a, gi, ms: a + tomaster(gi, ms),
+                        gsum, g, mshard)
+                    return gsum, (l, m)
+
+                gzero = jax.tree.map(
+                    lambda p, ms: (jax.lax.with_sharding_constraint(
+                        jnp.zeros(p.shape, jnp.float32), ms)
+                        if ms is not None
+                        else jnp.zeros(p.shape, jnp.float32)),
+                    params, mshard)
+                grads, (losses, ms_) = jax.lax.scan(mb_step, gzero, micro)
+                grads = jax.tree.map(lambda g: g / accum_steps, grads)
+                loss = losses.mean()
+                metrics = jax.tree.map(lambda x: x.mean(axis=0), ms_)
+            new_params, new_opt, opt_metrics = adamw_update(
+                params, grads, opt_state, opt_cfg)
+            metrics = dict(metrics, loss=loss, **opt_metrics)
+            return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig, rules: Optional[ShardingRules] = None,
+                    sample: str = "greedy"):
+    """Returns serve_step(params, cache, token, pos) -> (next_token, cache).
+
+    One new token against the KV cache -- the shape the decode_* cells lower.
+    """
+
+    def serve_step(params, cache, token, pos):
+        with sharding_scope(rules):
+            logits, cache = MD.decode_step(params, cache, token, pos, cfg)
+            if sample == "greedy":
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            else:
+                raise ValueError(sample)
+            return nxt[:, None], cache
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig,
+                      rules: Optional[ShardingRules] = None):
+    def prefill_step(params, batch):
+        with sharding_scope(rules):
+            logits, _ = MD.prefill(params, batch, cfg)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return prefill_step
+
+
+def cast_params(params, dtype):
+    return jax.tree.map(lambda p: p.astype(dtype), params)

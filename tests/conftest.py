@@ -1,0 +1,30 @@
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout: int = 300):
+    """Run a python snippet in a subprocess with N fake CPU devices.
+
+    Keeps the main pytest process at 1 device (per the assignment: only the
+    dry-run and explicitly-distributed tests may see many devices).
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=timeout, env=env)
+    if res.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed\nstdout:\n{res.stdout}\nstderr:\n{res.stderr}")
+    return res.stdout
+
+
+@pytest.fixture
+def devices8():
+    return lambda code, **kw: run_with_devices(code, 8, **kw)

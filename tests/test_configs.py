@@ -1,0 +1,65 @@
+"""The assigned architecture table, verified literally against configs."""
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke_config
+
+# (arch, layers, d_model, heads, kv, d_ff, vocab, experts, topk)
+ASSIGNED = {
+    "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064, 16, 2),
+    "granite-moe-3b-a800m": (32, 1536, 24, 8, 512, 49155, 40, 8),
+    "glm4-9b": (40, 4096, 32, 2, 13696, 151552, 0, 0),
+    "gemma-2b": (18, 2048, 8, 1, 16384, 256000, 0, 0),
+    "deepseek-67b": (95, 8192, 64, 8, 22016, 102400, 0, 0),
+    "yi-6b": (32, 4096, 32, 4, 11008, 64000, 0, 0),
+    "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256206, 0, 0),
+    "mamba2-370m": (48, 1024, 0, 0, 0, 50280, 0, 0),
+    "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000, 0, 0),
+    "internvl2-26b": (48, 6144, 48, 8, 16384, 92553, 0, 0),
+}
+
+
+def test_all_archs_present():
+    assert set(ARCHS) == set(ASSIGNED)
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    L, d, h, kv, ff, v, e, k = ASSIGNED[arch]
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    assert cfg.n_heads == h
+    assert cfg.kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab == v
+    assert cfg.n_experts == e
+    assert cfg.topk == k
+
+
+def test_family_specifics():
+    assert get_config("gemma-2b").resolved_head_dim == 256
+    assert get_config("recurrentgemma-9b").layer_pattern == \
+        ("rec", "rec", "lattn")
+    assert get_config("recurrentgemma-9b").window == 2048
+    assert get_config("mamba2-370m").ssm_state == 128
+    assert get_config("mamba2-370m").subquadratic
+    assert get_config("recurrentgemma-9b").subquadratic
+    assert not get_config("glm4-9b").subquadratic
+    assert get_config("seamless-m4t-medium").enc_layers == 12
+    assert get_config("internvl2-26b").frontend == "patches"
+    assert get_config("gemma-2b").act == "gelu"  # GeGLU
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_smoke_configs_are_small(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.n_params() < 5e6, "smoke configs must run in CI seconds"
+    assert cfg.family == get_config(arch).family
+    assert cfg.layer_pattern == get_config(arch).layer_pattern
+
+
+def test_vocab_padding_divisible():
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        assert cfg.vocab_padded % 256 == 0
+        assert cfg.vocab_padded >= cfg.vocab

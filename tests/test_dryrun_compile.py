@@ -1,0 +1,34 @@
+"""End-to-end dry-run compile smoke (512 placeholder devices, subprocess).
+
+Compiles the fastest cell (mamba2 decode) for BOTH production meshes --
+guards the launch path (mesh construction, sharding specs, lower+compile,
+HLO analysis, JSON record) against regressions. ~60 s.
+"""
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_dryrun_cell_compiles_both_meshes(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "mamba2-370m", "--shape", "decode_32k",
+         "--both-meshes", "--out-dir", str(tmp_path), "--tag", "smoke"],
+        capture_output=True, text=True, env=env, timeout=570,
+        cwd=REPO)
+    assert res.returncode == 0, res.stderr[-2000:]
+    recs = sorted(os.listdir(tmp_path))
+    assert len(recs) == 2
+    for name in recs:
+        with open(tmp_path / name) as f:
+            rec = json.load(f)
+        assert "skipped" not in rec
+        assert rec["hlo"]["flops_per_device"] > 0
+        assert rec["memory"]["peak_bytes_per_device"] > 0
+        assert rec["compile_s"] > 0
+        assert rec["n_devices"] in (256, 512)

@@ -1,0 +1,57 @@
+"""Dry-run policy logic (no compilation -- pure functions)."""
+import pytest
+
+from repro.configs import get_config
+from repro.launch.dryrun import (auto_accum, auto_fsdp, auto_kv,
+                                 cell_skip_reason, model_flops)
+from repro.models.config import SHAPES
+
+
+def test_long500k_skip_rules():
+    for arch, should_skip in [
+        ("glm4-9b", True), ("deepseek-67b", True), ("gemma-2b", True),
+        ("phi3.5-moe-42b-a6.6b", True), ("seamless-m4t-medium", True),
+        ("internvl2-26b", True), ("yi-6b", True),
+        ("granite-moe-3b-a800m", True),
+        ("mamba2-370m", False), ("recurrentgemma-9b", False),
+    ]:
+        reason = cell_skip_reason(get_config(arch), SHAPES["long_500k"])
+        assert (reason is not None) == should_skip, arch
+    # no other shape ever skips
+    for arch in ("glm4-9b", "mamba2-370m"):
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert cell_skip_reason(get_config(arch), SHAPES[s]) is None
+
+
+def test_model_flops_formulas():
+    cfg = get_config("yi-6b")
+    n = cfg.n_params()
+    train = model_flops(cfg, SHAPES["train_4k"])
+    assert train == pytest.approx(6 * n * 256 * 4096)
+    prefill = model_flops(cfg, SHAPES["prefill_32k"])
+    assert prefill == pytest.approx(2 * n * 32 * 32768)
+    moe = get_config("phi3.5-moe-42b-a6.6b")
+    assert model_flops(moe, SHAPES["train_4k"]) == pytest.approx(
+        6 * moe.n_active_params() * 256 * 4096)
+
+
+def test_auto_kv_thresholds():
+    # deepseek 32k decode cache is ~6.4 GiB/dev bf16 -> int8
+    assert auto_kv(get_config("deepseek-67b"), SHAPES["decode_32k"],
+                   256) == "int8"
+    # gemma MQA cache is tiny -> bf16
+    assert auto_kv(get_config("gemma-2b"), SHAPES["decode_32k"],
+                   256) == "bfloat16"
+    # internvl's cache is ~3 GiB/dev -- under the 4 GiB threshold
+    assert auto_kv(get_config("internvl2-26b"), SHAPES["decode_32k"],
+                   256) == "bfloat16"
+    # halving the fleet flips the decision
+    assert auto_kv(get_config("internvl2-26b"), SHAPES["decode_32k"],
+                   128) == "int8"
+
+
+def test_auto_accum_policy():
+    assert auto_accum(get_config("deepseek-67b")) == 4
+    assert auto_accum(get_config("glm4-9b")) == 2
+    assert auto_accum(get_config("mamba2-370m")) == 1
+    assert auto_accum(get_config("granite-moe-3b-a800m")) == 4  # MoE rule

@@ -1,0 +1,120 @@
+"""SPC5 format tests: round-trips, occupancy model, stats, chunking."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import formats as F
+from repro.core import matgen
+
+
+def rand_dense(n, m, density, seed=0, dtype=np.float64):
+    rng = np.random.default_rng(seed)
+    return ((rng.random((n, m)) < density)
+            * rng.standard_normal((n, m))).astype(dtype)
+
+
+@pytest.mark.parametrize("rc", F.SUPPORTED_BLOCKS)
+@pytest.mark.parametrize("density", [0.02, 0.15, 0.6])
+def test_roundtrip_dense(rc, density):
+    d = rand_dense(57, 43, density, seed=hash(rc) % 100)
+    csr = F.csr_from_dense(d)
+    mat = F.csr_to_spc5(csr, *rc)
+    np.testing.assert_allclose(mat.to_dense(), d)
+    assert mat.nnz == csr.nnz  # NO zero padding in values
+    assert mat.values.shape[0] == csr.nnz
+
+
+@pytest.mark.parametrize("rc", [(1, 8), (2, 4), (4, 8), (8, 4)])
+def test_block_stats_match_conversion(rc):
+    csr = matgen.banded(500, 5, 0.9, seed=1)
+    nb, avg = F.block_stats(csr, *rc)
+    mat = F.csr_to_spc5(csr, *rc)
+    assert nb == mat.nblocks
+    assert avg == pytest.approx(mat.avg_nnz_per_block)
+
+
+def test_occupancy_eq2_matches_measured():
+    csr = matgen.fem_blocks(600, 4, 6, seed=2)
+    for rc in [(1, 8), (4, 4), (8, 4)]:
+        mat = F.csr_to_spc5(csr, *rc)
+        model = F.occupancy_model_spc5(
+            mat.nnz, mat.nrows, mat.avg_nnz_per_block, *rc,
+            s_float=mat.values.dtype.itemsize)
+        measured = mat.occupancy_bytes()
+        assert measured == pytest.approx(model, rel=0.05)
+
+
+def test_occupancy_beats_csr_when_filled():
+    """Paper eq. (4): beta beats CSR when Avg(r,c) > 1 + r*c/(8*S_int)."""
+    csr = matgen.fem_blocks(600, 8, 6, seed=3)  # dense 8x8 blocks
+    mat = F.csr_to_spc5(csr, 4, 8)
+    assert mat.avg_nnz_per_block > F.beta_breakeven_avg(4, 8)
+    assert mat.occupancy_bytes() < csr.occupancy_bytes()
+
+
+def test_dense_matrix_fully_filled():
+    csr = matgen.dense(64, seed=4)
+    for rc in [(1, 8), (2, 8), (4, 8)]:
+        mat = F.csr_to_spc5(csr, *rc)
+        assert mat.fill_ratio == pytest.approx(1.0)
+
+
+def test_singleton_split_preserves_matrix():
+    csr = matgen.powerlaw(800, 6, seed=5)
+    mat = F.csr_to_spc5(csr, 1, 8)
+    ts = F.split_singletons(mat)
+    d = ts.multi.to_dense()
+    np.add.at(d, (ts.single_rows, ts.single_cols), ts.single_values)
+    np.testing.assert_allclose(d, csr.to_dense())
+    assert ts.nnz == mat.nnz
+    # powerlaw matrices should have plenty of singleton blocks
+    assert ts.single_values.shape[0] > 0
+
+
+def test_chunked_layout_alignment():
+    csr = matgen.banded(400, 7, 0.8, seed=6)
+    mat = F.csr_to_spc5(csr, 2, 8)
+    ch = F.to_chunked(mat, cb=32, align=8)
+    assert np.all(ch.chunk_vbase % 8 == 0)
+    assert ch.vmax % 8 == 0
+    # padding overhead stays tiny (chunk-alignment only, <2%)
+    assert ch.values.shape[0] <= mat.nnz * 1.02 + ch.vmax + 8
+    # masks of padding blocks are zero
+    nblocks = mat.nblocks
+    flat_mask = ch.chunk_mask.reshape(-1)
+    assert np.all(flat_mask[nblocks:] == 0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(4, 80),
+    m=st.integers(4, 80),
+    density=st.floats(0.01, 0.7),
+    rc=st.sampled_from(list(F.SUPPORTED_BLOCKS)),
+    seed=st.integers(0, 2**20),
+)
+def test_property_roundtrip_and_occupancy(n, m, density, rc, seed):
+    d = rand_dense(n, m, density, seed=seed)
+    csr = F.csr_from_dense(d)
+    mat = F.csr_to_spc5(csr, *rc)
+    # invariant 1: exact reconstruction
+    np.testing.assert_allclose(mat.to_dense(), d)
+    # invariant 2: values exactly the nonzeros, no padding
+    assert mat.values.shape[0] == csr.nnz
+    # invariant 3: popcounts partition the values array
+    assert int(F.popcount_u32(mat.block_masks).sum()) == mat.nnz
+    # invariant 4: rowptr monotone
+    assert np.all(np.diff(mat.block_rowptr) >= 0)
+    # invariant 5: blocks stay in bounds
+    if mat.nblocks:
+        assert mat.block_colidx.min() >= 0
+        assert mat.block_colidx.max() <= max(m - 1, 0)
+
+
+def test_csr_from_coo_duplicates_summed():
+    rows = np.array([0, 0, 1])
+    cols = np.array([1, 1, 0])
+    vals = np.array([2.0, 3.0, 1.0])
+    csr = F.csr_from_coo((2, 2), rows, cols, vals)
+    d = csr.to_dense()
+    assert d[0, 1] == 5.0 and d[1, 0] == 1.0

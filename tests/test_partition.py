@@ -1,0 +1,53 @@
+"""Block-balanced partition tests (paper §Parallelization)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import formats as F
+from repro.core import matgen
+from repro.core.partition import (block_balanced_intervals, partition_matrix,
+                                  partition_row_starts)
+
+
+def test_partition_covers_disjointly():
+    csr = matgen.banded(1000, 6, 0.9, seed=1)
+    mat = F.csr_to_spc5(csr, 2, 4)
+    parts = partition_matrix(mat, 7)
+    starts = partition_row_starts(mat, 7)
+    d = np.zeros(mat.shape)
+    for p, r0 in zip(parts, starts):
+        sub = p.to_dense()
+        d[r0:r0 + sub.shape[0], :] += sub
+    np.testing.assert_allclose(d, mat.to_dense())
+    assert sum(p.nnz for p in parts) == mat.nnz
+
+
+def test_partition_balance():
+    csr = matgen.fem_blocks(2000, 4, 8, seed=2)
+    mat = F.csr_to_spc5(csr, 4, 4)
+    nparts = 13
+    parts = partition_matrix(mat, nparts)
+    counts = [p.nblocks for p in parts]
+    ideal = mat.nblocks / nparts
+    # the paper's greedy split: every part within one row-interval of ideal
+    max_per_interval = np.diff(mat.block_rowptr).max()
+    for c in counts:
+        assert abs(c - ideal) <= max_per_interval + 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    nint=st.integers(1, 60),
+    nparts=st.integers(1, 16),
+    seed=st.integers(0, 10_000),
+)
+def test_property_intervals_monotone_cover(nint, nparts, seed):
+    rng = np.random.default_rng(seed)
+    counts = rng.integers(0, 9, size=nint)
+    rowptr = np.concatenate([[0], np.cumsum(counts)])
+    ivs = block_balanced_intervals(rowptr, nparts)
+    assert len(ivs) == nparts
+    assert ivs[0][0] == 0 and ivs[-1][1] == nint
+    for (a0, a1), (b0, b1) in zip(ivs, ivs[1:]):
+        assert a1 == b0          # contiguous
+        assert a0 <= a1          # monotone

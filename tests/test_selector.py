@@ -1,0 +1,67 @@
+"""Kernel-selection tests (paper §Performance prediction)."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import formats as F
+from repro.core import matgen, selector as S
+
+
+def test_record_store_roundtrip(tmp_path):
+    p = str(tmp_path / "records.json")
+    store = S.RecordStore(p)
+    store.add("4x8", 12.0, 1, 3.5, matrix="m1")
+    store.add("1x8", 2.0, 8, 1.5)
+    store.save()
+    store2 = S.RecordStore(p)
+    assert len(store2.records) == 2
+    assert store2.records[0].kernel == "4x8"
+    assert store2.kernels() == ["1x8", "4x8"]
+
+
+def test_sequential_predictor_recovers_law():
+    """If gflops = a + b*avg the polyfit must recover it."""
+    store = S.RecordStore()
+    for avg in [1, 2, 4, 8, 16, 24]:
+        store.add("4x8", avg, 1, 0.5 + 0.1 * avg)
+        store.add("1x8", avg, 1, 1.0 + 0.01 * avg)
+    pred = S.SequentialPredictor(store)
+    assert pred.predict("4x8", 10.0) == pytest.approx(1.5, rel=1e-3)
+    assert pred.predict("1x8", 10.0) == pytest.approx(1.1, rel=1e-3)
+    # crossover: low fill prefers 1x8, high fill prefers 4x8
+    assert pred.predict("1x8", 2.0) > pred.predict("4x8", 2.0)
+    assert pred.predict("4x8", 24.0) > pred.predict("1x8", 24.0)
+
+
+def test_parallel_predictor_2d():
+    store = S.RecordStore()
+    for avg in [1.0, 4.0, 16.0]:
+        for w in [1, 4, 16, 52]:
+            store.add("2x4", avg, w, 0.2 * avg + 0.5 * np.log2(w) + 1.0)
+    pred = S.ParallelPredictor(store)
+    got = pred.predict("2x4", 8.0, 8)
+    assert got == pytest.approx(0.2 * 8 + 0.5 * 3 + 1.0, rel=0.05)
+
+
+def test_select_kernel_end_to_end():
+    csr = matgen.fem_blocks(400, 4, 6, seed=1)
+    store = S.RecordStore()
+    # synthetic records: large blocks win at high fill
+    for k in S.DEFAULT_KERNELS:
+        r, c = S.kernel_block(k)
+        for avg in [1.0, 4.0, 12.0, 30.0]:
+            store.add(k, avg, 1, avg * (r * c) ** 0.25)
+    best, score, scores = S.select_kernel(csr, store, workers=1)
+    assert best in S.DEFAULT_KERNELS
+    assert score == max(scores.values())
+    feats = S.matrix_features(csr)
+    assert set(feats) == set(S.DEFAULT_KERNELS)
+    # fem 4x4 blocks: beta(4,4) should be well filled
+    assert feats["4x4"] > F.beta_breakeven_avg(4, 4)
+
+
+def test_selector_empty_store_graceful():
+    csr = matgen.banded(100, 3, 1.0)
+    best, score, _ = S.select_kernel(csr, S.RecordStore(), workers=1)
+    assert best in S.DEFAULT_KERNELS  # -inf everywhere, max returns a kernel

@@ -1,0 +1,75 @@
+"""SparseLinear layer tests (the paper's kernels integrated into models)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import formats as F
+from repro.core.sparse_linear import (SparseLinear, choose_block,
+                                      prune_by_magnitude)
+from repro.core import selector as S
+
+
+def test_prune_by_magnitude_density():
+    rng = np.random.default_rng(0)
+    w = rng.standard_normal((128, 64))
+    for dens in [0.1, 0.3, 0.9]:
+        wp = prune_by_magnitude(w, dens)
+        got = (wp != 0).mean()
+        assert got == pytest.approx(dens, abs=0.02)
+        # surviving weights unchanged
+        mask = wp != 0
+        np.testing.assert_allclose(wp[mask], w[mask])
+
+
+def test_sparse_linear_matches_pruned_dense():
+    rng = np.random.default_rng(1)
+    w = rng.standard_normal((48, 32)).astype(np.float32)
+    b = rng.standard_normal(48).astype(np.float32)
+    sl = SparseLinear.from_dense(w, density=0.25, bias=b)
+    wp = prune_by_magnitude(w, 0.25)
+    x = rng.standard_normal((5, 32)).astype(np.float32)
+    y = np.asarray(sl(jnp.asarray(x)))
+    np.testing.assert_allclose(y, x @ wp.T + b, atol=1e-4)
+
+
+def test_sparse_linear_spmv_path_batch1():
+    rng = np.random.default_rng(2)
+    w = rng.standard_normal((32, 24)).astype(np.float32)
+    sl = SparseLinear.from_dense(w, density=0.5)
+    wp = prune_by_magnitude(w, 0.5)
+    x = rng.standard_normal((1, 24)).astype(np.float32)
+    y = np.asarray(sl(jnp.asarray(x)))
+    np.testing.assert_allclose(y, x @ wp.T, atol=1e-4)
+
+
+def test_choose_block_uses_selector_records():
+    rng = np.random.default_rng(3)
+    w = rng.standard_normal((64, 64)) * (rng.random((64, 64)) < 0.3)
+    csr = F.csr_from_dense(w)
+    store = S.RecordStore()
+    for avg in [1.0, 5.0, 20.0]:
+        store.add("2x8", avg, 1, 10.0)        # make 2x8 always win
+        for k in S.DEFAULT_KERNELS:
+            if k != "2x8":
+                store.add(k, avg, 1, 1.0)
+    assert choose_block(csr, store) == (2, 8)
+    # without records: falls back to breakeven heuristic, returns valid block
+    assert choose_block(csr, None) in F.SUPPORTED_BLOCKS
+
+
+def test_sparse_linear_in_jit_and_grad_free_pytree():
+    rng = np.random.default_rng(4)
+    w = rng.standard_normal((16, 16)).astype(np.float32)
+    sl = SparseLinear.from_dense(w, density=0.5)
+
+    @jax.jit
+    def f(layer, x):
+        return layer(x).sum()
+
+    out = f(sl, jnp.ones((2, 16)))
+    assert np.isfinite(float(out))
+    flat, tdef = jax.tree.flatten(sl)
+    sl2 = jax.tree.unflatten(tdef, flat)
+    out2 = f(sl2, jnp.ones((2, 16)))
+    assert float(out) == pytest.approx(float(out2))

@@ -1,0 +1,121 @@
+"""End-to-end behaviour tests for the SPC5-JAX system."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import formats as F
+from repro.core import matgen
+from repro.core.sparse_linear import SparseLinear
+from repro.data.synthetic import SyntheticLM
+from repro.kernels import ops
+from repro.models import model as MD
+from repro.models.config import ShapeConfig
+from repro.optim import AdamWConfig, adamw_init
+from repro.train import TrainLoopConfig, train_loop
+from repro.train.step import make_train_step
+
+
+def test_e2e_cg_solver_with_spc5():
+    """The paper's motivating use case: Krylov iteration (CG) where every
+    matvec runs through the SPC5 kernel."""
+    n = 300
+    rng = np.random.default_rng(0)
+    # SPD matrix: banded + diagonal dominance
+    csr = matgen.banded(n, 3, 1.0, seed=1)
+    a = csr.to_dense()
+    a = (a + a.T) / 2 + np.eye(n) * (np.abs(a).sum(1).max() + 1.0)
+    mat = F.csr_to_spc5(F.csr_from_dense(a.astype(np.float32)), 2, 4)
+    h = ops.prepare(mat, cb=128)
+    b = rng.standard_normal(n).astype(np.float32)
+
+    x = jnp.zeros(n)
+    r = jnp.asarray(b)
+    p = r
+    rs = r @ r
+    for _ in range(200):
+        ap = ops.spmv(h, p, use_pallas=False)
+        alpha = rs / (p @ ap)
+        x = x + alpha * p
+        r = r - alpha * ap
+        rs_new = r @ r
+        if float(rs_new) < 1e-10:     # converged (f32: avoid 0/0 breakdown)
+            break
+        p = r + (rs_new / rs) * p
+        rs = rs_new
+    res = np.linalg.norm(a @ np.asarray(x) - b) / np.linalg.norm(b)
+    assert res < 1e-3, res
+
+
+def test_e2e_train_then_serve():
+    """Train a tiny LM for 30 steps, then greedy-decode from it."""
+    cfg = get_smoke_config("yi-6b")
+    shape = ShapeConfig("t", 32, 4, "train")
+    params = MD.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(cfg, AdamWConfig(lr=3e-3), None))
+    out = train_loop(step, params, opt, cfg, shape,
+                     TrainLoopConfig(steps=30, log_every=10),
+                     log_fn=lambda *a: None)
+    losses = [h["loss"] for h in out["history"]]
+    assert losses[-1] < losses[0]
+
+    params = out["params"]
+    B, S = 2, 16
+    cache = MD.init_cache(cfg, B, S)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    dstep = jax.jit(lambda p, c, t, pos: MD.decode_step(p, c, t, pos, cfg))
+    toks = []
+    for t in range(S):
+        logits, cache = dstep(params, cache, tok, jnp.asarray(t))
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        toks.append(np.asarray(tok))
+    toks = np.concatenate(toks, axis=1)
+    assert toks.shape == (B, S)
+    assert (toks >= 0).all() and (toks < cfg.vocab).all()
+
+
+def test_e2e_sparse_ffn_in_model():
+    """SPC5 SparseLinear as an LM FFN: pruned dense FFN == SparseLinear."""
+    rng = np.random.default_rng(1)
+    d, f = 64, 128
+    w_in = rng.standard_normal((f, d)).astype(np.float32)
+    w_out = rng.standard_normal((d, f)).astype(np.float32)
+    sl_in = SparseLinear.from_dense(w_in, density=0.3)
+    sl_out = SparseLinear.from_dense(w_out, density=0.3)
+
+    from repro.core.sparse_linear import prune_by_magnitude
+    wi = prune_by_magnitude(w_in, 0.3)
+    wo = prune_by_magnitude(w_out, 0.3)
+
+    x = rng.standard_normal((4, 10, d)).astype(np.float32)
+
+    @jax.jit
+    def sparse_ffn(layers, x):
+        sin, sout = layers
+        return sout(jax.nn.silu(sin(x)))
+
+    got = np.asarray(sparse_ffn((sl_in, sl_out), jnp.asarray(x)))
+    ref = jax.nn.silu(x @ wi.T) @ wo.T
+    np.testing.assert_allclose(got, np.asarray(ref), atol=1e-3)
+
+
+def test_e2e_selector_drives_format_choice():
+    """Record store built from one matrix family transfers to another."""
+    from repro.core.selector import RecordStore, select_kernel
+    store = RecordStore()
+    # seed records with a plausible performance law: throughput grows with
+    # fill, large blocks win when well-filled
+    for k, (r, c) in [("1x8", (1, 8)), ("4x4", (4, 4)), ("4x8", (4, 8))]:
+        for avg in [1, 2, 4, 8, 16]:
+            eff = min(1.0, avg / (r * c))
+            store.add(k, avg, 1, 2.0 * eff * (r * c) ** 0.3)
+    dense_csr = matgen.dense(96, seed=2)
+    best_dense, _, _ = select_kernel(dense_csr, store, workers=1,
+                                     kernels=("1x8", "4x4", "4x8"))
+    sparse_csr = matgen.uniform_random(400, 4, seed=3)
+    best_sparse, _, _ = select_kernel(sparse_csr, store, workers=1,
+                                      kernels=("1x8", "4x4", "4x8"))
+    assert best_dense == "4x8"      # fully-filled blocks: biggest wins
+    assert best_sparse == "1x8"     # scattered: smallest wins

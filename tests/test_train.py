@@ -1,0 +1,205 @@
+"""Training substrate: loop, checkpoint/resume, optimizer, data pipeline."""
+import os
+import signal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.configs import get_smoke_config
+from repro.data.synthetic import SyntheticLM
+from repro.models import model as MD
+from repro.models.config import ShapeConfig
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedule import cosine_schedule
+from repro.optim.compress import dequantize, quantize
+from repro.train import TrainLoopConfig, train_loop
+from repro.train.step import make_train_step
+
+
+def test_adamw_against_reference():
+    """One AdamW step vs a hand-rolled numpy reference."""
+    rng = np.random.default_rng(0)
+    p = {"w": jnp.asarray(rng.standard_normal((4, 3)), jnp.float32)}
+    g = {"w": jnp.asarray(rng.standard_normal((4, 3)), jnp.float32)}
+    cfg = AdamWConfig(lr=0.1, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.0,
+                      clip_norm=1e9)
+    st = adamw_init(p)
+    new_p, new_st, _ = adamw_update(p, g, st, cfg)
+    gm = np.asarray(g["w"])
+    m = 0.1 * gm
+    v = 0.05 * gm * gm
+    mh, vh = m / 0.1, v / 0.05
+    ref = np.asarray(p["w"]) - 0.1 * mh / (np.sqrt(vh) + 1e-8)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), ref, atol=1e-5)
+    assert int(new_st["step"]) == 1
+
+
+def test_adamw_clipping():
+    p = {"w": jnp.ones((2, 2), jnp.float32)}
+    g = {"w": jnp.full((2, 2), 100.0, jnp.float32)}
+    cfg = AdamWConfig(lr=1.0, clip_norm=1.0, weight_decay=0.0)
+    _, _, metrics = adamw_update(p, g, adamw_init(p), cfg)
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0, rel=1e-4)
+
+
+def test_cosine_schedule():
+    lr = cosine_schedule(1.0, warmup=10, total=110, floor_frac=0.1)
+    assert float(lr(jnp.asarray(0))) == pytest.approx(0.0)
+    assert float(lr(jnp.asarray(5))) == pytest.approx(0.5)
+    assert float(lr(jnp.asarray(10))) == pytest.approx(1.0, rel=1e-3)
+    assert float(lr(jnp.asarray(110))) == pytest.approx(0.1, rel=1e-3)
+
+
+def test_quantize_roundtrip_error():
+    rng = np.random.default_rng(1)
+    g = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)
+    q, s = quantize(g)
+    back = dequantize(q, s)
+    assert float(jnp.abs(back - g).max()) <= float(s.max()) * 1.01
+
+
+def test_data_pipeline_deterministic_and_shifted():
+    cfg = get_smoke_config("yi-6b")
+    d1 = SyntheticLM(cfg, 32, 4, seed=7)
+    d2 = SyntheticLM(cfg, 32, 4, seed=7)
+    b1, b2 = d1.batch(13), d2.batch(13)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # labels are next-token shifted with -1 tail
+    np.testing.assert_array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
+    assert (b1["labels"][:, -1] == -1).all()
+    # different steps differ
+    assert not np.array_equal(d1.batch(14)["tokens"], b1["tokens"])
+
+
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    d = str(tmp_path)
+    tree = {"a": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "b": {"c": np.ones((4,), np.int32)}}
+    for s in [10, 20, 30, 40]:
+        save_checkpoint(d, s, tree, keep_last=2)
+    assert latest_step(d) == 40
+    assert sorted(os.listdir(d)) == ["step_00000030", "step_00000040"]
+    got = restore_checkpoint(d, 40, tree)
+    np.testing.assert_array_equal(got["a"], tree["a"])
+    np.testing.assert_array_equal(got["b"]["c"], tree["b"]["c"])
+
+
+def test_checkpoint_incomplete_ignored(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 5, {"x": np.zeros(3)})
+    # a torn write: directory without valid manifest
+    os.makedirs(os.path.join(d, "step_00000009"))
+    assert latest_step(d) == 5
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, {"x": np.zeros((3,))})
+    with pytest.raises(ValueError, match="shape mismatch"):
+        restore_checkpoint(d, 1, {"x": np.zeros((4,))})
+
+
+def _tiny_setup(steps=12, ckpt_dir=""):
+    cfg = get_smoke_config("gemma-2b")
+    shape = ShapeConfig("t", 32, 4, "train")
+    params = MD.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(cfg, AdamWConfig(lr=3e-3), None))
+    loop_cfg = TrainLoopConfig(steps=steps, ckpt_dir=ckpt_dir, ckpt_every=5,
+                               log_every=100)
+    return cfg, shape, params, opt, step, loop_cfg
+
+
+def test_train_loop_loss_decreases(tmp_path):
+    cfg, shape, params, opt, step, loop_cfg = _tiny_setup(steps=25)
+    out = train_loop(step, params, opt, cfg, shape, loop_cfg,
+                     log_fn=lambda *a: None)
+    losses = [h["loss"] for h in out["history"]]
+    assert losses[-1] < losses[0]
+    assert np.isfinite(losses[-1])
+
+
+def test_train_loop_resume_exact(tmp_path):
+    d = str(tmp_path / "ck")
+    # run 1: 10 steps with checkpointing
+    cfg, shape, params, opt, step, loop_cfg = _tiny_setup(
+        steps=10, ckpt_dir=d)
+    out1 = train_loop(step, params, opt, cfg, shape, loop_cfg,
+                      log_fn=lambda *a: None)
+    assert latest_step(d) == 10
+    # run 2: "restart" -- asks for 14 steps, resumes at 10
+    cfg, shape, params2, opt2, step, loop_cfg = _tiny_setup(
+        steps=14, ckpt_dir=d)
+    logs = []
+    out2 = train_loop(step, params2, opt2, cfg, shape, loop_cfg,
+                      log_fn=logs.append)
+    assert any("resume" in str(l) for l in logs)
+    # continued training from the restored state: params differ from run 1
+    a = jax.tree.leaves(out1["params"])[0]
+    b = jax.tree.leaves(out2["params"])[0]
+    assert not np.allclose(np.asarray(a), np.asarray(b))
+
+
+def test_train_loop_accum_equivalence():
+    """accum_steps=2 must match accum=1 on the same global batch (up to
+    numerical noise from the loss averaging)."""
+    cfg = get_smoke_config("yi-6b")
+    shape = ShapeConfig("t", 32, 4, "train")
+    params = MD.init_params(cfg, jax.random.PRNGKey(0))
+    data = SyntheticLM(cfg, 32, 4)
+    batch = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+    opt = adamw_init(params)
+    s1 = jax.jit(make_train_step(cfg, AdamWConfig(lr=1e-3), None,
+                                 accum_steps=1))
+    s2 = jax.jit(make_train_step(cfg, AdamWConfig(lr=1e-3), None,
+                                 accum_steps=2))
+    p1, _, m1 = s1(params, opt, batch)
+    p2, _, m2 = s2(params, opt, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-3)
+    l1 = np.asarray(jax.tree.leaves(p1)[0])
+    l2 = np.asarray(jax.tree.leaves(p2)[0])
+    np.testing.assert_allclose(l1, l2, atol=5e-3)
+
+
+def test_elastic_restore_across_meshes(devices8=None):
+    """A checkpoint written on one 'mesh' restores onto another: the ckpt
+    stores logical (full) arrays, so resharding is the loader's job --
+    exercised here by round-tripping through the host and re-device_put."""
+    import jax
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    tree = {"w": np.arange(64, dtype=np.float32).reshape(8, 8)}
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, tree)
+        got = restore_checkpoint(d, 1, tree)
+        # "new mesh": single device here, but the put path is identical
+        mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1,), ("data",))
+        sharded = jax.device_put(
+            got["w"], NamedSharding(mesh, P(None, None)))
+        np.testing.assert_array_equal(np.asarray(sharded), tree["w"])
+
+
+def test_watchdog_counts_stragglers():
+    from repro.train.loop import TrainLoopConfig
+    import time as _time
+    cfg = get_smoke_config("gemma-2b")
+    shape = ShapeConfig("t", 16, 2, "train")
+    params = MD.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    base = jax.jit(make_train_step(cfg, AdamWConfig(lr=1e-3), None))
+    calls = {"n": 0}
+
+    def slow_step(p, o, b):
+        calls["n"] += 1
+        if calls["n"] == 9:
+            _time.sleep(1.0)      # inject a straggler step
+        return base(p, o, b)
+
+    loop_cfg = TrainLoopConfig(steps=10, log_every=100,
+                               straggler_tolerance=3.0)
+    out = train_loop(slow_step, params, opt, cfg, shape, loop_cfg,
+                     log_fn=lambda *a: None)
+    assert out["stragglers"] >= 1
