@@ -24,18 +24,24 @@ for name in names:
     csr = matgen.SET_A[name]()
     mat = F.csr_to_spc5(csr, 1, 8)
     mesh = Mesh(np.array(jax.devices()).reshape(8,), ("data",))
-    sh = D.shard_matrix(mat, 8, cb=512, mesh=mesh)
-    run = D.make_distributed_spmv(sh, mesh)
     x = jnp.asarray(np.random.default_rng(0).standard_normal(csr.shape[1]),
                     jnp.float32)
-    run(x).block_until_ready()
-    t0 = time.perf_counter()
-    for _ in range(8):
-        y = run(x)
-    y.block_until_ready()
-    t = (time.perf_counter() - t0) / 8
-    gf = 2.0 * csr.nnz / t / 1e9
-    print(f"spmv_par.{name}.1x8_dev8,{t*1e6:.1f},gflops={gf:.3f}")
+    # pr sweep: None == flat whole-vector shards, else per-device row panels
+    # (cb: 512 tuned for flat shards; panels keep their layout default of 64
+    # so the numbers are comparable with bench_spmv_seq's panel rows)
+    for pr in (None, 1024):
+        sh = D.shard_matrix(mat, 8, cb=512 if pr is None else None,
+                            mesh=mesh, pr=pr)
+        run = D.make_distributed_spmv(sh, mesh)
+        run(x).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(8):
+            y = run(x)
+        y.block_until_ready()
+        t = (time.perf_counter() - t0) / 8
+        gf = 2.0 * csr.nnz / t / 1e9
+        tag = "" if pr is None else f"_pr{pr}"
+        print(f"spmv_par.{name}.1x8_dev8{tag},{t*1e6:.1f},gflops={gf:.3f}")
 """
 
 

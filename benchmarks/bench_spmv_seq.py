@@ -22,6 +22,12 @@ from repro.kernels import ops
 
 KERNELS = [(1, 8), (2, 4), (2, 8), (4, 4), (4, 8), (8, 4)]
 
+# Row-panel heights for the panel-tiled layout sweep (pr=0 rows, i.e. the
+# whole-vector layout, is benched implicitly by the main loop). Records are
+# tagged with pr so the selector can distinguish the layouts.
+PANEL_PRS = (512, 2048)
+PANEL_XW = 2048
+
 
 @functools.partial(jax.jit, static_argnames=("nrows",))
 def csr_spmv(rowlen_rows, colidx, values, x, *, nrows):
@@ -56,7 +62,7 @@ def bench_matrix(name: str, csr, store: Optional[RecordStore] = None,
     lines.append(f"spmv_seq.{name}.csr,{t*1e6:.1f},gflops={gf_csr:.3f}")
     for rc in KERNELS:
         mat = F.csr_to_spc5(csr, *rc)
-        h = ops.prepare(mat, cb=512, dtype=np.float32)
+        h = ops.prepare(mat, cb=512, dtype=np.float32, layout="whole")
         t = time_fn(lambda: ops.spmv(h, x, use_pallas=False))
         gf = flops / t / 1e9
         kname = f"{rc[0]}x{rc[1]}"
@@ -64,6 +70,18 @@ def bench_matrix(name: str, csr, store: Optional[RecordStore] = None,
                      f"gflops={gf:.3f};speedup_vs_csr={gf/gf_csr:.2f}")
         if store is not None:
             store.add(kname, mat.avg_nnz_per_block, workers, gf, matrix=name)
+        # row-panel-tiled layout sweep (bounded-VMEM path)
+        for pr in PANEL_PRS:
+            hp = ops.prepare_panels(mat, pr=pr, cb=64, xw=PANEL_XW,
+                                    dtype=np.float32)
+            tp = time_fn(lambda: ops.spmv(hp, x, use_pallas=False))
+            gfp = flops / tp / 1e9
+            lines.append(
+                f"spmv_seq.{name}.{kname}_pr{pr},{tp*1e6:.1f},"
+                f"gflops={gfp:.3f};panels={hp.npanels};chunks={hp.nchunks}")
+            if store is not None:
+                store.add(kname, mat.avg_nnz_per_block, workers, gfp,
+                          matrix=name, pr=pr)
         # paper's beta(r,c)_test variants for the small blocks
         if rc in ((1, 8), (2, 4)):
             ht = ops.prepare_test(mat, cb=512, dtype=np.float32)

@@ -1,0 +1,11 @@
+"""Single import point for hypothesis with the deterministic fallback.
+
+Tests do ``from repro._compat.hypothesis import given, settings, strategies``
+and get real hypothesis when it is installed (declared in pyproject's test
+extra), else the shim in :mod:`repro._compat.hypothesis_fallback`.
+"""
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+except ImportError:  # hermetic container: deterministic fallback shim
+    from repro._compat.hypothesis_fallback import (  # noqa: F401
+        given, settings, strategies)

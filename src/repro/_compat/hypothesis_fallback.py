@@ -1,0 +1,85 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The property tests in this repo use a small, fixed subset of the hypothesis
+API: ``@settings(max_examples=..., deadline=...)``, ``@given(**strategies)``,
+and the ``integers`` / ``floats`` / ``sampled_from`` strategies. Real
+hypothesis (declared in ``pyproject.toml``'s test extra) is preferred when
+importable; this fallback keeps the suite collectable and meaningful in
+hermetic containers where installing packages is not allowed.
+
+The fallback is deliberately simple: each test runs ``max_examples`` times
+with draws from a deterministically seeded PRNG (no shrinking, no example
+database). Failures therefore reproduce exactly across runs.
+"""
+from __future__ import annotations
+
+import random
+import types
+
+_SEED = 0x5BC5  # fixed: property tests must be reproducible
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_from(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def _integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def _floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def _sampled_from(elements) -> _Strategy:
+    seq = list(elements)
+    return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+
+def _booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+strategies = types.SimpleNamespace(
+    integers=_integers,
+    floats=_floats,
+    sampled_from=_sampled_from,
+    booleans=_booleans,
+)
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+def given(**strategy_kwargs):
+    def decorate(fn):
+        # NOT functools.wraps: pytest must see a zero-arg signature, or it
+        # would treat the strategy parameters as fixtures.
+        def wrapper():
+            rng = random.Random(_SEED)
+            n = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+            for _ in range(n):
+                draw = {k: s.example_from(rng)
+                        for k, s in strategy_kwargs.items()}
+                fn(**draw)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper._max_examples = _DEFAULT_MAX_EXAMPLES
+        wrapper.hypothesis_fallback = True
+        return wrapper
+
+    return decorate
+
+
+def settings(max_examples: int = None, deadline=None, **_ignored):
+    def decorate(fn):
+        if max_examples is not None:
+            fn._max_examples = max_examples
+        return fn
+
+    return decorate

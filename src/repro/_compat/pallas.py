@@ -1,0 +1,5 @@
+"""Version-compat aliases for jax.experimental.pallas.tpu symbols."""
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams across versions
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

@@ -102,30 +102,42 @@ class HloCost:
 
 
 def _split_operands(arg_str: str) -> List[str]:
-    """Operand names from 'dot(%a, %b), attrs...' -- first level parens."""
+    """Operand names from the text following ``kind(`` in an HLO op line.
+
+    ``arg_str`` starts just after the op's opening paren, so its argument
+    list closes at the first ``)`` seen at depth 0. Depth tracks ALL of
+    ``()[]{}`` so commas inside type annotations (``f32[64,128]{1,0}``) and
+    tuple types never split an operand -- only depth-0 commas do.
+    """
     depth = 0
     out, cur = [], []
     for ch in arg_str:
-        if ch == "(":
+        if ch in "([{":
             depth += 1
-            if depth == 1:
-                continue
-        if ch == ")":
+            cur.append(ch)
+            continue
+        if ch in ")]}":
+            if ch == ")" and depth == 0:
+                break  # closing paren of the argument list
             depth -= 1
-            if depth == 0:
-                break
-        if depth >= 1 or True:
-            if ch == "," and depth <= 1:
-                out.append("".join(cur).strip())
-                cur = []
-            else:
-                cur.append(ch)
-    if cur:
+            cur.append(ch)
+            continue
+        if ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur and "".join(cur).strip():
         out.append("".join(cur).strip())
     names = []
     for tok in out:
         m = re.search(r"%([\w.\-]+)", tok)
-        names.append(m.group(1) if m else tok)
+        if m:
+            names.append(m.group(1))
+        else:
+            # HLO without % sigils: the operand name is the last word
+            words = tok.split()
+            names.append(words[-1] if words else tok)
     return names
 
 
@@ -362,7 +374,9 @@ def _comp_cost(cname: str, comps, memo) -> HloCost:
             continue
         # generic op at fusion boundary (copy, convert, reduce, ...)
         cost.hbm_bytes += _op_hbm(op, symbols)
-        if k in ("reduce", "convolution", "cholesky", "triangular-solve"):
+        # flops stays dot-only for exactness: reductions are O(n) adds that
+        # fuse on TPU and would otherwise pollute the roofline numerator
+        if k in ("convolution", "cholesky", "triangular-solve"):
             cost.flops += _nbytes(op.shapes) / 2.0  # minor terms
     memo[cname] = cost
     return cost
@@ -373,3 +387,15 @@ def analyze_hlo(text: str) -> HloCost:
     # computations reachable only as fusion bodies must not be double counted:
     # we start from the entry and recurse through while/call/fusion edges.
     return _comp_cost(entry, comps, {})
+
+
+def xla_cost_analysis(compiled) -> Dict[str, float]:
+    """Normalized ``compiled.cost_analysis()``.
+
+    jax <= 0.4.30 returns a list with one properties-dict per program;
+    newer versions return the dict directly. Callers always want the dict.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca

@@ -57,10 +57,113 @@ class ShardedSPC5:
         return self.chunk_col.shape[0]
 
 
-def shard_matrix(mat: F.SPC5Matrix, ndev: int, cb: int = 256,
+@dataclasses.dataclass(frozen=True)
+class ShardedSPC5Panels:
+    """Stacked per-device row-panel-tiled arrays, leading dim == n_devices.
+
+    Per-device panels compose with row sharding: each device owns a
+    contiguous row slab (block-balanced, as the flat layout) and tiles it
+    into its own (npanels, nchunks) grid, so local VMEM per grid step stays
+    ``pr + xw + vmax`` elements however large the global matrix is. Panel
+    and chunk counts are padded to the max across shards (padding chunks
+    have mask==0).
+    """
+
+    values: jax.Array       # (ndev, nvals_max)
+    chunk_col: jax.Array    # (ndev, npan_max, nch_max, cb)
+    chunk_mask: jax.Array   # (ndev, npan_max, nch_max, cb)
+    chunk_voff: jax.Array   # (ndev, npan_max, nch_max, cb)
+    chunk_row: jax.Array    # (ndev, npan_max, nch_max, cb) panel-relative
+    chunk_vbase: jax.Array  # (ndev, npan_max, nch_max)
+    chunk_xbase: jax.Array  # (ndev, npan_max, nch_max)
+    row_start: jax.Array    # (ndev,) global first row of the shard
+    r: int
+    c: int
+    pr: int
+    cb: int
+    xw: int
+    vmax: int
+    rows_max: int           # npan_max * pr (uniform padded local y length)
+    nrows: int
+    ncols: int
+    ncols_pad: int
+    nnz: int
+
+    @property
+    def ndev(self) -> int:
+        return self.chunk_col.shape[0]
+
+
+def shard_matrix_panels(mat: F.SPC5Matrix, ndev: int, pr: int = 512,
+                        cb: int = 64, xw: int = 512,
+                        mesh: Optional[Mesh] = None, axis: str = "data",
+                        dtype=None) -> ShardedSPC5Panels:
+    """Row-shard + panel-tile each shard + stack (+ device_put)."""
+    parts = partition_matrix(mat, ndev)
+    row_starts = partition_row_starts(mat, ndev)
+    pans = [F.to_panels(p, pr=pr, cb=cb, xw=xw) for p in parts]
+    pr = pans[0].pr                        # normalised to a multiple of r
+    npan = max(p.npanels for p in pans)
+    nch = max(p.nchunks for p in pans)
+    vmax = max(p.vmax for p in pans)
+    nvals = max(int(p.chunk_vbase.max()) + vmax for p in pans)
+    ncols_pad = max(p.ncols_pad for p in pans)
+
+    def pad3(a, fill=0):   # (npanels, nchunks, cb) -> (npan, nch, cb)
+        return np.pad(a, ((0, npan - a.shape[0]), (0, nch - a.shape[1]),
+                          (0, 0)), constant_values=fill)
+
+    def pad2(a):           # (npanels, nchunks) -> (npan, nch)
+        return np.pad(a, ((0, npan - a.shape[0]), (0, nch - a.shape[1])))
+
+    dt = dtype or mat.values.dtype
+    stacked = ShardedSPC5Panels(
+        values=jnp.asarray(np.stack([
+            np.pad(p.values, (0, nvals - p.values.shape[0]))
+            for p in pans]).astype(dt)),
+        chunk_col=jnp.asarray(np.stack([pad3(p.chunk_col) for p in pans])),
+        chunk_mask=jnp.asarray(np.stack([pad3(p.chunk_mask).astype(np.int32)
+                                         for p in pans])),
+        chunk_voff=jnp.asarray(np.stack([pad3(p.chunk_voff) for p in pans])),
+        chunk_row=jnp.asarray(np.stack([pad3(p.chunk_row) for p in pans])),
+        chunk_vbase=jnp.asarray(np.stack([pad2(p.chunk_vbase) for p in pans])),
+        chunk_xbase=jnp.asarray(np.stack([pad2(p.chunk_xbase) for p in pans])),
+        row_start=jnp.asarray(row_starts),
+        r=mat.r, c=mat.c, pr=pr, cb=pans[0].cb, xw=pans[0].xw, vmax=vmax,
+        rows_max=npan * pr, nrows=mat.shape[0], ncols=mat.shape[1],
+        ncols_pad=ncols_pad, nnz=mat.nnz,
+    )
+    if mesh is not None:
+        spec = P(axis)
+        put = lambda a: jax.device_put(a, NamedSharding(mesh, spec))
+        stacked = dataclasses.replace(
+            stacked,
+            values=put(stacked.values), chunk_col=put(stacked.chunk_col),
+            chunk_mask=put(stacked.chunk_mask),
+            chunk_voff=put(stacked.chunk_voff),
+            chunk_row=put(stacked.chunk_row),
+            chunk_vbase=put(stacked.chunk_vbase),
+            chunk_xbase=put(stacked.chunk_xbase),
+            row_start=put(stacked.row_start))
+    return stacked
+
+
+def shard_matrix(mat: F.SPC5Matrix, ndev: int, cb: Optional[int] = None,
                  mesh: Optional[Mesh] = None, axis: str = "data",
-                 dtype=None) -> ShardedSPC5:
-    """Partition + chunk + stack + (optionally) device_put with sharding."""
+                 dtype=None, pr: Optional[int] = None, xw: int = 512):
+    """Partition + chunk + stack + (optionally) device_put with sharding.
+
+    ``pr=None`` keeps the flat whole-vector per-device layout; passing a
+    panel height returns :class:`ShardedSPC5Panels` instead (row sharding
+    composed with per-device row-panel tiling). ``cb=None`` uses the
+    layout's default chunk size (256 flat, 64 panels); an explicit ``cb``
+    is honored as-is.
+    """
+    if pr is not None:
+        return shard_matrix_panels(mat, ndev, pr=pr,
+                                   cb=64 if cb is None else cb, xw=xw,
+                                   mesh=mesh, axis=axis, dtype=dtype)
+    cb = 256 if cb is None else cb
     parts = partition_matrix(mat, ndev)
     row_starts = partition_row_starts(mat, ndev)
     chunked = [F.to_chunked(p, cb=cb) for p in parts]
@@ -108,22 +211,32 @@ def _local_spmv(sh: ShardedSPC5, values, col, mask, voff, row, vbase, x):
     return R.spmv(dev, x, r=sh.r, c=sh.c, nrows=sh.rows_max, ncols=sh.ncols)
 
 
-def make_distributed_spmv(sh: ShardedSPC5, mesh: Mesh, axis: str = "data",
+def _local_spmv_panels(sh: ShardedSPC5Panels, values, col, mask, voff, row,
+                       vbase, xbase, x):
+    dev = R.SPC5PanelDevice(values=values, chunk_col=col, chunk_mask=mask,
+                            chunk_voff=voff, chunk_row=row, chunk_vbase=vbase,
+                            chunk_xbase=xbase)
+    return R.spmv_panels(dev, x, r=sh.r, c=sh.c, pr=sh.pr, nrows=sh.rows_max,
+                         ncols_pad=sh.ncols_pad)
+
+
+def make_distributed_spmv(sh, mesh: Mesh, axis: str = "data",
                           gather: bool = True):
     """Build a jit'd y = A @ x over the mesh.
 
-    With gather=True the result is the full replicated y (one all_gather at
-    the end -- the only collective; the paper's no-sync merge). With
-    gather=False the caller keeps the row-slab layout (ndev, rows_max),
-    sharded over ``axis``, e.g. to chain into an operator that consumes
-    row-sharded activations with zero collectives.
+    ``sh`` is :class:`ShardedSPC5` (flat per-device layout) or
+    :class:`ShardedSPC5Panels` (row sharding composed with per-device
+    row-panel tiling). With gather=True the result is the full replicated y
+    (one all_gather at the end -- the only collective; the paper's no-sync
+    merge). With gather=False the caller keeps the row-slab layout
+    (ndev, rows_max), sharded over ``axis``, e.g. to chain into an operator
+    that consumes row-sharded activations with zero collectives.
     """
     from jax.experimental.shard_map import shard_map
 
-    def body(values, col, mask, voff, row, vbase, row_start, x):
-        # squeeze leading shard dim
-        y_loc = _local_spmv(sh, values[0], col[0], mask[0], voff[0], row[0],
-                            vbase[0], x)
+    panels = isinstance(sh, ShardedSPC5Panels)
+
+    def finish(y_loc, row_start):
         if not gather:
             return y_loc[None]
         ys = jax.lax.all_gather(y_loc, axis)               # (ndev, rows_max)
@@ -135,14 +248,31 @@ def make_distributed_spmv(sh: ShardedSPC5, mesh: Mesh, axis: str = "data",
         y = y.at[idx.reshape(-1)].add(ys.reshape(-1))
         return y[:sh.nrows]
 
-    in_specs = (P(axis), P(axis), P(axis), P(axis), P(axis), P(axis), P(axis),
-                P())
+    if panels:
+        def body(values, col, mask, voff, row, vbase, xbase, row_start, x):
+            y_loc = _local_spmv_panels(sh, values[0], col[0], mask[0],
+                                       voff[0], row[0], vbase[0], xbase[0], x)
+            return finish(y_loc, row_start)
+
+        in_specs = (P(axis),) * 8 + (P(),)
+    else:
+        def body(values, col, mask, voff, row, vbase, row_start, x):
+            y_loc = _local_spmv(sh, values[0], col[0], mask[0], voff[0],
+                                row[0], vbase[0], x)
+            return finish(y_loc, row_start)
+
+        in_specs = (P(axis),) * 7 + (P(),)
+
     out_specs = P() if gather else P(axis)
     fn = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                    check_rep=False)
 
     @jax.jit
     def run(x):
+        if panels:
+            return fn(sh.values, sh.chunk_col, sh.chunk_mask, sh.chunk_voff,
+                      sh.chunk_row, sh.chunk_vbase, sh.chunk_xbase,
+                      sh.row_start, x)
         return fn(sh.values, sh.chunk_col, sh.chunk_mask, sh.chunk_voff,
                   sh.chunk_row, sh.chunk_vbase, sh.row_start, x)
 

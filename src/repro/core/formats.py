@@ -18,6 +18,17 @@ We additionally precompute ``block_voffset`` (exclusive prefix popcount of the
 masks) so kernels can address a block's values in O(1); this is derived data,
 not extra storage semantics (the paper's asm kernel tracks the same quantity
 in a register as it streams blocks).
+
+Two device-facing layouts are derived from :class:`SPC5Matrix`:
+
+  * :func:`to_chunked` -> :class:`SPC5Chunked`: flat chunks of CB blocks,
+    consumed by the whole-vector kernels (x/y fully VMEM-resident; grid
+    ``(nchunks,)``). Fastest when ``nrows + ncols`` fits the VMEM budget.
+  * :func:`to_panels` -> :class:`SPC5Panels`: row-panel-tiled chunks for the
+    2-D-grid kernels (``(npanels, nchunks)``); VMEM per grid step is
+    ``pr + xw + vmax`` elements regardless of matrix size, lifting the
+    whole-vector ceiling. ``repro.kernels.ops.prepare`` selects between the
+    two automatically (:func:`repro.kernels.ops.fits_whole_vector`).
 """
 from __future__ import annotations
 
@@ -393,6 +404,185 @@ class SPC5Chunked:
     @property
     def ncols(self) -> int:
         return self.shape[1]
+
+
+# ----------------------------------------------------------------------------
+# Row-panel-tiled device layout (2-D grid: panels x chunks)
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SPC5Panels:
+    """Row-panel-tiled chunked layout for the 2-D-grid Pallas kernels.
+
+    The whole-vector :class:`SPC5Chunked` layout needs all of ``x`` (ncols)
+    and ``y`` (nrows) VMEM-resident, which caps matrix size at a few hundred
+    thousand rows. This layout lifts that ceiling:
+
+      * rows are cut into panels of ``pr`` rows (``pr`` a multiple of ``r``,
+        so the r-row-aligned blocks NEVER straddle a panel boundary);
+      * within a panel, blocks are sorted by left column and greedily packed
+        into chunks of at most ``cb`` blocks whose columns all fall inside
+        one ``xw``-wide window of ``x`` (``chunk_xbase`` is the window start,
+        aligned down to ``align``);
+      * a kernel grid step ``(panel, chunk)`` therefore touches only a
+        ``(pr,)`` slice of ``y`` (accumulated in VMEM, written once per
+        panel) and one ``(xw,)`` window of ``x`` (DMA'd like the values
+        window) -- VMEM per step is ``pr + xw + vmax`` elements regardless
+        of matrix size;
+      * ``chunk_row`` is panel-relative (in ``[0, pr - r]``) and
+        ``chunk_col`` window-relative (in ``[0, xw - c]``), so the kernel
+        scatters/gathers with small bounded indices;
+      * ``values`` stays packed with only chunk-alignment padding, exactly
+        as in the flat layout -- the paper's no-zero-padding property is
+        untouched; per-panel column sorting only permutes whole blocks.
+
+    Chunk counts are padded to the per-panel maximum so the grid is uniform;
+    padding chunks have ``mask == 0`` and contribute nothing. ``x`` must be
+    padded to ``ncols_pad`` so every window load stays in bounds (the ops
+    wrapper does this).
+    """
+
+    shape: Tuple[int, int]
+    r: int
+    c: int
+    pr: int                  # panel height in rows, multiple of r
+    cb: int                  # blocks per chunk
+    xw: int                  # x-window width per chunk, multiple of align
+    vmax: int                # values per chunk window (static tile size)
+    npanels: int
+    nchunks: int             # chunks per panel (uniform, padded)
+    ncols_pad: int           # pad x to this length for in-bounds windows
+    chunk_col: np.ndarray    # int32 (npanels, nchunks, cb)  window-relative
+    chunk_mask: np.ndarray   # uint32 (npanels, nchunks, cb) 0 => padding
+    chunk_voff: np.ndarray   # int32 (npanels, nchunks, cb)  offset in window
+    chunk_row: np.ndarray    # int32 (npanels, nchunks, cb)  panel-relative
+    chunk_vbase: np.ndarray  # int32 (npanels, nchunks)      into values
+    chunk_xbase: np.ndarray  # int32 (npanels, nchunks)      x window start
+    values: np.ndarray       # float (nvals_padded,)
+    nnz: int
+
+    @property
+    def nrows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def ncols(self) -> int:
+        return self.shape[1]
+
+
+def to_panels(mat: SPC5Matrix, pr: int = 512, cb: int = 64, xw: int = 512,
+              align: int = 8) -> SPC5Panels:
+    """Convert beta(r,c) to the row-panel-tiled layout (see SPC5Panels).
+
+    The only per-element Python loop is over CHUNKS (boundary discovery via
+    searchsorted); block/value assembly is vectorized, so conversion stays
+    fast on million-nnz matrices.
+    """
+    r, c = mat.r, mat.c
+    nrows, ncols = mat.shape
+    pr = max(r, -(-pr // r) * r)                 # multiple of r
+    # a window must hold one block wherever it lands after aligning down
+    xw = max(xw, c + align)
+    xw = -(-xw // align) * align
+    npanels = max(1, -(-nrows // pr))
+    intervals_per_panel = pr // r
+    n_intervals = mat.block_rowptr.shape[0] - 1
+    pop = popcount_u32(mat.block_masks).astype(np.int64)
+    interval_of_block = np.repeat(
+        np.arange(n_intervals, dtype=np.int64), np.diff(mat.block_rowptr))
+
+    # -- pass 1: per panel, column-sort blocks and find chunk boundaries
+    panels = []          # (order, chunk_starts, xbases, nb) per panel
+    for p in range(npanels):
+        it0 = min(p * intervals_per_panel, n_intervals)
+        it1 = min((p + 1) * intervals_per_panel, n_intervals)
+        b0, b1 = int(mat.block_rowptr[it0]), int(mat.block_rowptr[it1])
+        nb = b1 - b0
+        if nb == 0:
+            panels.append(None)
+            continue
+        cols = mat.block_colidx[b0:b1].astype(np.int64)
+        ivl = interval_of_block[b0:b1]
+        order = np.lexsort((ivl, cols)) + b0     # by column, then interval
+        scols = mat.block_colidx[order].astype(np.int64)
+        starts, xbases = [], []
+        s = 0
+        while s < nb:
+            xbase = (int(scols[s]) // align) * align
+            e = min(s + cb, int(np.searchsorted(scols, xbase + xw - c,
+                                                side="right")))
+            starts.append(s)
+            xbases.append(xbase)
+            s = e
+        panels.append((order, np.asarray(starts, dtype=np.int64),
+                       np.asarray(xbases, dtype=np.int64), nb))
+
+    nchunks = max(1, max((len(pp[1]) for pp in panels if pp is not None),
+                         default=1))
+    chunk_col = np.zeros((npanels, nchunks, cb), dtype=np.int32)
+    chunk_mask = np.zeros((npanels, nchunks, cb), dtype=np.uint32)
+    chunk_voff = np.zeros((npanels, nchunks, cb), dtype=np.int32)
+    chunk_row = np.zeros((npanels, nchunks, cb), dtype=np.int32)
+    chunk_vbase = np.zeros((npanels, nchunks), dtype=np.int32)
+    chunk_xbase = np.zeros((npanels, nchunks), dtype=np.int32)
+
+    # -- pass 2: vectorized per-panel assembly
+    per_panel = []       # deferred value scatters: (dst_base-less data)
+    vmax = 0
+    ncols_pad = xw
+    for p, pp in enumerate(panels):
+        if pp is None:
+            continue
+        order, starts, xbases, nb = pp
+        nch_p = starts.shape[0]
+        sizes = np.diff(np.append(starts, nb))
+        chunk_of = np.repeat(np.arange(nch_p, dtype=np.int64), sizes)
+        slot = np.arange(nb, dtype=np.int64) - np.repeat(starts, sizes)
+        lens = pop[order]
+        cum_excl = np.concatenate([[0], np.cumsum(lens)[:-1]])
+        chunk_nnz = np.add.reduceat(lens, starts) if nb else np.zeros(0, np.int64)
+
+        chunk_mask[p, chunk_of, slot] = mat.block_masks[order]
+        chunk_col[p, chunk_of, slot] = (
+            mat.block_colidx[order].astype(np.int64)
+            - np.repeat(xbases, sizes)).astype(np.int32)
+        chunk_row[p, chunk_of, slot] = (
+            (interval_of_block[order] - p * intervals_per_panel) * r
+        ).astype(np.int32)
+        chunk_voff[p, chunk_of, slot] = (
+            cum_excl - np.repeat(cum_excl[starts], sizes)).astype(np.int32)
+        chunk_xbase[p, :nch_p] = xbases
+        ncols_pad = max(ncols_pad, int(xbases.max()) + xw)
+        vmax = max(vmax, int(chunk_nnz.max()) if nch_p else 0)
+        # packed panel values in chunk order (no inter-chunk padding yet)
+        total = int(lens.sum())
+        src = (np.repeat(mat.block_voffset[order] - cum_excl, lens)
+               + np.arange(total, dtype=np.int64))
+        per_panel.append((p, nch_p, chunk_nnz, cum_excl[starts], src))
+
+    vmax = max(align, vmax + (-vmax) % align)
+    # chunk value windows: aligned exclusive cumsum across (panel, chunk)
+    all_nnz = np.concatenate([pp[2] for pp in per_panel]) if per_panel else \
+        np.zeros(0, np.int64)
+    aligned = -(-all_nnz // align) * align
+    vbases = np.concatenate([[0], np.cumsum(aligned)[:-1]]) if aligned.shape[0] \
+        else np.zeros(0, np.int64)
+    # every chunk's [vbase, vbase + vmax) DMA window must be in bounds, and
+    # the last chunk has the largest vbase
+    nvals = (int(vbases[-1]) + vmax) if aligned.shape[0] else vmax
+    values = np.zeros(nvals, mat.values.dtype)
+    ci0 = 0
+    for p, nch_p, chunk_nnz, cum_chunk, src in per_panel:
+        vb = vbases[ci0:ci0 + nch_p]
+        chunk_vbase[p, :nch_p] = vb.astype(np.int32)
+        dst = (np.repeat(vb - cum_chunk, chunk_nnz)
+               + np.arange(int(chunk_nnz.sum()), dtype=np.int64))
+        values[dst] = mat.values[src]
+        ci0 += nch_p
+    return SPC5Panels(mat.shape, r, c, pr, cb, int(xw), int(vmax), npanels,
+                      nchunks, int(ncols_pad), chunk_col, chunk_mask,
+                      chunk_voff, chunk_row, chunk_vbase, chunk_xbase, values,
+                      mat.nnz)
 
 
 def to_chunked(mat: SPC5Matrix, cb: int = 256, align: int = 8) -> SPC5Chunked:

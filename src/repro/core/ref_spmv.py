@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .formats import SPC5Chunked
+from .formats import SPC5Chunked, SPC5Panels
 
 
 class SPC5Device(NamedTuple):
@@ -81,6 +81,92 @@ def spmm(dev: SPC5Device, x: jax.Array, *, r: int, c: int, nrows: int,
     y = jnp.zeros((nrows, x.shape[1]), dtype=vals.dtype)
     return y.at[yrow.reshape(-1)].add(
         contrib.reshape(-1, x.shape[1]))
+
+
+# ----------------------------------------------------------------------------
+# Row-panel-tiled layout oracle
+# ----------------------------------------------------------------------------
+
+class SPC5PanelDevice(NamedTuple):
+    """jnp view of :class:`SPC5Panels` (static meta kept python-side)."""
+
+    values: jax.Array       # (nvals_padded,)
+    chunk_col: jax.Array    # (npanels, nchunks, cb) int32, window-relative
+    chunk_mask: jax.Array   # (npanels, nchunks, cb) uint32
+    chunk_voff: jax.Array   # (npanels, nchunks, cb) int32
+    chunk_row: jax.Array    # (npanels, nchunks, cb) int32, panel-relative
+    chunk_vbase: jax.Array  # (npanels, nchunks) int32
+    chunk_xbase: jax.Array  # (npanels, nchunks) int32
+
+
+def device_put_panels(panels: SPC5Panels, dtype=None) -> SPC5PanelDevice:
+    values = (panels.values.astype(dtype) if dtype is not None
+              else panels.values)
+    return SPC5PanelDevice(
+        values=jnp.asarray(values),
+        chunk_col=jnp.asarray(panels.chunk_col),
+        chunk_mask=jnp.asarray(panels.chunk_mask),
+        chunk_voff=jnp.asarray(panels.chunk_voff),
+        chunk_row=jnp.asarray(panels.chunk_row),
+        chunk_vbase=jnp.asarray(panels.chunk_vbase),
+        chunk_xbase=jnp.asarray(panels.chunk_xbase),
+    )
+
+
+def _decode_panels(dev: SPC5PanelDevice, r: int, c: int, pr: int,
+                   ncols_pad: int):
+    """Panel decode with global index reconstruction.
+
+    Returns (vals, xcol, yrow), each (npanels, nchunks, cb, r*c); xcol is a
+    global column into x padded to ncols_pad, yrow a global row into y
+    padded to npanels*pr.
+    """
+    npanels = dev.chunk_mask.shape[0]
+    rc = r * c
+    k = jnp.arange(rc, dtype=jnp.uint32)
+    bits = ((dev.chunk_mask[..., None] >> k[None, None, None, :])
+            & jnp.uint32(1)).astype(jnp.int32)
+    ranks = jnp.cumsum(bits, axis=-1) - bits
+    vidx = (dev.chunk_vbase[..., None, None].astype(jnp.int32)
+            + dev.chunk_voff[..., None] + ranks)
+    vidx = jnp.clip(vidx, 0, dev.values.shape[0] - 1)
+    vals = dev.values[vidx] * bits.astype(dev.values.dtype)
+    kk = jnp.arange(rc, dtype=jnp.int32)
+    xcol = (dev.chunk_xbase[..., None, None] + dev.chunk_col[..., None]
+            + (kk % c)[None, None, None, :])
+    xcol = jnp.clip(xcol, 0, ncols_pad - 1)
+    panel_row0 = (jnp.arange(npanels, dtype=jnp.int32) * pr)[:, None, None, None]
+    yrow = panel_row0 + dev.chunk_row[..., None] + (kk // c)[None, None, None, :]
+    yrow = jnp.clip(yrow, 0, npanels * pr - 1)
+    return vals, xcol, yrow
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("r", "c", "pr", "nrows", "ncols_pad"))
+def spmv_panels(dev: SPC5PanelDevice, x: jax.Array, *, r: int, c: int,
+                pr: int, nrows: int, ncols_pad: int) -> jax.Array:
+    """y = A @ x with A in the row-panel-tiled layout; x (ncols,)."""
+    npanels = dev.chunk_mask.shape[0]
+    xp = jnp.pad(x, (0, max(0, ncols_pad - x.shape[0])))
+    vals, xcol, yrow = _decode_panels(dev, r, c, pr, ncols_pad)
+    contrib = vals * xp[xcol]
+    y = jnp.zeros((npanels * pr,), dtype=vals.dtype)
+    y = y.at[yrow.reshape(-1)].add(contrib.reshape(-1))
+    return y[:nrows]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("r", "c", "pr", "nrows", "ncols_pad"))
+def spmm_panels(dev: SPC5PanelDevice, x: jax.Array, *, r: int, c: int,
+                pr: int, nrows: int, ncols_pad: int) -> jax.Array:
+    """Y = A @ X with A panel-tiled; X (ncols, nvec)."""
+    npanels = dev.chunk_mask.shape[0]
+    xp = jnp.pad(x, ((0, max(0, ncols_pad - x.shape[0])), (0, 0)))
+    vals, xcol, yrow = _decode_panels(dev, r, c, pr, ncols_pad)
+    contrib = vals[..., None] * xp[xcol]
+    y = jnp.zeros((npanels * pr, x.shape[1]), dtype=vals.dtype)
+    y = y.at[yrow.reshape(-1)].add(contrib.reshape(-1, x.shape[1]))
+    return y[:nrows]
 
 
 def spmv_dense_oracle(dense: np.ndarray, x: np.ndarray) -> np.ndarray:

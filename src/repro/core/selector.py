@@ -42,10 +42,16 @@ class Record:
     workers: int      # 1 == sequential
     gflops: float
     matrix: str = ""
+    pr: int = 0       # row-panel height of the tiled layout; 0 == whole-vector
 
 
 class RecordStore:
-    """Persistent store of (kernel, avg, workers) -> throughput records."""
+    """Persistent store of (kernel, avg, workers, pr) -> throughput records.
+
+    ``pr`` records which device layout produced the measurement: 0 is the
+    VMEM-resident whole-vector path, otherwise the row-panel height of the
+    panel-tiled kernels. Old JSON stores without the field load as pr=0.
+    """
 
     def __init__(self, path: Optional[str] = None):
         self.path = path
@@ -55,9 +61,9 @@ class RecordStore:
                 self.records = [Record(**r) for r in json.load(f)]
 
     def add(self, kernel: str, avg: float, workers: int, gflops: float,
-            matrix: str = "") -> None:
+            matrix: str = "", pr: int = 0) -> None:
         self.records.append(Record(kernel, float(avg), int(workers),
-                                   float(gflops), matrix))
+                                   float(gflops), matrix, int(pr)))
 
     def save(self, path: Optional[str] = None) -> None:
         path = path or self.path
@@ -73,25 +79,36 @@ class RecordStore:
 
 
 class SequentialPredictor:
-    """Per-kernel polyfit of gflops vs Avg NNZ/block (paper fig. 5)."""
+    """Per-kernel polyfit of gflops vs Avg NNZ/block (paper fig. 5).
 
-    def __init__(self, store: RecordStore, degree: int = 2):
+    Queries outside a kernel's fitted Avg range clamp to the nearest fitted
+    point: the polynomial is an interpolation model and extrapolating a
+    degree-2 fit is unbounded (a kernel measured only at low fill would get
+    an arbitrarily inflated/deflated score on a dense matrix).
+    """
+
+    def __init__(self, store: RecordStore, degree: int = 2, pr: int = 0):
         self.coeffs: Dict[str, np.ndarray] = {}
+        self.clip: Dict[str, Tuple[float, float]] = {}
         for k in store.kernels():
+            # fit one layout at a time: mixing whole-vector (pr=0) and
+            # panel-tiled records would fit a curve through two different
+            # kernels' throughputs at the same Avg
             pts = [(r.avg, r.gflops) for r in store.records
-                   if r.kernel == k and r.workers == 1]
+                   if r.kernel == k and r.workers == 1 and r.pr == pr]
             if not pts:
                 continue
             xs = np.array([p[0] for p in pts])
             ys = np.array([p[1] for p in pts])
             deg = min(degree, max(0, len(pts) - 1))
             self.coeffs[k] = np.polyfit(xs, ys, deg)
-            self._clip = (float(xs.min()), float(xs.max()))
+            self.clip[k] = (float(xs.min()), float(xs.max()))
 
     def predict(self, kernel: str, avg: float) -> float:
         if kernel not in self.coeffs:
             return -np.inf
-        return float(np.polyval(self.coeffs[kernel], avg))
+        lo, hi = self.clip[kernel]
+        return float(np.polyval(self.coeffs[kernel], min(max(avg, lo), hi)))
 
 
 class ParallelPredictor:
@@ -99,6 +116,8 @@ class ParallelPredictor:
 
     Basis: [1, a, w, a*w, a^2, w^2] with a=avg, w=log2(workers) -- "simple
     interpolation of results from previous executions", per the paper.
+    Queries clamp ``avg`` to each kernel's fitted range, same as the
+    sequential predictor: the quadratic basis extrapolates unboundedly.
     """
 
     @staticmethod
@@ -107,22 +126,26 @@ class ParallelPredictor:
         w = np.log2(np.maximum(np.asarray(workers, dtype=np.float64), 1.0))
         return np.stack([np.ones_like(a), a, w, a * w, a * a, w * w], axis=-1)
 
-    def __init__(self, store: RecordStore):
+    def __init__(self, store: RecordStore, pr: int = 0):
         self.coeffs: Dict[str, np.ndarray] = {}
+        self.clip: Dict[str, Tuple[float, float]] = {}
         for k in store.kernels():
             pts = [(r.avg, r.workers, r.gflops) for r in store.records
-                   if r.kernel == k]
+                   if r.kernel == k and r.pr == pr]
             if len(pts) < 2:
                 continue
             arr = np.array(pts, dtype=np.float64)
             X = self._basis(arr[:, 0], arr[:, 1])
             y = arr[:, 2]
             self.coeffs[k], *_ = np.linalg.lstsq(X, y, rcond=None)
+            self.clip[k] = (float(arr[:, 0].min()), float(arr[:, 0].max()))
 
     def predict(self, kernel: str, avg: float, workers: int) -> float:
         if kernel not in self.coeffs:
             return -np.inf
-        X = self._basis(np.array([avg]), np.array([workers]))
+        lo, hi = self.clip[kernel]
+        X = self._basis(np.array([min(max(avg, lo), hi)]),
+                        np.array([workers]))
         return float((X @ self.coeffs[kernel])[0])
 
 
@@ -142,18 +165,19 @@ def matrix_features(csr: CSRMatrix,
 
 
 def select_kernel(csr: CSRMatrix, store: RecordStore, workers: int = 1,
-                  kernels: Sequence[str] = DEFAULT_KERNELS
+                  kernels: Sequence[str] = DEFAULT_KERNELS, pr: int = 0
                   ) -> Tuple[str, float, Dict[str, float]]:
     """Pick the kernel with the highest predicted throughput.
 
+    ``pr`` selects which layout's records to fit (0 = whole-vector).
     Returns (kernel, predicted_gflops, per-kernel predictions).
     """
     feats = matrix_features(csr, kernels)
     if workers == 1:
-        pred = SequentialPredictor(store)
+        pred = SequentialPredictor(store, pr=pr)
         scores = {k: pred.predict(k, feats[k]) for k in kernels}
     else:
-        pred = ParallelPredictor(store)
+        pred = ParallelPredictor(store, pr=pr)
         scores = {k: pred.predict(k, feats[k], workers) for k in kernels}
     best = max(scores, key=lambda k: scores[k])
     return best, scores[best], scores

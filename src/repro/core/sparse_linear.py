@@ -47,9 +47,14 @@ def choose_block(csr: F.CSRMatrix, store: Optional[S.RecordStore] = None,
 
 @dataclasses.dataclass(frozen=True)
 class SparseLinear:
-    """y = A x (+ b) with A stored in chunked beta(r,c)."""
+    """y = A x (+ b) with A stored in chunked beta(r,c).
 
-    handle: ops.SPC5Handle
+    The handle is whichever device layout ``ops.prepare`` selected:
+    whole-vector for layers whose in/out vectors fit VMEM, row-panel-tiled
+    beyond that ceiling (huge vocab projections, extreme-width MLPs).
+    """
+
+    handle: object  # ops.SPC5Handle | ops.SPC5PanelHandle
     bias: Optional[jax.Array] = None
 
     @property
@@ -65,13 +70,20 @@ class SparseLinear:
                    block: Optional[Tuple[int, int]] = None,
                    store: Optional[S.RecordStore] = None,
                    bias: Optional[np.ndarray] = None,
-                   cb: int = 256, dtype=None) -> "SparseLinear":
+                   cb: Optional[int] = None, dtype=None, layout: str = "auto",
+                   pr: int = 512, xw: int = 512,
+                   nvec: int = 128) -> "SparseLinear":
+        """``nvec``: widest activation batch this layer will see -- feeds
+        the auto layout's VMEM budget (SpMM tiles are nvt=min(nvec,128)
+        wide). Defaults to 128 (one full lane tile) since batch size is
+        unknown at build time; pass nvec=1 for strictly-SpMV layers."""
         w = prune_by_magnitude(np.asarray(w), density)
         csr = F.csr_from_dense(w)
         if block is None:
             block = choose_block(csr, store)
         mat = F.csr_to_spc5(csr, *block)
-        h = ops.prepare(mat, cb=cb, dtype=dtype)
+        h = ops.prepare(mat, cb=cb, dtype=dtype, layout=layout, pr=pr, xw=xw,
+                        nvec=nvec)
         b = None if bias is None else jnp.asarray(bias)
         return cls(handle=h, bias=b)
 

@@ -3,8 +3,11 @@
 Dispatches by backend: on TPU the Pallas kernels run natively; elsewhere they
 run in ``interpret=True`` (the kernel body executed in Python, per-op) when
 ``force_pallas`` is set, and otherwise fall back to the jnp reference, which
-is numerically identical. Conversion helpers take host ``SPC5Matrix`` /
-``SPC5Chunked`` objects and return device handles.
+is numerically identical. Conversion helpers take host ``SPC5Matrix``
+objects and return device handles; :func:`prepare` picks between the two
+device layouts (whole-vector :class:`SPC5Handle` when x/y fit the VMEM
+budget, row-panel-tiled :class:`SPC5PanelHandle` beyond it) and
+:func:`spmv`/:func:`spmm` dispatch on the handle kind.
 """
 from __future__ import annotations
 
@@ -13,6 +16,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import formats as F
 from repro.core import ref_spmv as R
@@ -57,24 +61,130 @@ jax.tree_util.register_pytree_node(SPC5Handle, _handle_flatten,
                                    _handle_unflatten)
 
 
-def prepare(mat: F.SPC5Matrix, cb: int = 256, align: int = 8,
-            dtype=None) -> SPC5Handle:
-    ch = F.to_chunked(mat, cb=cb, align=align)
+@dataclasses.dataclass(frozen=True)
+class SPC5PanelHandle:
+    """Device-resident row-panel-tiled beta(r,c) matrix + static meta.
+
+    The 2-D-grid layout (see :class:`repro.core.formats.SPC5Panels`): VMEM
+    per grid step is bounded by ``pr + xw + vmax`` elements regardless of
+    matrix size, so this handle serves matrices far beyond the whole-vector
+    path's ``nrows + ncols`` VMEM ceiling. Registered as a pytree like
+    :class:`SPC5Handle`.
+    """
+
+    dev: R.SPC5PanelDevice
+    r: int
+    c: int
+    pr: int
+    cb: int
+    xw: int
+    vmax: int
+    npanels: int
+    nchunks: int
+    nrows: int
+    ncols: int
+    ncols_pad: int
+    nnz: int
+
+    @property
+    def shape(self):
+        return (self.nrows, self.ncols)
+
+
+def _panel_flatten(h: SPC5PanelHandle):
+    return (tuple(h.dev),), (h.r, h.c, h.pr, h.cb, h.xw, h.vmax, h.npanels,
+                             h.nchunks, h.nrows, h.ncols, h.ncols_pad, h.nnz)
+
+
+jax.tree_util.register_pytree_node(
+    SPC5PanelHandle, _panel_flatten,
+    lambda aux, ch: SPC5PanelHandle(R.SPC5PanelDevice(*ch[0]), *aux))
+
+
+# Whole-vector path budget: x (ncols) + y (nrows) must sit in VMEM next to
+# the decode working set. ~2 MiB of f32 leaves headroom in a 16 MiB VMEM
+# for the SpMV kernels; SpMM tiles are nvec-wide, so callers that will run
+# SpMM must scale the footprint by nvec (see fits_whole_vector / prepare).
+VMEM_WHOLE_VECTOR_BUDGET = 2 * 2**20
+
+
+def fits_whole_vector(nrows: int, ncols: int, itemsize: int = 4,
+                      budget_bytes: int = VMEM_WHOLE_VECTOR_BUDGET,
+                      nvec: int = 1) -> bool:
+    """Layout selection rule: whole-vector only when x AND y fit the budget.
+
+    ``nvec`` is the widest multi-vector batch the handle will see: the
+    whole-vector SpMM kernel holds (ncols, nvt) and (nrows, nvt) tiles with
+    nvt = min(nvec, 128), so the footprint scales by that factor.
+    """
+    return (nrows + ncols) * itemsize * min(max(nvec, 1), 128) <= budget_bytes
+
+
+def prepare(mat: F.SPC5Matrix, cb: Optional[int] = None, align: int = 8,
+            dtype=None, layout: str = "auto", pr: int = 512, xw: int = 512,
+            nvec: int = 1):
+    """Build a device handle; returns SPC5Handle or SPC5PanelHandle.
+
+    ``layout``: "whole" forces the VMEM-resident whole-vector layout,
+    "panels" the row-panel-tiled one, "auto" (default) picks whole-vector
+    when x and y fit the VMEM budget (:func:`fits_whole_vector`) and panels
+    otherwise -- small problems keep the cheaper single-scatter kernels,
+    big ones get the bounded-VMEM 2-D grid. Pass ``nvec`` (widest SpMM
+    batch this handle will see) so "auto" budgets the nvt-wide SpMM tiles,
+    not just the SpMV vectors.
+
+    ``cb=None`` uses the layout's default chunk size (256 whole-vector, 64
+    panels -- panel chunks are smaller because each also pins an x window);
+    an explicit ``cb`` is honored as-is on either path.
+    """
+    if layout not in ("auto", "whole", "panels"):
+        raise ValueError(f"unknown layout {layout!r}")
+    if layout == "auto":
+        itemsize = np.dtype(dtype or mat.values.dtype).itemsize
+        layout = ("whole" if fits_whole_vector(*mat.shape, itemsize,
+                                               nvec=nvec)
+                  else "panels")
+    if layout == "panels":
+        return prepare_panels(mat, pr=pr, cb=64 if cb is None else cb, xw=xw,
+                              align=align, dtype=dtype)
+    ch = F.to_chunked(mat, cb=256 if cb is None else cb, align=align)
     return SPC5Handle(dev=R.device_put(ch, dtype=dtype), r=ch.r, c=ch.c,
                       cb=ch.cb, vmax=ch.vmax, nrows=ch.nrows, ncols=ch.ncols,
                       nnz=ch.nnz)
 
 
-def spmv(h: SPC5Handle, x: jax.Array, *, use_pallas: Optional[bool] = None,
+def prepare_panels(mat: F.SPC5Matrix, pr: int = 512, cb: int = 64,
+                   xw: int = 512, align: int = 8,
+                   dtype=None) -> SPC5PanelHandle:
+    pan = F.to_panels(mat, pr=pr, cb=cb, xw=xw, align=align)
+    return SPC5PanelHandle(
+        dev=R.device_put_panels(pan, dtype=dtype), r=pan.r, c=pan.c,
+        pr=pan.pr, cb=pan.cb, xw=pan.xw, vmax=pan.vmax, npanels=pan.npanels,
+        nchunks=pan.nchunks, nrows=pan.nrows, ncols=pan.ncols,
+        ncols_pad=pan.ncols_pad, nnz=pan.nnz)
+
+
+def spmv(h, x: jax.Array, *, use_pallas: Optional[bool] = None,
          double_buffer: bool = True, interpret: Optional[bool] = None
          ) -> jax.Array:
-    """y = A @ x."""
+    """y = A @ x. Accepts SPC5Handle (whole-vector) or SPC5PanelHandle."""
     if use_pallas is None:
         use_pallas = _on_tpu()
-    if not use_pallas:
-        return R.spmv(h.dev, x, r=h.r, c=h.c, nrows=h.nrows, ncols=h.ncols)
     if interpret is None:
         interpret = not _on_tpu()
+    if isinstance(h, SPC5PanelHandle):
+        if not use_pallas:
+            return R.spmv_panels(h.dev, x, r=h.r, c=h.c, pr=h.pr,
+                                 nrows=h.nrows, ncols_pad=h.ncols_pad)
+        fn = (spc5_spmv.spmv_pallas_panels_db if double_buffer
+              else spc5_spmv.spmv_pallas_panels)
+        return fn(h.dev.chunk_vbase, h.dev.chunk_xbase, h.dev.chunk_col,
+                  h.dev.chunk_mask, h.dev.chunk_voff, h.dev.chunk_row,
+                  h.dev.values, x, r=h.r, c=h.c, cb=h.cb, vmax=h.vmax,
+                  xw=h.xw, pr=h.pr, nrows=h.nrows, ncols_pad=h.ncols_pad,
+                  interpret=interpret)
+    if not use_pallas:
+        return R.spmv(h.dev, x, r=h.r, c=h.c, nrows=h.nrows, ncols=h.ncols)
     fn = spc5_spmv.spmv_pallas_db if double_buffer else spc5_spmv.spmv_pallas
     return fn(h.dev.chunk_vbase, h.dev.chunk_col, h.dev.chunk_mask,
               h.dev.chunk_voff, h.dev.chunk_row, h.dev.values, x,
@@ -88,7 +198,7 @@ class SPC5TestHandle:
     blocks via a COO tail (the paper's dual-loop specialisation as a storage
     split -- DESIGN.md §2)."""
 
-    multi: SPC5Handle
+    multi: object  # SPC5Handle | SPC5PanelHandle (auto layout in prepare)
     single_rows: jax.Array
     single_cols: jax.Array
     single_values: jax.Array
@@ -103,7 +213,7 @@ jax.tree_util.register_pytree_node(
     lambda aux, ch: SPC5TestHandle(*ch[0]))
 
 
-def prepare_test(mat: F.SPC5Matrix, cb: int = 256, align: int = 8,
+def prepare_test(mat: F.SPC5Matrix, cb: Optional[int] = None, align: int = 8,
                  dtype=None) -> SPC5TestHandle:
     split = F.split_singletons(mat)
     dt = dtype or mat.values.dtype
@@ -124,15 +234,25 @@ def spmv_test(h: SPC5TestHandle, x: jax.Array, **kw) -> jax.Array:
                           nrows=h.multi.nrows)
 
 
-def spmm(h: SPC5Handle, x: jax.Array, *, use_pallas: Optional[bool] = None,
+def spmm(h, x: jax.Array, *, use_pallas: Optional[bool] = None,
          nvt: int = 128, interpret: Optional[bool] = None) -> jax.Array:
-    """Y = A @ X, X of shape (ncols, nvec)."""
+    """Y = A @ X, X of shape (ncols, nvec). Accepts either handle kind."""
     if use_pallas is None:
         use_pallas = _on_tpu()
-    if not use_pallas:
-        return R.spmm(h.dev, x, r=h.r, c=h.c, nrows=h.nrows, ncols=h.ncols)
     if interpret is None:
         interpret = not _on_tpu()
+    if isinstance(h, SPC5PanelHandle):
+        if not use_pallas:
+            return R.spmm_panels(h.dev, x, r=h.r, c=h.c, pr=h.pr,
+                                 nrows=h.nrows, ncols_pad=h.ncols_pad)
+        return spc5_spmm.spmm_pallas_panels(
+            h.dev.chunk_vbase, h.dev.chunk_xbase, h.dev.chunk_col,
+            h.dev.chunk_mask, h.dev.chunk_voff, h.dev.chunk_row,
+            h.dev.values, x, r=h.r, c=h.c, cb=h.cb, vmax=h.vmax, xw=h.xw,
+            pr=h.pr, nrows=h.nrows, ncols_pad=h.ncols_pad,
+            nvt=min(nvt, x.shape[1]), interpret=interpret)
+    if not use_pallas:
+        return R.spmm(h.dev, x, r=h.r, c=h.c, nrows=h.nrows, ncols=h.ncols)
     return spc5_spmm.spmm_pallas(
         h.dev.chunk_vbase, h.dev.chunk_col, h.dev.chunk_mask,
         h.dev.chunk_voff, h.dev.chunk_row, h.dev.values, x,

@@ -2,11 +2,20 @@
 
 The paper names "multiplication by multiple vectors" as the natural extension
 of the block kernels; in the LM framework this is the SparseLinear matmul
-(sparse pruned weight @ dense activations). Grid is (nvec tiles, chunks):
-the value-window DMA pattern is identical to the SpMV kernel, x/y are tiled
-over the vector dimension in lane-aligned (…, nvt) tiles, and the per-block
-product unrolls the (r, c) geometry into VPU multiply-adds (tiny r*c GEMMs
-would waste the 128x128 MXU -- DESIGN.md §2).
+(sparse pruned weight @ dense activations). The value-window DMA pattern is
+identical to the SpMV kernel, x/y are tiled over the vector dimension in
+lane-aligned (…, nvt) tiles, and the per-block product unrolls the (r, c)
+geometry into VPU multiply-adds (tiny r*c GEMMs would waste the 128x128
+MXU -- DESIGN.md §2).
+
+Two kernels:
+
+  * ``spmm_pallas`` -- whole-vector layout, grid (nvec tiles, chunks); the
+    full (ncols, nvt) x tile and (nrows, nvt) y tile are VMEM-resident.
+  * ``spmm_pallas_panels`` -- row-panel-tiled layout, grid
+    (nvec tiles, panels, chunks); each step holds a (pr, nvt) y tile and a
+    DMA'd (xw, nvt) x slab, so VMEM stays bounded for arbitrarily large
+    matrices (see repro.core.formats.SPC5Panels).
 """
 from __future__ import annotations
 
@@ -16,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro._compat.pallas import CompilerParams as _CompilerParams
 
 
 def _spmm_kernel(vbase_ref, col_ref, mask_ref, voff_ref, row_ref, values_hbm,
@@ -95,7 +106,108 @@ def spmm_pallas(chunk_vbase, chunk_col, chunk_mask, chunk_voff, chunk_row,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((nrows, nvec), values.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary")),
     )(chunk_vbase, chunk_col, chunk_mask.astype(jnp.int32), chunk_voff,
       chunk_row, values, x)
+
+
+def _spmm_panel_kernel(vbase_ref, xbase_ref, col_ref, mask_ref, voff_ref,
+                       row_ref, values_hbm, x_hbm, y_ref, vwin, xwin, vsem,
+                       xsem, *, r: int, c: int, cb: int, vmax: int, xw: int,
+                       pr: int, nvt: int):
+    """One (vec-tile, panel, chunk) grid step of the row-panel-tiled SpMM.
+
+    The value window DMA is identical to the SpMV panel kernel; the x window
+    is the 2-D slab ``x[xbase : xbase+xw, j*nvt : (j+1)*nvt]``. The output
+    tile is the panel's (pr, nvt) slab, revisited across the inner chunk
+    dimension and written back once per (panel, vec-tile).
+    """
+    j = pl.program_id(0)
+    i = pl.program_id(2)
+    p = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    vcopy = pltpu.make_async_copy(
+        values_hbm.at[pl.ds(vbase_ref[p, i], vmax)], vwin, vsem)
+    xcopy = pltpu.make_async_copy(
+        x_hbm.at[pl.ds(xbase_ref[p, i], xw), pl.ds(j * nvt, nvt)], xwin, xsem)
+    vcopy.start()
+    xcopy.start()
+    vcopy.wait()
+    xcopy.wait()
+
+    rc = r * c
+    mask = mask_ref[0, 0]
+    k = jnp.arange(rc, dtype=jnp.int32)
+    bits = ((mask[:, None] >> k[None, :]) & 1).astype(jnp.int32)    # (cb, rc)
+    ranks = jnp.cumsum(bits, axis=1) - bits
+    vidx = jnp.clip(voff_ref[0, 0][:, None] + ranks, 0, vmax - 1)
+    vals = jnp.take(vwin[...], vidx, axis=0) * bits.astype(vwin.dtype)
+
+    # gather the c window-relative columns of the x slab: (cb, c, nvt)
+    xcol = jnp.clip(col_ref[0, 0][:, None]
+                    + jnp.arange(c, dtype=jnp.int32)[None, :], 0, xw - 1)
+    xg = jnp.take(xwin[...], xcol, axis=0)
+
+    y = y_ref[...]
+    row = row_ref[0, 0]
+    for lr in range(r):                      # static unroll over block rows
+        acc = jnp.zeros((cb, y.shape[1]), dtype=y.dtype)
+        for lc in range(c):                  # static unroll over block cols
+            acc = acc + vals[:, lr * c + lc, None] * xg[:, lc, :]
+        yrow = jnp.clip(row + lr, 0, pr - 1)
+        y = y.at[yrow].add(acc)
+    y_ref[...] = y
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("r", "c", "cb", "vmax", "xw", "pr", "nrows", "ncols_pad",
+                     "nvt", "interpret"))
+def spmm_pallas_panels(chunk_vbase, chunk_xbase, chunk_col, chunk_mask,
+                       chunk_voff, chunk_row, values, x, *, r: int, c: int,
+                       cb: int, vmax: int, xw: int, pr: int, nrows: int,
+                       ncols_pad: int, nvt: int = 128,
+                       interpret: bool = False):
+    """Row-panel-tiled Y = A @ X; X (ncols, nvec), padded to ncols_pad rows."""
+    npanels, nchunks = chunk_vbase.shape
+    nvec = x.shape[1]
+    nvt = min(nvt, nvec)
+    if nvec % nvt:
+        raise ValueError(f"nvec={nvec} not divisible by tile {nvt}")
+    xp = jnp.pad(x, ((0, max(0, ncols_pad - x.shape[0])), (0, 0)))
+    kernel = functools.partial(_spmm_panel_kernel, r=r, c=c, cb=cb, vmax=vmax,
+                               xw=xw, pr=pr, nvt=nvt)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                  # chunk_vbase, chunk_xbase
+        grid=(nvec // nvt, npanels, nchunks),
+        in_specs=[
+            pl.BlockSpec((1, 1, cb), lambda j, p, i, vb, xb: (p, i, 0)),
+            pl.BlockSpec((1, 1, cb), lambda j, p, i, vb, xb: (p, i, 0)),
+            pl.BlockSpec((1, 1, cb), lambda j, p, i, vb, xb: (p, i, 0)),
+            pl.BlockSpec((1, 1, cb), lambda j, p, i, vb, xb: (p, i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),  # values (HBM)
+            pl.BlockSpec(memory_space=pl.ANY),  # x (HBM, windowed DMA)
+        ],
+        out_specs=pl.BlockSpec((pr, nvt), lambda j, p, i, vb, xb: (p, j)),
+        scratch_shapes=[
+            pltpu.VMEM((vmax,), values.dtype),
+            pltpu.VMEM((xw, nvt), x.dtype),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    y = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((npanels * pr, nvec), values.dtype),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
+    )(chunk_vbase, chunk_xbase, chunk_col, chunk_mask.astype(jnp.int32),
+      chunk_voff, chunk_row, values, xp)
+    return y[:nrows]

@@ -8,13 +8,30 @@ TPU adaptation of the paper's AVX-512 ``vexpandpd`` kernel (DESIGN.md §2):
   * the expand is ``rank = cumsum(mask_bits) - mask_bits`` + a VMEM gather,
     replacing the in-register expand (identical semantics, zero HBM cost);
   * per grid step a chunk of ``cb`` blocks is decoded with (8,128)-friendly
-    vector ops; ``x`` is VMEM-resident (the kernel is row-interval local, the
-    distributed layer shards rows so each device's x slice fits VMEM);
+    vector ops;
   * y is accumulated across sequential grid steps in VMEM and written once
     (the paper's "merge without synchronization" -- rows are owned uniquely).
 
 Scalar prefetch carries the per-chunk value-window offsets, the analogue of
 the asm kernel's running value cursor (%r12 in the paper's code 1).
+
+Two layouts, two kernel families:
+
+**Whole-vector** (``spmv_pallas`` / ``spmv_pallas_db``): grid ``(nchunks,)``,
+``x`` (ncols) and ``y`` (nrows) fully VMEM-resident, a full-vector scatter
+per chunk. Fastest when both vectors fit VMEM; caps matrix size at roughly
+``(nrows + ncols) * itemsize < VMEM budget``.
+
+**Row-panel-tiled** (``spmv_pallas_panels`` / ``spmv_pallas_panels_db``):
+2-D grid ``(npanels, nchunks)`` over :class:`repro.core.formats.SPC5Panels`.
+Each step holds only a ``(pr,)`` slice of ``y`` (the out BlockSpec maps
+panel ``p`` to block ``p``; the inner chunk dimension revisits it, so the
+accumulator stays VMEM-resident and is written back once per panel) and one
+``(xw,)`` window of ``x`` DMA'd exactly like the values window (chunk
+columns are window-relative by construction). VMEM per step is
+``pr + xw + vmax`` elements, independent of matrix size -- this is what
+lifts the VMEM-resident ceiling. ``ops.prepare`` picks the layout
+automatically (whole-vector when the vectors fit, panels otherwise).
 """
 from __future__ import annotations
 
@@ -24,6 +41,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro._compat.pallas import CompilerParams as _CompilerParams
 
 
 def _decode_chunk(mask, voff, col, vwin, x, *, r: int, c: int, ncols: int,
@@ -95,10 +114,178 @@ def spmv_pallas(chunk_vbase, chunk_col, chunk_mask, chunk_voff, chunk_row,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((nrows,), values.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",)),
     )(chunk_vbase, chunk_col, chunk_mask.astype(jnp.int32), chunk_voff,
       chunk_row, values, x)
+
+
+def _spmv_panel_kernel(vbase_ref, xbase_ref, col_ref, mask_ref, voff_ref,
+                       row_ref, values_hbm, x_hbm, y_ref, vwin, xwin, vsem,
+                       xsem, *, r: int, c: int, cb: int, vmax: int, xw: int,
+                       pr: int):
+    """One (panel, chunk) grid step: DMA the chunk's value + x windows, decode,
+    accumulate into the panel's (pr,) y tile."""
+    p = pl.program_id(0)
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    vcopy = pltpu.make_async_copy(
+        values_hbm.at[pl.ds(vbase_ref[p, i], vmax)], vwin, vsem)
+    xcopy = pltpu.make_async_copy(
+        x_hbm.at[pl.ds(xbase_ref[p, i], xw)], xwin, xsem)
+    vcopy.start()
+    xcopy.start()
+    vcopy.wait()
+    xcopy.wait()
+
+    # chunk_col is window-relative: decode against the x window directly
+    contrib = _decode_chunk(mask_ref[0, 0], voff_ref[0, 0], col_ref[0, 0],
+                            vwin[...], xwin[...], r=r, c=c, ncols=xw,
+                            vmax=vmax)
+    k = jnp.arange(r * c, dtype=jnp.int32)
+    yrow = jnp.clip(row_ref[0, 0][:, None] + (k // c)[None, :], 0, pr - 1)
+    y = y_ref[...]
+    y_ref[...] = y.at[yrow.reshape(-1)].add(contrib.reshape(-1))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("r", "c", "cb", "vmax", "xw", "pr", "nrows",
+                     "ncols_pad", "interpret"))
+def spmv_pallas_panels(chunk_vbase, chunk_xbase, chunk_col, chunk_mask,
+                       chunk_voff, chunk_row, values, x, *, r: int, c: int,
+                       cb: int, vmax: int, xw: int, pr: int, nrows: int,
+                       ncols_pad: int, interpret: bool = False) -> jax.Array:
+    """Row-panel-tiled SpMV. x is padded to ncols_pad; returns y[:nrows]."""
+    npanels, nchunks = chunk_vbase.shape
+    xp = jnp.pad(x, (0, max(0, ncols_pad - x.shape[0])))
+    kernel = functools.partial(_spmv_panel_kernel, r=r, c=c, cb=cb, vmax=vmax,
+                               xw=xw, pr=pr)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                  # chunk_vbase, chunk_xbase
+        grid=(npanels, nchunks),
+        in_specs=[
+            pl.BlockSpec((1, 1, cb), lambda p, i, vb, xb: (p, i, 0)),
+            pl.BlockSpec((1, 1, cb), lambda p, i, vb, xb: (p, i, 0)),
+            pl.BlockSpec((1, 1, cb), lambda p, i, vb, xb: (p, i, 0)),
+            pl.BlockSpec((1, 1, cb), lambda p, i, vb, xb: (p, i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),  # values (HBM)
+            pl.BlockSpec(memory_space=pl.ANY),  # x (HBM, windowed DMA)
+        ],
+        out_specs=pl.BlockSpec((pr,), lambda p, i, vb, xb: (p,)),
+        scratch_shapes=[
+            pltpu.VMEM((vmax,), values.dtype),
+            pltpu.VMEM((xw,), x.dtype),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    y = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((npanels * pr,), values.dtype),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+    )(chunk_vbase, chunk_xbase, chunk_col, chunk_mask.astype(jnp.int32),
+      chunk_voff, chunk_row, values, xp)
+    return y[:nrows]
+
+
+def _spmv_panel_db_kernel(vbase_ref, xbase_ref, col_ref, mask_ref, voff_ref,
+                          row_ref, values_hbm, x_hbm, y_ref, vwin, xwin, vsem,
+                          xsem, *, r: int, c: int, cb: int, vmax: int,
+                          xw: int, pr: int, nchunks: int, nsteps: int):
+    """Double-buffered panel variant: overlap the NEXT (panel, chunk) step's
+    value/x-window DMAs with this step's decode (the 2-D-grid analogue of
+    the asm kernel's software pipelining). Buffers are indexed by the
+    linearised step t = p * nchunks + i."""
+    p = pl.program_id(0)
+    i = pl.program_id(1)
+    t = p * nchunks + i
+    slot = jax.lax.rem(t, jnp.int32(2))
+
+    @pl.when(i == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    @pl.when(t == 0)
+    def _first():
+        pltpu.make_async_copy(values_hbm.at[pl.ds(vbase_ref[0, 0], vmax)],
+                              vwin.at[0], vsem.at[0]).start()
+        pltpu.make_async_copy(x_hbm.at[pl.ds(xbase_ref[0, 0], xw)],
+                              xwin.at[0], xsem.at[0]).start()
+
+    @pl.when(t + 1 < nsteps)
+    def _prefetch_next():
+        nxt = jax.lax.rem(t + jnp.int32(1), jnp.int32(2))
+        pn = (t + jnp.int32(1)) // jnp.int32(nchunks)
+        inn = jax.lax.rem(t + jnp.int32(1), jnp.int32(nchunks))
+        pltpu.make_async_copy(values_hbm.at[pl.ds(vbase_ref[pn, inn], vmax)],
+                              vwin.at[nxt], vsem.at[nxt]).start()
+        pltpu.make_async_copy(x_hbm.at[pl.ds(xbase_ref[pn, inn], xw)],
+                              xwin.at[nxt], xsem.at[nxt]).start()
+
+    pltpu.make_async_copy(values_hbm.at[pl.ds(vbase_ref[p, i], vmax)],
+                          vwin.at[slot], vsem.at[slot]).wait()
+    pltpu.make_async_copy(x_hbm.at[pl.ds(xbase_ref[p, i], xw)],
+                          xwin.at[slot], xsem.at[slot]).wait()
+
+    contrib = _decode_chunk(mask_ref[0, 0], voff_ref[0, 0], col_ref[0, 0],
+                            vwin[slot], xwin[slot], r=r, c=c, ncols=xw,
+                            vmax=vmax)
+    k = jnp.arange(r * c, dtype=jnp.int32)
+    yrow = jnp.clip(row_ref[0, 0][:, None] + (k // c)[None, :], 0, pr - 1)
+    y = y_ref[...]
+    y_ref[...] = y.at[yrow.reshape(-1)].add(contrib.reshape(-1))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("r", "c", "cb", "vmax", "xw", "pr", "nrows",
+                     "ncols_pad", "interpret"))
+def spmv_pallas_panels_db(chunk_vbase, chunk_xbase, chunk_col, chunk_mask,
+                          chunk_voff, chunk_row, values, x, *, r: int, c: int,
+                          cb: int, vmax: int, xw: int, pr: int, nrows: int,
+                          ncols_pad: int, interpret: bool = False):
+    npanels, nchunks = chunk_vbase.shape
+    xp = jnp.pad(x, (0, max(0, ncols_pad - x.shape[0])))
+    kernel = functools.partial(_spmv_panel_db_kernel, r=r, c=c, cb=cb,
+                               vmax=vmax, xw=xw, pr=pr, nchunks=nchunks,
+                               nsteps=npanels * nchunks)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(npanels, nchunks),
+        in_specs=[
+            pl.BlockSpec((1, 1, cb), lambda p, i, vb, xb: (p, i, 0)),
+            pl.BlockSpec((1, 1, cb), lambda p, i, vb, xb: (p, i, 0)),
+            pl.BlockSpec((1, 1, cb), lambda p, i, vb, xb: (p, i, 0)),
+            pl.BlockSpec((1, 1, cb), lambda p, i, vb, xb: (p, i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((pr,), lambda p, i, vb, xb: (p,)),
+        scratch_shapes=[
+            pltpu.VMEM((2, vmax), values.dtype),
+            pltpu.VMEM((2, xw), x.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    y = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((npanels * pr,), values.dtype),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+    )(chunk_vbase, chunk_xbase, chunk_col, chunk_mask.astype(jnp.int32),
+      chunk_voff, chunk_row, values, xp)
+    return y[:nrows]
 
 
 def _spmv_db_kernel(vbase_ref, col_ref, mask_ref, voff_ref, row_ref,
@@ -163,7 +350,7 @@ def spmv_pallas_db(chunk_vbase, chunk_col, chunk_mask, chunk_voff, chunk_row,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((nrows,), values.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",)),
     )(chunk_vbase, chunk_col, chunk_mask.astype(jnp.int32), chunk_voff,
       chunk_row, values, x)

@@ -19,7 +19,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.analysis.hlo import analyze_hlo
+from repro.analysis.hlo import analyze_hlo, xla_cost_analysis
 from repro.configs import ARCHS, get_config
 from repro.launch.mesh import make_production_mesh
 from repro.models import model as MD
@@ -224,7 +224,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                                      + mem.temp_size_in_bytes
                                      - mem.alias_size_in_bytes),
     }
-    ca = compiled.cost_analysis()
+    ca = xla_cost_analysis(compiled)
     rec["xla_cost_analysis"] = {k: float(v) for k, v in ca.items()
                                 if isinstance(v, (int, float))}
 

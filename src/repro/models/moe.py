@@ -67,9 +67,19 @@ def _local_combine(h_out, meta, n: int, K: int):
     return jnp.zeros((n, D), dtype=h_out.dtype).at[tok_of].add(contrib)
 
 
-def moe_fwd(params, x: jax.Array, cfg: ModelConfig
+def moe_fwd(params, x: jax.Array, cfg: ModelConfig, *, dropless: bool = False
             ) -> Tuple[jax.Array, jax.Array]:
-    """x: (B, S, D) -> (out, aux_loss). Load-balance aux loss per Switch."""
+    """x: (B, S, D) -> (out, aux_loss). Load-balance aux loss per Switch.
+
+    ``dropless=False`` (training) drops tokens over local expert capacity --
+    the standard throughput/memory compromise. Inference paths MUST pass
+    ``dropless=True``: capacity drops are decided over the whole local token
+    batch, so a token's output would depend on how *future* positions route
+    (non-causal), and step-decode (one token per call, effectively dropless)
+    could never reproduce the teacher-forced logits. Dropless capacity is
+    ``n_loc`` rounded up (each token routes to K *distinct* experts, so one
+    expert receives at most one assignment per token).
+    """
     from repro.sharding.rules import constrain, dp_world
     B, S, D = x.shape
     E, K = cfg.n_experts, cfg.topk
@@ -80,7 +90,7 @@ def moe_fwd(params, x: jax.Array, cfg: ModelConfig
     if B % G or N % G:
         G = 1
     n_loc = N // G
-    C = capacity(n_loc, cfg)
+    C = max(8, -(-n_loc // 8) * 8) if dropless else capacity(n_loc, cfg)
 
     xg = constrain(x.reshape(G, n_loc, D), "moe_group")
     logits = (xg @ params["router"].astype(dt)).astype(jnp.float32)

@@ -81,9 +81,14 @@ def init_params(cfg: ModelConfig, key) -> Params:
 # blocks
 # ----------------------------------------------------------------------------
 
-def _apply_block(kind: str, p: Params, x: jax.Array, cfg: ModelConfig
-                 ) -> Tuple[jax.Array, jax.Array]:
-    """Full-sequence forward for one block. Returns (x, aux_loss)."""
+def _apply_block(kind: str, p: Params, x: jax.Array, cfg: ModelConfig,
+                 train: bool) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward for one block. Returns (x, aux_loss).
+
+    ``train`` only affects MoE blocks: training keeps capacity-factor token
+    dropping; eval/prefill runs dropless so teacher-forced logits are causal
+    and match step decode exactly (see :func:`repro.models.moe.moe_fwd`).
+    """
     aux = jnp.zeros((), jnp.float32)
     window = cfg.window if kind == "lattn" else 0
 
@@ -95,7 +100,7 @@ def _apply_block(kind: str, p: Params, x: jax.Array, cfg: ModelConfig
     def _mlp_half(p_, x_):
         h2 = L.rmsnorm(x_, p_["norm2"], cfg.norm_eps)
         if cfg.n_experts:
-            o2, a2 = M.moe_fwd(p_["moe"], h2, cfg)
+            o2, a2 = M.moe_fwd(p_["moe"], h2, cfg, dropless=not train)
         else:
             o2, a2 = L.mlp_fwd(p_["mlp"], h2, cfg), jnp.zeros((), jnp.float32)
         return constrain(o2, "act"), a2
@@ -139,13 +144,19 @@ def _best_outer(u: int) -> int:
 
 
 def backbone(params: Params, x: jax.Array, cfg: ModelConfig,
-             remat_policy: str = "nothing") -> Tuple[jax.Array, jax.Array]:
-    """Run all layers on hidden states x (B, S, D). Returns (x, aux_loss)."""
+             remat_policy: str = "nothing", train: bool = False
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Run all layers on hidden states x (B, S, D). Returns (x, aux_loss).
+
+    ``train=False`` (eval / prefill / teacher forcing) runs MoE blocks
+    dropless so the full-sequence logits match step decode; ``forward_loss``
+    passes ``train=True`` to keep capacity dropping in training.
+    """
 
     def unit_fn(x, unit_params):
         aux = jnp.zeros((), jnp.float32)
         for p_idx, kind in enumerate(cfg.layer_pattern):
-            x, a = _apply_block(kind, unit_params[str(p_idx)], x, cfg)
+            x, a = _apply_block(kind, unit_params[str(p_idx)], x, cfg, train)
             aux = aux + a
         return x, aux
 
@@ -178,7 +189,7 @@ def backbone(params: Params, x: jax.Array, cfg: ModelConfig,
     else:
         aux = jnp.zeros((), jnp.float32)
     for r_idx, kind in enumerate(cfg.remainder_layers):
-        x, a = _apply_block(kind, params["rem"][str(r_idx)], x, cfg)
+        x, a = _apply_block(kind, params["rem"][str(r_idx)], x, cfg, train)
         aux = aux + a
     return x, aux
 
@@ -247,7 +258,7 @@ def forward_loss(params: Params, batch: Dict[str, jax.Array],
         labels = jnp.concatenate(
             [jnp.full(prefix.shape[:2], -1, labels.dtype), labels], axis=1)
     x = constrain(x, "act")
-    x, aux = backbone(params, x, cfg, remat_policy)
+    x, aux = backbone(params, x, cfg, remat_policy, train=True)
     x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
     loss = chunked_ce_loss(x, _lm_head(params, cfg), labels, cfg)
     metrics = {"ce_loss": loss, "aux_loss": aux}
@@ -308,7 +319,7 @@ def _decode_block(kind: str, p: Params, x, cache, pos, cfg: ModelConfig):
         x = x + o
         h2 = L.rmsnorm(x, p["norm2"], cfg.norm_eps)
         if cfg.n_experts:
-            o2, _ = M.moe_fwd(p["moe"], h2, cfg)
+            o2, _ = M.moe_fwd(p["moe"], h2, cfg, dropless=True)
         else:
             o2 = L.mlp_fwd(p["mlp"], h2, cfg)
         x = x + o2
@@ -322,7 +333,7 @@ def _decode_block(kind: str, p: Params, x, cache, pos, cfg: ModelConfig):
         x = x + o
         h2 = L.rmsnorm(x, p["norm2"], cfg.norm_eps)
         if cfg.n_experts:
-            o2, _ = M.moe_fwd(p["moe"], h2, cfg)
+            o2, _ = M.moe_fwd(p["moe"], h2, cfg, dropless=True)
         else:
             o2 = L.mlp_fwd(p["mlp"], h2, cfg)
         x = x + o2

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro._compat.hypothesis import given, settings, strategies as st
 
 from repro.core import formats as F
 from repro.core import matgen

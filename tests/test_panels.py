@@ -1,0 +1,165 @@
+"""Row-panel-tiled SPC5 layout + kernel tests (the VMEM-ceiling lift).
+
+Matrices here are sized >= 8x the single-panel tile (pr) and >= 8x the x
+window (xw), so the 2-D grid genuinely iterates over many panels and many
+column windows -- the regime the whole-vector kernels cannot reach without
+holding x and y fully VMEM-resident.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro._compat.hypothesis import given, settings, strategies as st
+
+from repro.core import formats as F
+from repro.core import matgen
+from repro.kernels import ops
+
+PR, XW = 16, 16          # small tiles so 160x144 spans 10 panels, 9+ windows
+
+
+def rand_dense(n, m, density, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return ((rng.random((n, m)) < density)
+            * rng.standard_normal((n, m))).astype(dtype)
+
+
+def make_panel_handle(n, m, density, rc, seed, pr=PR, cb=8, xw=XW):
+    d = rand_dense(n, m, density, seed=seed)
+    mat = F.csr_to_spc5(F.csr_from_dense(d), *rc)
+    return d, ops.prepare_panels(mat, pr=pr, cb=cb, xw=xw)
+
+
+@pytest.mark.parametrize("rc", F.SUPPORTED_BLOCKS)
+def test_panel_spmv_pallas_vs_oracle(rc):
+    """nrows=160 >= 8*pr, ncols=144 >= 8*xw: multi-panel, multi-window."""
+    d, h = make_panel_handle(160, 144, 0.12, rc, seed=sum(rc))
+    assert h.npanels >= 8 and h.ncols >= 8 * h.xw
+    x = np.random.default_rng(1).standard_normal(144).astype(np.float32)
+    tgt = d.astype(np.float64) @ x.astype(np.float64)
+    y_ref = ops.spmv(h, jnp.asarray(x), use_pallas=False)
+    y_pal = ops.spmv(h, jnp.asarray(x), use_pallas=True, interpret=True,
+                     double_buffer=False)
+    y_db = ops.spmv(h, jnp.asarray(x), use_pallas=True, interpret=True,
+                    double_buffer=True)
+    np.testing.assert_allclose(np.asarray(y_ref), tgt, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(y_db), np.asarray(y_ref),
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("rc", F.SUPPORTED_BLOCKS)
+@pytest.mark.parametrize("nvec,nvt", [(8, 4)])
+def test_panel_spmm_pallas_vs_oracle(rc, nvec, nvt):
+    d, h = make_panel_handle(160, 144, 0.15, rc, seed=7)
+    X = np.random.default_rng(2).standard_normal((144, nvec)).astype(np.float32)
+    tgt = d.astype(np.float64) @ X.astype(np.float64)
+    Y_ref = ops.spmm(h, jnp.asarray(X), use_pallas=False)
+    Y_pal = ops.spmm(h, jnp.asarray(X), use_pallas=True, interpret=True,
+                     nvt=nvt)
+    np.testing.assert_allclose(np.asarray(Y_ref), tgt, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(Y_pal), np.asarray(Y_ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_panel_layout_invariants():
+    csr = matgen.banded(400, 7, 0.8, seed=6)
+    mat = F.csr_to_spc5(csr, 2, 8)
+    pan = F.to_panels(mat, pr=32, cb=8, xw=32)
+    # panels are r-aligned and chunk_row panel-relative
+    assert pan.pr % pan.r == 0
+    assert pan.chunk_row.min() >= 0
+    assert pan.chunk_row.max() <= pan.pr - pan.r
+    # window-relative columns stay inside the x window
+    real = pan.chunk_mask != 0
+    assert pan.chunk_col[real].min() >= 0
+    assert pan.chunk_col[real].max() <= pan.xw - pan.c
+    # windows are aligned and in-bounds after padding
+    assert np.all(pan.chunk_xbase % 8 == 0)
+    assert int(pan.chunk_xbase.max()) + pan.xw <= pan.ncols_pad
+    # every nonzero survives (padding chunks are mask==0)
+    assert int(F.popcount_u32(pan.chunk_mask.reshape(-1)).sum()) == mat.nnz
+    # values stay packed: only chunk-alignment padding
+    nch_real = int((pan.chunk_mask.any(axis=-1)).sum())
+    assert pan.values.shape[0] <= mat.nnz + 8 * nch_real + pan.vmax + 8
+
+
+def test_prepare_auto_layout_selection():
+    small = F.csr_to_spc5(F.csr_from_dense(rand_dense(48, 40, 0.3, 1)), 2, 4)
+    h = ops.prepare(small)
+    assert isinstance(h, ops.SPC5Handle)
+    # force a tiny budget so a modest matrix exceeds the whole-vector ceiling
+    assert not ops.fits_whole_vector(10**6, 10**6)
+    big = F.csr_to_spc5(F.csr_from_dense(rand_dense(300, 280, 0.05, 2)), 2, 4)
+    hp = ops.prepare(big, layout="panels", pr=32, xw=64)
+    assert isinstance(hp, ops.SPC5PanelHandle)
+    x = np.random.default_rng(3).standard_normal(280).astype(np.float32)
+    y_whole = ops.spmv(ops.prepare(big, layout="whole"), jnp.asarray(x),
+                       use_pallas=False)
+    y_pan = ops.spmv(hp, jnp.asarray(x), use_pallas=False)
+    np.testing.assert_allclose(np.asarray(y_pan), np.asarray(y_whole),
+                               atol=1e-5)
+
+
+def test_panel_handle_pytree_roundtrip():
+    import jax
+    _, h = make_panel_handle(96, 96, 0.2, (2, 8), seed=9)
+    flat, tdef = jax.tree.flatten(h)
+    h2 = jax.tree.unflatten(tdef, flat)
+    x = jnp.ones((96,), jnp.float32)
+    np.testing.assert_allclose(np.asarray(ops.spmv(h2, x, use_pallas=False)),
+                               np.asarray(ops.spmv(h, x, use_pallas=False)))
+
+
+def test_sparse_linear_panel_layout():
+    from repro.core.sparse_linear import SparseLinear, prune_by_magnitude
+    rng = np.random.default_rng(4)
+    w = rng.standard_normal((160, 144)).astype(np.float32)
+    sl = SparseLinear.from_dense(w, density=0.2, layout="panels", pr=16,
+                                 xw=32)
+    assert isinstance(sl.handle, ops.SPC5PanelHandle)
+    wp = prune_by_magnitude(w, 0.2)
+    x = rng.standard_normal((3, 144)).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(sl(jnp.asarray(x))), x @ wp.T,
+                               atol=1e-4)
+    x1 = rng.standard_normal((1, 144)).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(sl(jnp.asarray(x1))), x1 @ wp.T,
+                               atol=1e-4)
+
+
+def test_panel_empty_and_edge():
+    d = np.zeros((64, 64), np.float32)
+    mat = F.csr_to_spc5(F.csr_from_dense(d), 2, 4)
+    h = ops.prepare_panels(mat, pr=8, cb=4, xw=16)
+    y = ops.spmv(h, jnp.ones(64), use_pallas=False)
+    np.testing.assert_allclose(np.asarray(y), 0.0)
+    d[63, 63] = 3.0
+    mat = F.csr_to_spc5(F.csr_from_dense(d), 4, 8)
+    h = ops.prepare_panels(mat, pr=8, cb=4, xw=16)
+    y = ops.spmv(h, jnp.ones(64), use_pallas=True, interpret=True,
+                 double_buffer=False)
+    assert np.asarray(y)[63] == pytest.approx(3.0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(24, 160),
+    m=st.integers(24, 160),
+    density=st.floats(0.02, 0.5),
+    rc=st.sampled_from(list(F.SUPPORTED_BLOCKS)),
+    pr=st.sampled_from([8, 16, 48]),
+    xw=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**20),
+)
+def test_property_panels_match_whole(n, m, density, rc, pr, xw, seed):
+    d = rand_dense(n, m, density, seed=seed)
+    mat = F.csr_to_spc5(F.csr_from_dense(d), *rc)
+    hp = ops.prepare_panels(mat, pr=pr, cb=8, xw=xw)
+    hw = ops.prepare(mat, layout="whole")
+    x = np.random.default_rng(seed + 1).standard_normal(m).astype(np.float32)
+    y_pan = np.asarray(ops.spmv(hp, jnp.asarray(x), use_pallas=False))
+    y_whole = np.asarray(ops.spmv(hw, jnp.asarray(x), use_pallas=False))
+    np.testing.assert_allclose(y_pan, y_whole, atol=1e-5)
+    np.testing.assert_allclose(
+        y_pan, d.astype(np.float64) @ x.astype(np.float64), atol=5e-4)

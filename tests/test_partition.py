@@ -1,7 +1,7 @@
 """Block-balanced partition tests (paper §Parallelization)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro._compat.hypothesis import given, settings, strategies as st
 
 from repro.core import formats as F
 from repro.core import matgen

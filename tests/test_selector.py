@@ -34,6 +34,37 @@ def test_sequential_predictor_recovers_law():
     assert pred.predict("4x8", 24.0) > pred.predict("1x8", 24.0)
 
 
+def test_sequential_predictor_clamps_extrapolation():
+    """Regression: queries outside the fitted Avg range must clamp to the
+    range edge, not extrapolate the polynomial (a downward-curving degree-2
+    fit would otherwise predict -inf-ish throughput far outside the data and
+    an upward-curving one would fabricate wins)."""
+    store = S.RecordStore()
+    # concave fit: peak inside the fitted range, plummets outside it
+    for avg in [2.0, 4.0, 6.0, 8.0, 10.0]:
+        store.add("4x8", avg, 1, 10.0 - (avg - 6.0) ** 2)
+    pred = S.SequentialPredictor(store)
+    assert pred.clip["4x8"] == (2.0, 10.0)
+    # clamped: far-out queries return the edge prediction, not the raw poly
+    assert pred.predict("4x8", 1000.0) == pytest.approx(pred.predict("4x8", 10.0))
+    assert pred.predict("4x8", -50.0) == pytest.approx(pred.predict("4x8", 2.0))
+    # unclamped polynomial would be catastrophically wrong
+    raw = float(np.polyval(pred.coeffs["4x8"], 1000.0))
+    assert raw < -900_000
+    # predictions stay bounded by the fitted data's scale
+    assert abs(pred.predict("4x8", 1000.0)) <= 11.0
+
+
+def test_record_store_pr_field_roundtrip(tmp_path):
+    p = str(tmp_path / "records.json")
+    store = S.RecordStore(p)
+    store.add("4x8", 12.0, 1, 3.5, matrix="m1", pr=512)
+    store.add("4x8", 12.0, 1, 3.1)   # whole-vector layout -> pr defaults to 0
+    store.save()
+    store2 = S.RecordStore(p)
+    assert [r.pr for r in store2.records] == [512, 0]
+
+
 def test_parallel_predictor_2d():
     store = S.RecordStore()
     for avg in [1.0, 4.0, 16.0]:

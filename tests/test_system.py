@@ -106,9 +106,11 @@ def test_e2e_selector_drives_format_choice():
     from repro.core.selector import RecordStore, select_kernel
     store = RecordStore()
     # seed records with a plausible performance law: throughput grows with
-    # fill, large blocks win when well-filled
+    # fill, large blocks win when well-filled. Records cover each kernel's
+    # full Avg range (up to r*c*2): the predictor interpolates within the
+    # fitted range and clamps outside it (no extrapolation fabrication).
     for k, (r, c) in [("1x8", (1, 8)), ("4x4", (4, 4)), ("4x8", (4, 8))]:
-        for avg in [1, 2, 4, 8, 16]:
+        for avg in [1, 2, 4, 8, 16, 32, 64]:
             eff = min(1.0, avg / (r * c))
             store.add(k, avg, 1, 2.0 * eff * (r * c) ** 0.3)
     dense_csr = matgen.dense(96, seed=2)
