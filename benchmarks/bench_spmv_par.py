@@ -7,22 +7,27 @@ owning device).
 """
 from __future__ import annotations
 
+import json
 import os
 import subprocess
 import sys
-from typing import List
+from typing import List, Optional
+
+from repro.core.selector import Record, RecordStore
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 _CODE = r"""
-import time, numpy as np, jax, jax.numpy as jnp
+import dataclasses, json, time, numpy as np, jax, jax.numpy as jnp
 from jax.sharding import Mesh
 from repro.core import formats as F, distributed as D, matgen
+from repro.core import selector as S
 
 names = __NAMES__
 for name in names:
     csr = matgen.SET_A[name]()
     mat = F.csr_to_spc5(csr, 1, 8)
+    feats = S.spc5_features(mat)
     mesh = Mesh(np.array(jax.devices()).reshape(8,), ("data",))
     x = jnp.asarray(np.random.default_rng(0).standard_normal(csr.shape[1]),
                     jnp.float32)
@@ -42,10 +47,18 @@ for name in names:
         gf = 2.0 * csr.nnz / t / 1e9
         tag = "" if pr is None else f"_pr{pr}"
         print(f"spmv_par.{name}.1x8_dev8{tag},{t*1e6:.1f},gflops={gf:.3f}")
+        # full-schema record for the auto-tuner (workers=8 layout point);
+        # serialise through Record itself so the schema stays in one place
+        cfg = (S.PanelConfig("whole", 0, 0, 512) if pr is None
+               else S.PanelConfig("panels", pr, 512, 64))
+        rs = S.RecordStore()
+        rs.add_measurement("1x8", feats, cfg, 8, gf, matrix=name)
+        print("RECORD " + json.dumps(dataclasses.asdict(rs.records[0])))
 """
 
 
-def run(quick: bool = False) -> List[str]:
+def run(quick: bool = False, store: Optional[RecordStore] = None
+        ) -> List[str]:
     names = ["atmosmodd", "bone010", "pdb1HYS"] if quick else [
         "atmosmodd", "bone010", "pdb1HYS", "HV15R", "ldoor", "cage15"]
     env = dict(os.environ)
@@ -56,6 +69,10 @@ def run(quick: bool = False) -> List[str]:
         capture_output=True, text=True, env=env, timeout=1200)
     if res.returncode != 0:
         raise RuntimeError(f"parallel bench failed:\n{res.stderr[-2000:]}")
+    if store is not None:
+        for l in res.stdout.splitlines():
+            if l.startswith("RECORD "):
+                store.records.append(Record(**json.loads(l[len("RECORD "):])))
     return [l for l in res.stdout.splitlines() if l.startswith("spmv_par")]
 
 

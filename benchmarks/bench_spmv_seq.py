@@ -3,13 +3,22 @@
 MKL-CSR / CSR5 are unavailable offline; the baseline is a jnp CSR
 (segment-sum) SpMV on the same data. Absolute GFlop/s on this CPU container
 are NOT Skylake numbers -- the deliverable is the RELATIVE format comparison
-and the records that feed the paper's selector (bench_selector.py).
+and the records that feed the paper's selector (bench_selector.py) and the
+(layout, pr, xw, cb) auto-tuner (``selector.tune``).
+
+Two record-producing modes:
+
+  * the main loop benches every kernel at the fixed default configs and
+    tags records with the full config + matrix features;
+  * ``sweep_matrix`` (the candidate-sweep mode, ``run(sweep=True)``)
+    additionally measures a grid of candidate configurations per kernel so
+    the tuner has per-config training data across the feature space.
 """
 from __future__ import annotations
 
 import functools
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +26,8 @@ import numpy as np
 
 from repro.core import formats as F
 from repro.core import matgen
-from repro.core.selector import RecordStore
+from repro.core import selector as S
+from repro.core.selector import PanelConfig, RecordStore
 from repro.kernels import ops
 
 KERNELS = [(1, 8), (2, 4), (2, 8), (4, 4), (4, 8), (8, 4)]
@@ -27,6 +37,22 @@ KERNELS = [(1, 8), (2, 4), (2, 8), (4, 4), (4, 8), (8, 4)]
 # tagged with pr so the selector can distinguish the layouts.
 PANEL_PRS = (512, 2048)
 PANEL_XW = 2048
+
+# Candidate configurations for the sweep mode: the auto-tuner's training
+# grid. Whole-vector chunk sizes bracket the default; panel configs span
+# short/tall panels and narrow/wide x windows.
+SWEEP_CONFIGS: Tuple[PanelConfig, ...] = (
+    PanelConfig("whole", 0, 0, 256),
+    PanelConfig("whole", 0, 0, 512),
+    PanelConfig("panels", 256, 512, 64),
+    PanelConfig("panels", 512, 2048, 64),
+    PanelConfig("panels", 2048, 2048, 64),
+    PanelConfig("panels", 512, 512, 32),
+)
+SWEEP_KERNELS = ((1, 8), (4, 4))
+# Sweep-mode matrix subset: one per structural class keeps the quick run
+# minutes-scale while covering the feature space.
+SWEEP_MATRICES = ("atmosmodd", "bone010", "ns3Da")
 
 
 @functools.partial(jax.jit, static_argnames=("nrows",))
@@ -62,6 +88,7 @@ def bench_matrix(name: str, csr, store: Optional[RecordStore] = None,
     lines.append(f"spmv_seq.{name}.csr,{t*1e6:.1f},gflops={gf_csr:.3f}")
     for rc in KERNELS:
         mat = F.csr_to_spc5(csr, *rc)
+        feats = S.spc5_features(mat)
         h = ops.prepare(mat, cb=512, dtype=np.float32, layout="whole")
         t = time_fn(lambda: ops.spmv(h, x, use_pallas=False))
         gf = flops / t / 1e9
@@ -69,7 +96,9 @@ def bench_matrix(name: str, csr, store: Optional[RecordStore] = None,
         lines.append(f"spmv_seq.{name}.{kname},{t*1e6:.1f},"
                      f"gflops={gf:.3f};speedup_vs_csr={gf/gf_csr:.2f}")
         if store is not None:
-            store.add(kname, mat.avg_nnz_per_block, workers, gf, matrix=name)
+            store.add_measurement(kname, feats,
+                                  PanelConfig("whole", 0, 0, 512), workers,
+                                  gf, matrix=name)
         # row-panel-tiled layout sweep (bounded-VMEM path)
         for pr in PANEL_PRS:
             hp = ops.prepare_panels(mat, pr=pr, cb=64, xw=PANEL_XW,
@@ -80,8 +109,9 @@ def bench_matrix(name: str, csr, store: Optional[RecordStore] = None,
                 f"spmv_seq.{name}.{kname}_pr{pr},{tp*1e6:.1f},"
                 f"gflops={gfp:.3f};panels={hp.npanels};chunks={hp.nchunks}")
             if store is not None:
-                store.add(kname, mat.avg_nnz_per_block, workers, gfp,
-                          matrix=name, pr=pr)
+                store.add_measurement(
+                    kname, feats, PanelConfig("panels", pr, PANEL_XW, 64),
+                    workers, gfp, matrix=name)
         # paper's beta(r,c)_test variants for the small blocks
         if rc in ((1, 8), (2, 4)):
             ht = ops.prepare_test(mat, cb=512, dtype=np.float32)
@@ -92,12 +122,59 @@ def bench_matrix(name: str, csr, store: Optional[RecordStore] = None,
                 f"gflops={gft:.3f};singles="
                 f"{int(ht.single_values.shape[0])}")
             if store is not None:
-                store.add(f"{kname}_test", mat.avg_nnz_per_block, workers,
-                          gft, matrix=name)
+                store.add_measurement(f"{kname}_test", feats,
+                                      PanelConfig("whole", 0, 0, 512),
+                                      workers, gft, matrix=name)
     return lines
 
 
-def run(quick: bool = False, store: Optional[RecordStore] = None):
+def sweep_matrix(name: str, csr, store: RecordStore,
+                 kernels: Sequence[Tuple[int, int]] = SWEEP_KERNELS,
+                 configs: Sequence[PanelConfig] = SWEEP_CONFIGS,
+                 workers: int = 1, iters: int = 8) -> List[str]:
+    """Candidate-sweep mode: measure every (kernel, config) candidate.
+
+    This is the auto-tuner's training loop -- each measurement lands in the
+    store with the full configuration and the matrix's features, so
+    ``selector.tune`` can interpolate per-config throughput for unseen
+    matrices. Configs are clamped to the matrix first (identical geometry
+    after clamping is measured once).
+    """
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(csr.shape[1]), jnp.float32)
+    flops = 2.0 * csr.nnz
+    lines = []
+    for rc in kernels:
+        mat = F.csr_to_spc5(csr, *rc)
+        feats = S.spc5_features(mat)
+        kname = f"{rc[0]}x{rc[1]}"
+        seen = set()
+        for cfg in configs:
+            cfg = S.clamp_config(cfg, nrows=mat.nrows, ncols=mat.ncols,
+                                 r=mat.r, c=mat.c, nblocks=mat.nblocks)
+            if cfg in seen:
+                continue
+            seen.add(cfg)
+            h = ops.prepare(mat, layout=cfg.layout, pr=cfg.pr or None,
+                            xw=cfg.xw or None, cb=cfg.cb, dtype=np.float32,
+                            tune=False)
+            t = time_fn(lambda: ops.spmv(h, x, use_pallas=False), iters=iters)
+            gf = flops / t / 1e9
+            tag = (f"whole_cb{cfg.cb}" if cfg.layout == "whole" else
+                   f"pr{cfg.pr}_xw{cfg.xw}_cb{cfg.cb}")
+            lines.append(f"spmv_sweep.{name}.{kname}.{tag},{t*1e6:.1f},"
+                         f"gflops={gf:.3f}")
+            store.add_measurement(kname, feats, cfg, workers, gf, matrix=name)
+    return lines
+
+
+def run(quick: bool = False, store: Optional[RecordStore] = None,
+        sweep: bool = False, sweep_store: Optional[RecordStore] = None):
+    """``sweep_store`` receives the candidate-sweep records; it defaults to
+    ``store`` but callers that later fit the paper's per-kernel predictors
+    on ``store`` (bench_selector) should pass a separate one -- those
+    predictors key only on (kernel, workers, pr) and would otherwise mix
+    the sweep's alternative chunk sizes into one curve."""
     names = list(matgen.SET_A)
     if quick:
         names = ["atmosmodd", "bone010", "kron_g500-logn21", "pdb1HYS",
@@ -106,6 +183,8 @@ def run(quick: bool = False, store: Optional[RecordStore] = None):
     for name in names:
         csr = matgen.SET_A[name]()
         lines.extend(bench_matrix(name, csr, store=store))
+        if sweep and store is not None and name in SWEEP_MATRICES:
+            lines.extend(sweep_matrix(name, csr, sweep_store or store))
     return lines
 
 

@@ -106,10 +106,12 @@ def main(dryrun_dir: str = DRYRUN_DIR, tag: str = "", csv: bool = True):
     rows = [r for r in rows if r is not None]
     order = {"pod16x16": 0, "pod2x16x16": 1}
     rows.sort(key=lambda r: (r["arch"], r["shape"], order.get(r["mesh"], 2)))
-    md = markdown_table(rows)
-    out_path = os.path.join(dryrun_dir, "..", f"roofline{tag}.md")
-    with open(out_path, "w") as f:
-        f.write(md + "\n")
+    if rows:        # nothing to report (and maybe no experiments/ dir) -> skip
+        md = markdown_table(rows)
+        out_path = os.path.join(dryrun_dir, "..", f"roofline{tag}.md")
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+        with open(out_path, "w") as f:
+            f.write(md + "\n")
     if csv:
         for r in rows:
             if "skipped" in r:

@@ -29,6 +29,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import formats as F
 from . import ref_spmv as R
+from . import selector as S
 from .partition import partition_matrix, partition_row_starts
 
 
@@ -150,7 +151,9 @@ def shard_matrix_panels(mat: F.SPC5Matrix, ndev: int, pr: int = 512,
 
 def shard_matrix(mat: F.SPC5Matrix, ndev: int, cb: Optional[int] = None,
                  mesh: Optional[Mesh] = None, axis: str = "data",
-                 dtype=None, pr: Optional[int] = None, xw: int = 512):
+                 dtype=None, pr: Optional[int] = None, xw: int = 512,
+                 store: Optional[S.RecordStore] = None,
+                 config: Optional[S.PanelConfig] = None, tune: bool = True):
     """Partition + chunk + stack + (optionally) device_put with sharding.
 
     ``pr=None`` keeps the flat whole-vector per-device layout; passing a
@@ -158,7 +161,32 @@ def shard_matrix(mat: F.SPC5Matrix, ndev: int, cb: Optional[int] = None,
     composed with per-device row-panel tiling). ``cb=None`` uses the
     layout's default chunk size (256 flat, 64 panels); an explicit ``cb``
     is honored as-is.
+
+    **Auto-tuning**: when neither ``pr`` nor ``cb`` is given and a record
+    store is available (``store``, or the selector's default store), the
+    per-device layout comes from ``selector.tune`` at ``workers=ndev``,
+    clamped to the per-shard row count. Passing ``config`` (a
+    ``selector.PanelConfig``) is the explicit escape hatch that bypasses
+    tuning; ``tune=False`` disables it and keeps the fixed defaults.
     """
+    if config is None and tune and pr is None and cb is None:
+        tstore = store if store is not None else S.get_default_store()
+        if tstore is not None and tstore.records:
+            config = S.tune(S.spc5_features(mat), store=tstore,
+                            kernel=f"{mat.r}x{mat.c}", workers=ndev)
+    if config is not None:
+        # clamp against the per-shard slab, not the global matrix: each
+        # device tiles only ~nrows/ndev rows
+        rows_loc = -(-mat.nrows // max(ndev, 1))
+        config = S.clamp_config(
+            config, nrows=max(rows_loc, mat.r), ncols=mat.ncols, r=mat.r,
+            c=mat.c, nblocks=max(1, -(-mat.nblocks // max(ndev, 1))))
+        if config.layout == "panels":
+            return shard_matrix_panels(mat, ndev, pr=config.pr or 512,
+                                       cb=config.cb or 64,
+                                       xw=config.xw or 512, mesh=mesh,
+                                       axis=axis, dtype=dtype)
+        cb = config.cb if cb is None else cb
     if pr is not None:
         return shard_matrix_panels(mat, ndev, pr=pr,
                                    cb=64 if cb is None else cb, xw=xw,

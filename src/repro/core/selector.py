@@ -12,27 +12,121 @@ The best beta(r,c) depends on the matrix. Following the paper:
 
 Kernels are keyed "r x c" plus the "_test" suffix for the singleton-split
 variant, mirroring the paper's beta(r,c)_test naming.
+
+Beyond kernel choice, records carry the full device-layout configuration
+``(layout, pr, xw, cb)`` plus cheap matrix features (nnz/row, bandwidth,
+block fill), so the same record-and-predict machinery also auto-tunes the
+panel geometry: :func:`tune` interpolates each recorded configuration's
+throughput over the feature space and returns the argmax
+:class:`PanelConfig`.  ``repro.kernels.ops.prepare`` consults it whenever a
+record store is present and no explicit configuration was requested.
 """
 from __future__ import annotations
 
 import dataclasses
+import glob
 import json
 import os
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .formats import SUPPORTED_BLOCKS, CSRMatrix, block_stats
+from .formats import SUPPORTED_BLOCKS, CSRMatrix, SPC5Matrix, block_stats
 
 DEFAULT_KERNELS: Tuple[str, ...] = tuple(
     f"{r}x{c}" for (r, c) in SUPPORTED_BLOCKS if (r, c) != (1, 4)
 ) + ("1x8_test", "2x4_test")
+
+#: JSONL record-store schema version (bumped on incompatible field changes).
+RECORDS_VERSION = 1
+
+#: Env var naming a record store (JSON/JSONL file or a directory of stores)
+#: that ``ops.prepare`` consults for auto-tuning when the caller passes none.
+RECORDS_ENV = "SPC5_RECORDS"
 
 
 def kernel_block(kernel: str) -> Tuple[int, int]:
     rc = kernel.split("_")[0]
     r, c = rc.split("x")
     return int(r), int(c)
+
+
+@dataclasses.dataclass(frozen=True)
+class PanelConfig:
+    """A device-layout configuration for ``ops.prepare``.
+
+    ``layout`` is "whole", "panels", or "auto" (let ``prepare`` pick by VMEM
+    fit); ``pr``/``xw`` only matter for the panel-tiled layout; ``cb=None``
+    means the layout's default chunk size.
+    """
+
+    layout: str = "auto"
+    pr: int = 512
+    xw: int = 512
+    cb: Optional[int] = None
+
+
+#: What ``tune`` returns when no record is usable -- matches the fixed
+#: defaults ``ops.prepare`` used before auto-tuning existed.
+DEFAULT_CONFIG = PanelConfig()
+
+
+@dataclasses.dataclass(frozen=True)
+class MatrixFeatures:
+    """Cheap per-matrix statistics the tuner interpolates over.
+
+    All computable from CSR (or the converted beta(r,c)) without touching
+    values: the paper's "before converting a matrix into the format"
+    property is preserved.
+    """
+
+    nrows: int
+    ncols: int
+    nnz: int
+    nnz_row: float     # NNZ / nrows
+    bandwidth: float   # mean |col - row| over nonzeros (block-centre approx)
+    avg: float         # Avg NNZ/block for the (r,c) under consideration
+    fill: float        # avg / (r*c), in [0, 1]
+
+    def vector(self, workers: int = 1) -> np.ndarray:
+        """Interpolation coordinates; log-compress the heavy-tailed dims."""
+        return np.array([
+            self.avg,
+            np.log1p(self.nnz_row),
+            np.log1p(self.bandwidth),
+            np.log2(max(workers, 1)),
+        ], dtype=np.float64)
+
+
+def csr_features(csr: CSRMatrix, r: int, c: int) -> MatrixFeatures:
+    """Features straight from CSR (pre-conversion, paper-style)."""
+    _, avg = block_stats(csr, r, c)
+    nnz = csr.nnz
+    if nnz:
+        rows = np.repeat(np.arange(csr.nrows, dtype=np.int64),
+                         np.diff(csr.rowptr).astype(np.int64))
+        bw = float(np.abs(csr.colidx.astype(np.int64) - rows).mean())
+    else:
+        bw = 0.0
+    return MatrixFeatures(csr.nrows, csr.ncols, nnz, nnz / max(csr.nrows, 1),
+                          bw, avg, avg / (r * c))
+
+
+def spc5_features(mat: SPC5Matrix) -> MatrixFeatures:
+    """Features from an already-converted beta(r,c) matrix (block-level
+    bandwidth approximation: |block left col - block top row|)."""
+    n_intervals = mat.block_rowptr.shape[0] - 1
+    if mat.nblocks:
+        interval_of_block = np.repeat(
+            np.arange(n_intervals, dtype=np.int64),
+            np.diff(mat.block_rowptr).astype(np.int64))
+        bw = float(np.abs(mat.block_colidx.astype(np.int64)
+                          - interval_of_block * mat.r).mean())
+    else:
+        bw = 0.0
+    return MatrixFeatures(mat.nrows, mat.ncols, mat.nnz,
+                          mat.nnz / max(mat.nrows, 1), bw,
+                          mat.avg_nnz_per_block, mat.fill_ratio)
 
 
 @dataclasses.dataclass
@@ -43,27 +137,71 @@ class Record:
     gflops: float
     matrix: str = ""
     pr: int = 0       # row-panel height of the tiled layout; 0 == whole-vector
+    xw: int = 0       # panel x-window width; 0 == n/a (whole-vector/legacy)
+    cb: int = 0       # chunk size; 0 == layout default / legacy record
+    layout: str = ""  # "whole"/"panels"; "" == legacy (inferred from pr)
+    nnz_row: float = 0.0    # matrix features at measurement time (0 == legacy)
+    bandwidth: float = 0.0
+    fill: float = 0.0
+
+    def config(self) -> PanelConfig:
+        """Normalised layout configuration this record measured."""
+        layout = self.layout or ("panels" if self.pr else "whole")
+        return PanelConfig(layout=layout, pr=int(self.pr), xw=int(self.xw),
+                           cb=int(self.cb) if self.cb else None)
+
+    def features(self) -> MatrixFeatures:
+        rc = kernel_block(self.kernel)
+        return MatrixFeatures(0, 0, 0, self.nnz_row, self.bandwidth,
+                              self.avg, self.fill or self.avg / (rc[0] * rc[1]))
 
 
 class RecordStore:
-    """Persistent store of (kernel, avg, workers, pr) -> throughput records.
+    """Persistent store of (kernel, config, features) -> throughput records.
 
     ``pr`` records which device layout produced the measurement: 0 is the
     VMEM-resident whole-vector path, otherwise the row-panel height of the
-    panel-tiled kernels. Old JSON stores without the field load as pr=0.
+    panel-tiled kernels. ``xw``/``cb``/``layout`` complete the configuration
+    and ``nnz_row``/``bandwidth``/``fill`` snapshot the matrix features, so
+    :func:`tune` can interpolate per-config throughput. Old JSON stores
+    without the newer fields load with the dataclass defaults (legacy
+    records still feed the kernel selector; the tuner treats them as the
+    default-config measurement of their layout).
+
+    Two on-disk formats: the original single-JSON-array ``save``/load, and a
+    versioned JSONL store (``save_jsonl``/:func:`load_records`) whose files
+    can be merged across runs -- the CI artifact format.
     """
 
     def __init__(self, path: Optional[str] = None):
         self.path = path
         self.records: List[Record] = []
         if path and os.path.exists(path):
-            with open(path) as f:
-                self.records = [Record(**r) for r in json.load(f)]
+            self.records = _load_any(path)
 
     def add(self, kernel: str, avg: float, workers: int, gflops: float,
-            matrix: str = "", pr: int = 0) -> None:
+            matrix: str = "", pr: int = 0, xw: int = 0, cb: int = 0,
+            layout: str = "", nnz_row: float = 0.0, bandwidth: float = 0.0,
+            fill: float = 0.0) -> None:
         self.records.append(Record(kernel, float(avg), int(workers),
-                                   float(gflops), matrix, int(pr)))
+                                   float(gflops), matrix, int(pr), int(xw),
+                                   int(cb), layout, float(nnz_row),
+                                   float(bandwidth), float(fill)))
+
+    def add_measurement(self, kernel: str, feats: MatrixFeatures,
+                        config: PanelConfig, workers: int, gflops: float,
+                        matrix: str = "") -> None:
+        """Full-schema add: config + features in one call (sweep mode)."""
+        self.add(kernel, feats.avg, workers, gflops, matrix=matrix,
+                 pr=config.pr if config.layout == "panels" else 0,
+                 xw=config.xw if config.layout == "panels" else 0,
+                 cb=config.cb or 0, layout=config.layout,
+                 nnz_row=feats.nnz_row, bandwidth=feats.bandwidth,
+                 fill=feats.fill)
+
+    def extend(self, other: "RecordStore") -> "RecordStore":
+        self.records.extend(other.records)
+        return self
 
     def save(self, path: Optional[str] = None) -> None:
         path = path or self.path
@@ -74,8 +212,150 @@ class RecordStore:
             json.dump([dataclasses.asdict(r) for r in self.records], f)
         os.replace(tmp, path)
 
+    def save_jsonl(self, path: Optional[str] = None) -> None:
+        """Versioned JSONL: a header line then one record per line.
+
+        Append-friendly and mergeable: :func:`load_records` accepts a
+        directory of these files and concatenates them (deduplicating exact
+        duplicates), so every CI run can drop its own file into the store.
+        """
+        path = path or self.path
+        if not path:
+            raise ValueError("no path for RecordStore.save_jsonl")
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(json.dumps({"spc5_records_version": RECORDS_VERSION}) + "\n")
+            for r in self.records:
+                f.write(json.dumps(dataclasses.asdict(r)) + "\n")
+        os.replace(tmp, path)
+
     def kernels(self) -> List[str]:
         return sorted({r.kernel for r in self.records})
+
+    def configs(self, kernel: Optional[str] = None,
+                layout: Optional[str] = None) -> List[PanelConfig]:
+        """Distinct measured configurations (optionally for one kernel)."""
+        seen = []
+        for r in self.records:
+            if kernel is not None and r.kernel != kernel:
+                continue
+            cfg = r.config()
+            if layout is not None and cfg.layout != layout:
+                continue
+            if cfg not in seen:
+                seen.append(cfg)
+        return seen
+
+
+def _load_jsonl(path: str) -> List[Record]:
+    records: List[Record] = []
+    with open(path) as f:
+        first = f.readline()
+        if not first.strip():
+            return records
+        head = json.loads(first)
+        if isinstance(head, dict) and "spc5_records_version" in head:
+            ver = head["spc5_records_version"]
+            if ver > RECORDS_VERSION:
+                raise ValueError(
+                    f"{path}: records version {ver} is newer than supported "
+                    f"{RECORDS_VERSION}")
+        else:                       # headerless JSONL: first line is a record
+            records.append(Record(**head))
+        for line in f:
+            if line.strip():
+                records.append(Record(**json.loads(line)))
+    return records
+
+
+def _load_any(path: str) -> List[Record]:
+    """Load one store file: legacy JSON array, versioned JSONL, or a
+    ``BENCH_spmv.json`` payload (whose ``records`` list uses the same
+    schema) -- so pointing at a downloaded CI artifact directory Just Works.
+    """
+    try:                                    # whole-file JSON first: array or
+        with open(path) as f:               # a BENCH payload (indented dict)
+            payload = json.load(f)
+    except json.JSONDecodeError:
+        return _load_jsonl(path)            # line-delimited store
+    if isinstance(payload, list):
+        return [Record(**r) for r in payload]
+    if isinstance(payload, dict):
+        if isinstance(payload.get("records"), list):
+            ver = payload.get("version", RECORDS_VERSION)
+            if ver > RECORDS_VERSION:
+                raise ValueError(f"{path}: records version {ver} is newer "
+                                 f"than supported {RECORDS_VERSION}")
+            return [Record(**r) for r in payload["records"]]
+        if "spc5_records_version" in payload:
+            return []                       # header-only (empty) JSONL store
+        if "kernel" in payload:
+            return [Record(**payload)]      # single-line headerless JSONL
+    raise ValueError(f"{path}: not a recognisable record store")
+
+
+def load_records(path: str) -> RecordStore:
+    """Load + merge a record store: a file, or a directory of store files.
+
+    Directories merge every ``*.jsonl``/``*.json`` inside (sorted, so the
+    merge is deterministic); exact duplicate records (e.g. the same CI
+    artifact downloaded twice) are dropped.
+    """
+    store = RecordStore()
+    if os.path.isdir(path):
+        files = sorted(glob.glob(os.path.join(path, "*.jsonl"))
+                       + glob.glob(os.path.join(path, "*.json")))
+    else:
+        files = [path]
+    seen = set()
+    for fp in files:
+        for r in _load_any(fp):
+            key = tuple(dataclasses.asdict(r).items())
+            if key not in seen:
+                seen.add(key)
+                store.records.append(r)
+    return store
+
+
+# -- Default store (env-configured), consulted by ``ops.prepare`` -----------
+
+_default_store: Optional[RecordStore] = None
+_default_store_src: Optional[str] = None
+
+
+def set_default_store(store: Optional[RecordStore]) -> None:
+    """Install a process-wide store for auto-tuning (None clears it)."""
+    global _default_store, _default_store_src
+    _default_store = store
+    _default_store_src = "<explicit>" if store is not None else None
+
+
+def get_default_store() -> Optional[RecordStore]:
+    """The store ``ops.prepare`` tunes against when the caller passes none.
+
+    Resolution order: a store installed via :func:`set_default_store`, else
+    the path in ``$SPC5_RECORDS`` (file or directory; loaded once and cached
+    until the env var changes). Returns None when neither is present.
+    """
+    global _default_store, _default_store_src
+    if _default_store_src == "<explicit>":
+        return _default_store
+    src = os.environ.get(RECORDS_ENV)
+    if not src:
+        _default_store, _default_store_src = None, None
+        return None
+    if src != _default_store_src:
+        try:
+            _default_store = load_records(src)
+        except (OSError, ValueError, TypeError) as e:
+            import warnings
+            warnings.warn(
+                f"{RECORDS_ENV}={src!r} could not be loaded ({e!r}); "
+                f"auto-tuning is DISABLED until the env var changes",
+                RuntimeWarning, stacklevel=2)
+            _default_store = None
+        _default_store_src = src
+    return _default_store
 
 
 class SequentialPredictor:
@@ -181,3 +461,127 @@ def select_kernel(csr: CSRMatrix, store: RecordStore, workers: int = 1,
         scores = {k: pred.predict(k, feats[k], workers) for k in kernels}
     best = max(scores, key=lambda k: scores[k])
     return best, scores[best], scores
+
+
+# ----------------------------------------------------------------------------
+# Configuration auto-tuning (layout, pr, xw, cb) from recorded runs
+# ----------------------------------------------------------------------------
+
+class ConfigPredictor:
+    """Per-configuration throughput interpolation over matrix features.
+
+    The paper's selector interpolates per-*kernel* throughput over one
+    feature (Avg NNZ/block); panel geometry adds more knobs, and records are
+    sparse in the larger space, so a polynomial per config would be badly
+    conditioned. Instead each recorded configuration keeps its raw
+    (feature-vector, gflops) points and queries use inverse-distance-weighted
+    k-NN in the normalised feature space -- "simple interpolation of results
+    from previous executions", per the paper, generalised to 4 dims
+    (avg, log nnz/row, log bandwidth, log2 workers).
+    """
+
+    def __init__(self, store: RecordStore, kernel: Optional[str] = None,
+                 k: int = 3):
+        self.k = k
+        self.points: Dict[PanelConfig, Tuple[np.ndarray, np.ndarray]] = {}
+        grouped: Dict[PanelConfig, List[Tuple[np.ndarray, float]]] = {}
+        all_vecs = []
+        for r in store.records:
+            if kernel is not None and r.kernel != kernel:
+                continue
+            vec = r.features().vector(r.workers)
+            grouped.setdefault(r.config(), []).append((vec, r.gflops))
+            all_vecs.append(vec)
+        if not all_vecs:
+            self.scale = np.ones(4)
+            return
+        arr = np.asarray(all_vecs)
+        # normalise each dimension by its spread so no single feature
+        # dominates the distance; constant dimensions get scale 1
+        std = arr.std(axis=0)
+        self.scale = np.where(std > 1e-9, std, 1.0)
+        for cfg, pts in grouped.items():
+            X = np.asarray([p[0] for p in pts]) / self.scale
+            y = np.asarray([p[1] for p in pts])
+            self.points[cfg] = (X, y)
+
+    def predict(self, feats: MatrixFeatures, config: PanelConfig,
+                workers: int = 1) -> float:
+        if config not in self.points:
+            return -np.inf
+        X, y = self.points[config]
+        q = feats.vector(workers) / self.scale
+        d = np.sqrt(((X - q[None, :]) ** 2).sum(axis=1))
+        if float(d.min()) < 1e-12:          # exact feature match
+            return float(y[d < 1e-12].mean())
+        idx = np.argsort(d)[:min(self.k, d.shape[0])]
+        w = 1.0 / d[idx]
+        return float((w * y[idx]).sum() / w.sum())
+
+    def configs(self) -> List[PanelConfig]:
+        return list(self.points)
+
+
+def tune(feats: MatrixFeatures, store: Optional[RecordStore] = None,
+         kernel: Optional[str] = None, workers: int = 1,
+         candidates: Optional[Sequence[PanelConfig]] = None) -> PanelConfig:
+    """Pick the layout configuration with the highest predicted throughput.
+
+    ``feats`` are the target matrix's features (:func:`csr_features` /
+    :func:`spc5_features`); ``kernel`` restricts the fit to records of one
+    block geometry (pass ``f"{r}x{c}"`` when the block is already fixed);
+    ``candidates`` restricts the search to a subset of configurations
+    (default: every configuration the store has measured).
+
+    Falls back to :data:`DEFAULT_CONFIG` when the store is missing, empty,
+    or has no records for the requested kernel -- auto-tuning never makes a
+    configuration *less* defined than the fixed defaults.
+    """
+    if store is None:
+        store = get_default_store()
+    if store is None or not store.records:
+        return DEFAULT_CONFIG
+    # cache the fitted predictor on the store: building one is O(n_records)
+    # and models with many sparse layers call tune() per layer. The record
+    # count keys invalidation (stores are append-only in practice).
+    cache = store.__dict__.setdefault("_predictor_cache", {})
+    key = (kernel, len(store.records))
+    pred = cache.get(key)
+    if pred is None:
+        pred = cache[key] = ConfigPredictor(store, kernel=kernel)
+    cfgs = list(candidates) if candidates is not None else pred.configs()
+    cfgs = [c for c in cfgs if c in pred.points]
+    if not cfgs:
+        # no records for this kernel: fall back to kernel-agnostic records
+        if kernel is not None:
+            return tune(feats, store=store, kernel=None, workers=workers,
+                        candidates=candidates)
+        return DEFAULT_CONFIG
+    scores = {c: pred.predict(feats, c, workers) for c in cfgs}
+    best = max(scores, key=lambda c: scores[c])
+    if not np.isfinite(scores[best]):
+        return DEFAULT_CONFIG
+    return best
+
+
+def clamp_config(cfg: PanelConfig, *, nrows: int, ncols: int, r: int, c: int,
+                 nblocks: int, align: int = 8) -> PanelConfig:
+    """Validate a tuned configuration against a concrete matrix's dims.
+
+    A store fitted on large matrices can propose panels taller than the
+    matrix, x windows wider than its columns, or chunks larger than its
+    block count; each is clamped to the matrix (keeping the layout's
+    alignment invariants: pr a multiple of r, xw a multiple of ``align``
+    with room for one block, cb >= 1). Only set fields are touched --
+    zeros/None keep meaning "layout default".
+    """
+    pr, xw, cb = cfg.pr, cfg.xw, cfg.cb
+    if pr:
+        pr = max(r, min(pr, -(-nrows // r) * r))
+    if xw:
+        hi = -(-(ncols + align) // align) * align
+        xw = max(c + align, min(xw, hi))
+        xw = -(-xw // align) * align
+    if cb:
+        cb = max(1, min(cb, max(1, nblocks)))
+    return PanelConfig(layout=cfg.layout, pr=pr, xw=xw, cb=cb)

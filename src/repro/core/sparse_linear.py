@@ -71,19 +71,24 @@ class SparseLinear:
                    store: Optional[S.RecordStore] = None,
                    bias: Optional[np.ndarray] = None,
                    cb: Optional[int] = None, dtype=None, layout: str = "auto",
-                   pr: int = 512, xw: int = 512,
-                   nvec: int = 128) -> "SparseLinear":
+                   pr: Optional[int] = None, xw: Optional[int] = None,
+                   nvec: int = 128, tune: bool = True) -> "SparseLinear":
         """``nvec``: widest activation batch this layer will see -- feeds
         the auto layout's VMEM budget (SpMM tiles are nvt=min(nvec,128)
         wide). Defaults to 128 (one full lane tile) since batch size is
-        unknown at build time; pass nvec=1 for strictly-SpMV layers."""
+        unknown at build time; pass nvec=1 for strictly-SpMV layers.
+
+        The record ``store`` drives both the (r,c) block choice and the
+        (layout, pr, xw, cb) auto-tune in ``ops.prepare``; explicit
+        ``layout``/``pr``/``xw``/``cb`` arguments are the escape hatch that
+        overrides tuning (``tune=False`` disables it)."""
         w = prune_by_magnitude(np.asarray(w), density)
         csr = F.csr_from_dense(w)
         if block is None:
             block = choose_block(csr, store)
         mat = F.csr_to_spc5(csr, *block)
         h = ops.prepare(mat, cb=cb, dtype=dtype, layout=layout, pr=pr, xw=xw,
-                        nvec=nvec)
+                        nvec=nvec, store=store, tune=tune)
         b = None if bias is None else jnp.asarray(bias)
         return cls(handle=h, bias=b)
 

@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.core import formats as F
 from repro.core import ref_spmv as R
+from repro.core import selector as S
 from . import spc5_spmv, spc5_spmm
 
 
@@ -121,8 +122,9 @@ def fits_whole_vector(nrows: int, ncols: int, itemsize: int = 4,
 
 
 def prepare(mat: F.SPC5Matrix, cb: Optional[int] = None, align: int = 8,
-            dtype=None, layout: str = "auto", pr: int = 512, xw: int = 512,
-            nvec: int = 1):
+            dtype=None, layout: str = "auto", pr: Optional[int] = None,
+            xw: Optional[int] = None, nvec: int = 1,
+            store: Optional[S.RecordStore] = None, tune: bool = True):
     """Build a device handle; returns SPC5Handle or SPC5PanelHandle.
 
     ``layout``: "whole" forces the VMEM-resident whole-vector layout,
@@ -133,14 +135,46 @@ def prepare(mat: F.SPC5Matrix, cb: Optional[int] = None, align: int = 8,
     batch this handle will see) so "auto" budgets the nvt-wide SpMM tiles,
     not just the SpMV vectors.
 
-    ``cb=None`` uses the layout's default chunk size (256 whole-vector, 64
-    panels -- panel chunks are smaller because each also pins an x window);
-    an explicit ``cb`` is honored as-is on either path.
+    **Auto-tuning**: when nothing is requested explicitly (``layout="auto"``
+    and ``pr``/``xw``/``cb`` all None) and a record store is available --
+    passed as ``store``, installed via ``selector.set_default_store``, or
+    named by ``$SPC5_RECORDS`` -- the configuration comes from
+    ``selector.tune`` fitted on that store's measurements for this block
+    geometry, clamped against this matrix's dims
+    (``selector.clamp_config``). Any explicit argument is an escape hatch
+    that bypasses tuning entirely (``tune=False`` disables it outright);
+    with no store, the fixed defaults below apply unchanged.
+
+    ``pr``/``xw`` default to 512; ``cb=None`` uses the layout's default
+    chunk size (256 whole-vector, 64 panels -- panel chunks are smaller
+    because each also pins an x window); an explicit ``cb`` is honored
+    as-is on either path.
     """
     if layout not in ("auto", "whole", "panels"):
         raise ValueError(f"unknown layout {layout!r}")
+    itemsize = np.dtype(dtype or mat.values.dtype).itemsize
+    if tune and layout == "auto" and pr is None and xw is None and cb is None:
+        tstore = store if store is not None else S.get_default_store()
+        if tstore is not None and tstore.records:
+            cfg = S.tune(S.spc5_features(mat), store=tstore,
+                         kernel=f"{mat.r}x{mat.c}")
+            cfg = S.clamp_config(cfg, nrows=mat.nrows, ncols=mat.ncols,
+                                 r=mat.r, c=mat.c, nblocks=mat.nblocks,
+                                 align=align)
+            if (cfg.layout == "whole"
+                    and not fits_whole_vector(*mat.shape, itemsize,
+                                              nvec=nvec)):
+                # a tuned whole-vector pick must never blow the VMEM budget;
+                # drop its geometry too -- a whole-layout cb (256/512) is an
+                # unmeasured, oversized panel chunk (vmax ~ cb*r*c elements)
+                cfg = S.PanelConfig(layout="panels")
+            layout = cfg.layout
+            pr = cfg.pr or None
+            xw = cfg.xw or None
+            cb = cfg.cb
+    pr = 512 if pr is None else pr
+    xw = 512 if xw is None else xw
     if layout == "auto":
-        itemsize = np.dtype(dtype or mat.values.dtype).itemsize
         layout = ("whole" if fits_whole_vector(*mat.shape, itemsize,
                                                nvec=nvec)
                   else "panels")
@@ -235,8 +269,13 @@ def spmv_test(h: SPC5TestHandle, x: jax.Array, **kw) -> jax.Array:
 
 
 def spmm(h, x: jax.Array, *, use_pallas: Optional[bool] = None,
-         nvt: int = 128, interpret: Optional[bool] = None) -> jax.Array:
-    """Y = A @ X, X of shape (ncols, nvec). Accepts either handle kind."""
+         nvt: int = 128, double_buffer: bool = True,
+         interpret: Optional[bool] = None) -> jax.Array:
+    """Y = A @ X, X of shape (ncols, nvec). Accepts either handle kind.
+
+    ``double_buffer`` (panel layout only) overlaps the next grid step's
+    value/x-slab DMAs with the current decode, mirroring the SpMV kernels.
+    """
     if use_pallas is None:
         use_pallas = _on_tpu()
     if interpret is None:
@@ -245,7 +284,9 @@ def spmm(h, x: jax.Array, *, use_pallas: Optional[bool] = None,
         if not use_pallas:
             return R.spmm_panels(h.dev, x, r=h.r, c=h.c, pr=h.pr,
                                  nrows=h.nrows, ncols_pad=h.ncols_pad)
-        return spc5_spmm.spmm_pallas_panels(
+        fn = (spc5_spmm.spmm_pallas_panels_db if double_buffer
+              else spc5_spmm.spmm_pallas_panels)
+        return fn(
             h.dev.chunk_vbase, h.dev.chunk_xbase, h.dev.chunk_col,
             h.dev.chunk_mask, h.dev.chunk_voff, h.dev.chunk_row,
             h.dev.values, x, r=h.r, c=h.c, cb=h.cb, vmax=h.vmax, xw=h.xw,

@@ -15,7 +15,10 @@ Two kernels:
   * ``spmm_pallas_panels`` -- row-panel-tiled layout, grid
     (nvec tiles, panels, chunks); each step holds a (pr, nvt) y tile and a
     DMA'd (xw, nvt) x slab, so VMEM stays bounded for arbitrarily large
-    matrices (see repro.core.formats.SPC5Panels).
+    matrices (see repro.core.formats.SPC5Panels). The default
+    ``spmm_pallas_panels_db`` variant double-buffers both DMA windows,
+    overlapping the next step's value/x-slab copies with this step's
+    decode (same software pipelining as the SpMV panel kernel).
 """
 from __future__ import annotations
 
@@ -199,6 +202,127 @@ def spmm_pallas_panels(chunk_vbase, chunk_xbase, chunk_col, chunk_mask,
             pltpu.VMEM((xw, nvt), x.dtype),
             pltpu.SemaphoreType.DMA,
             pltpu.SemaphoreType.DMA,
+        ],
+    )
+    y = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((npanels * pr, nvec), values.dtype),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
+    )(chunk_vbase, chunk_xbase, chunk_col, chunk_mask.astype(jnp.int32),
+      chunk_voff, chunk_row, values, xp)
+    return y[:nrows]
+
+
+def _spmm_panel_db_kernel(vbase_ref, xbase_ref, col_ref, mask_ref, voff_ref,
+                          row_ref, values_hbm, x_hbm, y_ref, vwin, xwin, vsem,
+                          xsem, *, r: int, c: int, cb: int, vmax: int,
+                          xw: int, pr: int, nvt: int, npanels: int,
+                          nchunks: int, nsteps: int):
+    """Double-buffered panel SpMM: overlap the NEXT (vec-tile, panel, chunk)
+    step's value/x-slab DMAs with this step's decode (the SpMM analogue of
+    ``_spmv_panel_db_kernel``). Buffers are indexed by the linearised step
+    t = (j * npanels + p) * nchunks + i, matching the grid's iteration
+    order, so the prefetch target is always the step that runs next."""
+    j = pl.program_id(0)
+    p = pl.program_id(1)
+    i = pl.program_id(2)
+    t = (j * npanels + p) * nchunks + i
+    slot = jax.lax.rem(t, jnp.int32(2))
+
+    @pl.when(i == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    @pl.when(t == 0)
+    def _first():
+        pltpu.make_async_copy(values_hbm.at[pl.ds(vbase_ref[0, 0], vmax)],
+                              vwin.at[0], vsem.at[0]).start()
+        pltpu.make_async_copy(
+            x_hbm.at[pl.ds(xbase_ref[0, 0], xw), pl.ds(0, nvt)],
+            xwin.at[0], xsem.at[0]).start()
+
+    @pl.when(t + 1 < nsteps)
+    def _prefetch_next():
+        nxt = jax.lax.rem(t + jnp.int32(1), jnp.int32(2))
+        inn = jax.lax.rem(t + jnp.int32(1), jnp.int32(nchunks))
+        jp = (t + jnp.int32(1)) // jnp.int32(nchunks)   # j * npanels + p
+        pn = jax.lax.rem(jp, jnp.int32(npanels))
+        jn = jp // jnp.int32(npanels)
+        pltpu.make_async_copy(values_hbm.at[pl.ds(vbase_ref[pn, inn], vmax)],
+                              vwin.at[nxt], vsem.at[nxt]).start()
+        pltpu.make_async_copy(
+            x_hbm.at[pl.ds(xbase_ref[pn, inn], xw), pl.ds(jn * nvt, nvt)],
+            xwin.at[nxt], xsem.at[nxt]).start()
+
+    pltpu.make_async_copy(values_hbm.at[pl.ds(vbase_ref[p, i], vmax)],
+                          vwin.at[slot], vsem.at[slot]).wait()
+    pltpu.make_async_copy(
+        x_hbm.at[pl.ds(xbase_ref[p, i], xw), pl.ds(j * nvt, nvt)],
+        xwin.at[slot], xsem.at[slot]).wait()
+
+    rc = r * c
+    mask = mask_ref[0, 0]
+    k = jnp.arange(rc, dtype=jnp.int32)
+    bits = ((mask[:, None] >> k[None, :]) & 1).astype(jnp.int32)    # (cb, rc)
+    ranks = jnp.cumsum(bits, axis=1) - bits
+    vidx = jnp.clip(voff_ref[0, 0][:, None] + ranks, 0, vmax - 1)
+    vals = jnp.take(vwin[slot], vidx, axis=0) * bits.astype(vwin.dtype)
+
+    xcol = jnp.clip(col_ref[0, 0][:, None]
+                    + jnp.arange(c, dtype=jnp.int32)[None, :], 0, xw - 1)
+    xg = jnp.take(xwin[slot], xcol, axis=0)
+
+    y = y_ref[...]
+    row = row_ref[0, 0]
+    for lr in range(r):                      # static unroll over block rows
+        acc = jnp.zeros((cb, y.shape[1]), dtype=y.dtype)
+        for lc in range(c):                  # static unroll over block cols
+            acc = acc + vals[:, lr * c + lc, None] * xg[:, lc, :]
+        yrow = jnp.clip(row + lr, 0, pr - 1)
+        y = y.at[yrow].add(acc)
+    y_ref[...] = y
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("r", "c", "cb", "vmax", "xw", "pr", "nrows", "ncols_pad",
+                     "nvt", "interpret"))
+def spmm_pallas_panels_db(chunk_vbase, chunk_xbase, chunk_col, chunk_mask,
+                          chunk_voff, chunk_row, values, x, *, r: int, c: int,
+                          cb: int, vmax: int, xw: int, pr: int, nrows: int,
+                          ncols_pad: int, nvt: int = 128,
+                          interpret: bool = False):
+    """Double-buffered row-panel-tiled Y = A @ X (see _spmm_panel_db_kernel)."""
+    npanels, nchunks = chunk_vbase.shape
+    nvec = x.shape[1]
+    nvt = min(nvt, nvec)
+    if nvec % nvt:
+        raise ValueError(f"nvec={nvec} not divisible by tile {nvt}")
+    xp = jnp.pad(x, ((0, max(0, ncols_pad - x.shape[0])), (0, 0)))
+    kernel = functools.partial(
+        _spmm_panel_db_kernel, r=r, c=c, cb=cb, vmax=vmax, xw=xw, pr=pr,
+        nvt=nvt, npanels=npanels, nchunks=nchunks,
+        nsteps=(nvec // nvt) * npanels * nchunks)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                  # chunk_vbase, chunk_xbase
+        grid=(nvec // nvt, npanels, nchunks),
+        in_specs=[
+            pl.BlockSpec((1, 1, cb), lambda j, p, i, vb, xb: (p, i, 0)),
+            pl.BlockSpec((1, 1, cb), lambda j, p, i, vb, xb: (p, i, 0)),
+            pl.BlockSpec((1, 1, cb), lambda j, p, i, vb, xb: (p, i, 0)),
+            pl.BlockSpec((1, 1, cb), lambda j, p, i, vb, xb: (p, i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),  # values (HBM)
+            pl.BlockSpec(memory_space=pl.ANY),  # x (HBM, windowed DMA)
+        ],
+        out_specs=pl.BlockSpec((pr, nvt), lambda j, p, i, vb, xb: (p, j)),
+        scratch_shapes=[
+            pltpu.VMEM((2, vmax), values.dtype),
+            pltpu.VMEM((2, xw, nvt), x.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
         ],
     )
     y = pl.pallas_call(

@@ -2,6 +2,15 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --batch 4 \
         --tokens 32 [--mesh 1x4] [--kv-dtype int8]
+
+SPC5 integration: ``--records`` points at a benchmark record store
+(JSON/JSONL file or directory, e.g. the CI ``benchmarks/records/``
+artifact) and installs it as the selector's default store, so any sparse
+layer built in-process gets an auto-tuned (layout, pr, xw, cb).
+``--vocab-spmv DENSITY`` additionally benches a magnitude-pruned
+SparseLinear vocab projection at decode shape (batch 1-vector SpMV) using
+the tuned configuration; ``--panel pr,xw,cb`` is the explicit escape hatch
+that overrides the tuner for that bench.
 """
 from __future__ import annotations
 
@@ -21,7 +30,20 @@ def main(argv=None):
     ap.add_argument("--mesh", default="", help="DxM, e.g. 1x4")
     ap.add_argument("--kv-dtype", default="bfloat16",
                     choices=["bfloat16", "int8"])
+    ap.add_argument("--records", default="",
+                    help="SPC5 record store (file or dir) for auto-tuned "
+                         "sparse-layer configs")
+    ap.add_argument("--vocab-spmv", type=float, default=0.0, metavar="DENSITY",
+                    help="bench a pruned SparseLinear vocab projection at "
+                         "this density (0 = off)")
+    ap.add_argument("--panel", default="",
+                    help="explicit pr,xw,cb for --vocab-spmv (overrides the "
+                         "tuned config)")
     args = ap.parse_args(argv)
+
+    from repro.core import selector as S
+    if args.records:
+        S.set_default_store(S.load_records(args.records))
 
     from jax.sharding import Mesh
     from repro.configs import get_smoke_config
@@ -60,6 +82,33 @@ def main(argv=None):
     print(f"{args.arch}: {args.batch}x{args.tokens} tokens, "
           f"{args.batch * (args.tokens - 1) / dt:.1f} tok/s "
           f"(kv={args.kv_dtype}, mesh={args.mesh or '1 device'})")
+
+    if args.vocab_spmv > 0:
+        from repro.core.sparse_linear import SparseLinear
+        kw = {}
+        if args.panel:
+            pr, xw, cb = (int(v) for v in args.panel.split(","))
+            kw = dict(layout="panels", pr=pr, xw=xw, cb=cb)
+        rng = np.random.default_rng(0)
+        w = rng.standard_normal((cfg.vocab, cfg.d_model)).astype(np.float32)
+        lin = SparseLinear.from_dense(w, density=args.vocab_spmv,
+                                      dtype=np.float32, nvec=1, **kw)
+        x = jnp.asarray(rng.standard_normal(cfg.d_model), jnp.float32)
+        h = lin.handle
+        lin(x).block_until_ready()
+        t0 = time.perf_counter()
+        iters = 16
+        for _ in range(iters):
+            y = lin(x)
+        y.block_until_ready()
+        us = (time.perf_counter() - t0) / iters * 1e6
+        layout = type(h).__name__
+        cfg_str = (f"pr={h.pr},xw={h.xw},cb={h.cb}"
+                   if hasattr(h, "pr") else f"cb={h.cb}")
+        src = ("explicit --panel" if args.panel
+               else ("tuned" if args.records else "defaults"))
+        print(f"vocab_spmv[{cfg.vocab}x{cfg.d_model}@{args.vocab_spmv}]: "
+              f"{us:.1f} us/call ({layout}, {cfg_str}, config={src})")
 
 
 if __name__ == "__main__":

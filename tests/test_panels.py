@@ -57,9 +57,13 @@ def test_panel_spmm_pallas_vs_oracle(rc, nvec, nvt):
     tgt = d.astype(np.float64) @ X.astype(np.float64)
     Y_ref = ops.spmm(h, jnp.asarray(X), use_pallas=False)
     Y_pal = ops.spmm(h, jnp.asarray(X), use_pallas=True, interpret=True,
-                     nvt=nvt)
+                     nvt=nvt, double_buffer=False)
+    Y_db = ops.spmm(h, jnp.asarray(X), use_pallas=True, interpret=True,
+                    nvt=nvt, double_buffer=True)
     np.testing.assert_allclose(np.asarray(Y_ref), tgt, atol=5e-4)
     np.testing.assert_allclose(np.asarray(Y_pal), np.asarray(Y_ref),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(Y_db), np.asarray(Y_ref),
                                atol=2e-5, rtol=2e-5)
 
 
