@@ -6,13 +6,22 @@ are NOT Skylake numbers -- the deliverable is the RELATIVE format comparison
 and the records that feed the paper's selector (bench_selector.py) and the
 (layout, pr, xw, cb) auto-tuner (``selector.tune``).
 
-Two record-producing modes:
+Three record-producing modes:
 
   * the main loop benches every kernel at the fixed default configs and
-    tags records with the full config + matrix features;
+    tags records with the full config + matrix features, including the
+    panel layout's locality stats (total real chunks = DMA windows, which
+    land in the records' ``nchunks`` field);
   * ``sweep_matrix`` (the candidate-sweep mode, ``run(sweep=True)``)
     additionally measures a grid of candidate configurations per kernel so
-    the tuner has per-config training data across the feature space.
+    the tuner has per-config training data across the feature space;
+  * ``bench_reorder`` measures every reordering strategy
+    (repro.core.reorder) against the unreordered baseline on matrices
+    where ordering matters (a scrambled banded matrix -- the classic RCM
+    case -- and a genuinely scattered one), reporting pre/post bandwidth
+    and chunk totals so BENCH artifacts show whether reordering shrank DMA
+    traffic; records carry ``PanelConfig.reorder`` + the post features so
+    ``selector.tune`` learns when reordering pays.
 """
 from __future__ import annotations
 
@@ -53,6 +62,20 @@ SWEEP_KERNELS = ((1, 8), (4, 4))
 # Sweep-mode matrix subset: one per structural class keeps the quick run
 # minutes-scale while covering the feature space.
 SWEEP_MATRICES = ("atmosmodd", "bone010", "ns3Da")
+
+# Reorder bench: strategies x matrices, at a geometry where per-panel x
+# windows (not the cb cap) bound the chunking, so ordering actually moves
+# the chunk count. "scrambled-band" is a banded matrix under a random
+# symmetric permutation (reordering should win big); "ns3Da" is uniform
+# random (strategies should decline rather than regress).
+REORDER_STRATEGIES = ("none", "sigma", "rcm", "colwindow")
+REORDER_MATRICES = {
+    "scrambled-band": lambda: matgen.scrambled_banded(12_000, 8, 1.0,
+                                                      seed=42),
+    "ns3Da": matgen.SET_A["ns3Da"],
+}
+REORDER_RC = (1, 8)
+REORDER_PR, REORDER_XW, REORDER_CB = 256, 512, 64
 
 
 @functools.partial(jax.jit, static_argnames=("nrows",))
@@ -99,19 +122,29 @@ def bench_matrix(name: str, csr, store: Optional[RecordStore] = None,
             store.add_measurement(kname, feats,
                                   PanelConfig("whole", 0, 0, 512), workers,
                                   gf, matrix=name)
-        # row-panel-tiled layout sweep (bounded-VMEM path)
+        # row-panel-tiled layout sweep (bounded-VMEM path). Locality stats
+        # ride along: nchunks_total counts the REAL (mask != 0) chunks --
+        # the layout's DMA-window total, what reordering tries to shrink --
+        # next to the padded grid dims; chunks_per_panel is its mean.
         for pr in PANEL_PRS:
             hp = ops.prepare_panels(mat, pr=pr, cb=64, xw=PANEL_XW,
                                     dtype=np.float32)
+            # real chunks straight off the built layout (mask==0 is padding)
+            # -- no second pass-1 planner run
+            nch_total = int(np.asarray(
+                (hp.dev.chunk_mask != 0).any(axis=-1).sum()))
             tp = time_fn(lambda: ops.spmv(hp, x, use_pallas=False))
             gfp = flops / tp / 1e9
             lines.append(
                 f"spmv_seq.{name}.{kname}_pr{pr},{tp*1e6:.1f},"
-                f"gflops={gfp:.3f};panels={hp.npanels};chunks={hp.nchunks}")
+                f"gflops={gfp:.3f};panels={hp.npanels};chunks={hp.nchunks}"
+                f";nchunks_total={nch_total}"
+                f";chunks_per_panel={nch_total / max(hp.npanels, 1):.2f}"
+                f";bandwidth={feats.bandwidth:.1f}")
             if store is not None:
                 store.add_measurement(
                     kname, feats, PanelConfig("panels", pr, PANEL_XW, 64),
-                    workers, gfp, matrix=name)
+                    workers, gfp, matrix=name, nchunks=nch_total)
         # paper's beta(r,c)_test variants for the small blocks
         if rc in ((1, 8), (2, 4)):
             ht = ops.prepare_test(mat, cb=512, dtype=np.float32)
@@ -168,6 +201,65 @@ def sweep_matrix(name: str, csr, store: RecordStore,
     return lines
 
 
+def bench_reorder(name: str, csr, store: Optional[RecordStore] = None,
+                  workers: int = 1, iters: int = 8) -> List[str]:
+    """Reordering-strategy comparison at a window-bound panel geometry.
+
+    One line per strategy: throughput plus the pre/post locality metrics
+    (mean element bandwidth and total panel chunks = DMA windows). Each
+    result is checked against the unreordered baseline product, so a
+    permutation-plumbing regression fails the bench rather than emitting
+    wrong-but-fast numbers. Records tag the strategy in
+    ``PanelConfig.reorder`` (only when it actually applied) with the
+    post-reorder features, the tuner's training signal for when reordering
+    pays.
+    """
+    from repro.core import structure as ST
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(csr.shape[1]), jnp.float32)
+    flops = 2.0 * csr.nnz
+    mat = F.csr_to_spc5(csr, *REORDER_RC)
+    feats = S.spc5_features(mat)            # PRE-reorder tune coordinates
+    kname = f"{REORDER_RC[0]}x{REORDER_RC[1]}"
+    pre = ST.profile(csr, blocks=(REORDER_RC,), r=mat.r, c=mat.c,
+                     pr=REORDER_PR, xw=REORDER_XW, cb=REORDER_CB)
+    lines = []
+    y_base = None
+    for strat in REORDER_STRATEGIES:
+        h = ops.prepare(mat, layout="panels", pr=REORDER_PR, xw=REORDER_XW,
+                        cb=REORDER_CB, dtype=np.float32, tune=False,
+                        reorder=None if strat == "none" else strat)
+        t = time_fn(lambda: ops.spmv(h, x, use_pallas=False), iters=iters)
+        gf = flops / t / 1e9
+        y = np.asarray(ops.spmv(h, x, use_pallas=False))
+        if y_base is None:
+            y_base = y
+        else:
+            np.testing.assert_allclose(y, y_base, atol=1e-3, rtol=1e-4)
+        if isinstance(h, ops.SPC5ReorderedHandle):
+            st = h.stats
+            applied = 1
+            bw_post = float(st.get("bw_post", 0.0))
+            nch_post = int(st.get("nchunks_post", 0))
+        else:
+            applied = 0
+            bw_post = pre.bandwidth_mean
+            nch_post = pre.nchunks_total
+        lines.append(
+            f"spmv_reorder.{name}.{kname}.{strat},{t*1e6:.1f},"
+            f"gflops={gf:.3f};applied={applied}"
+            f";bw_pre={pre.bandwidth_mean:.1f};bw_post={bw_post:.1f}"
+            f";nchunks_pre={pre.nchunks_total};nchunks_post={nch_post}")
+        if store is not None:
+            cfg = PanelConfig("panels", REORDER_PR, REORDER_XW, REORDER_CB,
+                              reorder=strat if applied else "")
+            store.add_measurement(kname, feats, cfg, workers, gf,
+                                  matrix=name, bandwidth_post=bw_post,
+                                  nchunks=nch_post)
+    return lines
+
+
 def run(quick: bool = False, store: Optional[RecordStore] = None,
         sweep: bool = False, sweep_store: Optional[RecordStore] = None):
     """``sweep_store`` receives the candidate-sweep records; it defaults to
@@ -185,6 +277,8 @@ def run(quick: bool = False, store: Optional[RecordStore] = None,
         lines.extend(bench_matrix(name, csr, store=store))
         if sweep and store is not None and name in SWEEP_MATRICES:
             lines.extend(sweep_matrix(name, csr, sweep_store or store))
+    for name, make in REORDER_MATRICES.items():
+        lines.extend(bench_reorder(name, make(), store=store))
     return lines
 
 

@@ -29,6 +29,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import formats as F
 from . import ref_spmv as R
+from . import reorder as RE
 from . import selector as S
 from .partition import partition_matrix, partition_row_starts
 
@@ -52,6 +53,13 @@ class ShardedSPC5:
     nrows: int
     ncols: int
     nnz: int
+    # Reordering (repro.core.reorder): the sharded matrix was permuted
+    # before partitioning; make_distributed_spmv gathers x by col_perm on
+    # the way in (x is replicated, so one host-side gather) and scatters y
+    # back by row_perm^-1 after the all_gather. None == no reordering.
+    col_perm: Optional[jax.Array] = None
+    row_iperm: Optional[jax.Array] = None
+    reorder: str = ""
 
     @property
     def ndev(self) -> int:
@@ -89,6 +97,9 @@ class ShardedSPC5Panels:
     ncols: int
     ncols_pad: int
     nnz: int
+    col_perm: Optional[jax.Array] = None    # see ShardedSPC5
+    row_iperm: Optional[jax.Array] = None
+    reorder: str = ""
 
     @property
     def ndev(self) -> int:
@@ -153,7 +164,8 @@ def shard_matrix(mat: F.SPC5Matrix, ndev: int, cb: Optional[int] = None,
                  mesh: Optional[Mesh] = None, axis: str = "data",
                  dtype=None, pr: Optional[int] = None, xw: int = 512,
                  store: Optional[S.RecordStore] = None,
-                 config: Optional[S.PanelConfig] = None, tune: bool = True):
+                 config: Optional[S.PanelConfig] = None, tune: bool = True,
+                 reorder=None):
     """Partition + chunk + stack + (optionally) device_put with sharding.
 
     ``pr=None`` keeps the flat whole-vector per-device layout; passing a
@@ -168,12 +180,45 @@ def shard_matrix(mat: F.SPC5Matrix, ndev: int, cb: Optional[int] = None,
     clamped to the per-shard row count. Passing ``config`` (a
     ``selector.PanelConfig``) is the explicit escape hatch that bypasses
     tuning; ``tune=False`` disables it and keeps the fixed defaults.
+
+    **Reordering**: ``reorder`` (strategy name or a prebuilt
+    ``repro.core.reorder.Reordering``) permutes the GLOBAL matrix before
+    row partitioning -- bandwidth reduction concentrates each shard's
+    column footprint, and sigma-sorting balances row lengths across the
+    block-balanced partition. The permutation rides on the returned shard
+    object and ``make_distributed_spmv`` applies it transparently (x and y
+    stay in original index order for callers). A tuned config carrying
+    ``config.reorder`` applies the same way when the caller passes none.
     """
     if config is None and tune and pr is None and cb is None:
         tstore = store if store is not None else S.get_default_store()
         if tstore is not None and tstore.records:
             config = S.tune(S.spc5_features(mat), store=tstore,
                             kernel=f"{mat.r}x{mat.c}", workers=ndev)
+    if reorder is None and config is not None and config.reorder:
+        reorder = config.reorder
+    reo = None
+    if reorder is not None:
+        reo = (reorder if isinstance(reorder, RE.Reordering)
+               else RE.reorder(mat, str(reorder), r=mat.r, c=mat.c,
+                               pr=(config.pr if config is not None
+                                   and config.layout == "panels"
+                                   else pr) or 512,
+                               xw=xw, cb=cb or 64))
+        if reo.is_identity:
+            reo = None
+        else:
+            mat = reo.permute_spc5(mat)
+
+    def _attach(sh):
+        if reo is None:
+            return sh
+        return dataclasses.replace(
+            sh,
+            col_perm=jnp.asarray(reo.col_perm.astype(np.int32)),
+            row_iperm=jnp.asarray(reo.row_iperm.astype(np.int32)),
+            reorder=reo.strategy)
+
     if config is not None:
         # clamp against the per-shard slab, not the global matrix: each
         # device tiles only ~nrows/ndev rows
@@ -182,15 +227,15 @@ def shard_matrix(mat: F.SPC5Matrix, ndev: int, cb: Optional[int] = None,
             config, nrows=max(rows_loc, mat.r), ncols=mat.ncols, r=mat.r,
             c=mat.c, nblocks=max(1, -(-mat.nblocks // max(ndev, 1))))
         if config.layout == "panels":
-            return shard_matrix_panels(mat, ndev, pr=config.pr or 512,
-                                       cb=config.cb or 64,
-                                       xw=config.xw or 512, mesh=mesh,
-                                       axis=axis, dtype=dtype)
+            return _attach(shard_matrix_panels(
+                mat, ndev, pr=config.pr or 512, cb=config.cb or 64,
+                xw=config.xw or 512, mesh=mesh, axis=axis, dtype=dtype))
         cb = config.cb if cb is None else cb
     if pr is not None:
-        return shard_matrix_panels(mat, ndev, pr=pr,
-                                   cb=64 if cb is None else cb, xw=xw,
-                                   mesh=mesh, axis=axis, dtype=dtype)
+        return _attach(shard_matrix_panels(mat, ndev, pr=pr,
+                                           cb=64 if cb is None else cb,
+                                           xw=xw, mesh=mesh, axis=axis,
+                                           dtype=dtype))
     cb = 256 if cb is None else cb
     parts = partition_matrix(mat, ndev)
     row_starts = partition_row_starts(mat, ndev)
@@ -229,7 +274,7 @@ def shard_matrix(mat: F.SPC5Matrix, ndev: int, cb: Optional[int] = None,
             chunk_mask=put(stacked.chunk_mask), chunk_voff=put(stacked.chunk_voff),
             chunk_row=put(stacked.chunk_row), chunk_vbase=put(stacked.chunk_vbase),
             row_start=put(stacked.row_start))
-    return stacked
+    return _attach(stacked)
 
 
 def _local_spmv(sh: ShardedSPC5, values, col, mask, voff, row, vbase, x):
@@ -259,6 +304,14 @@ def make_distributed_spmv(sh, mesh: Mesh, axis: str = "data",
     merge). With gather=False the caller keeps the row-slab layout
     (ndev, rows_max), sharded over ``axis``, e.g. to chain into an operator
     that consumes row-sharded activations with zero collectives.
+
+    A reordering attached by ``shard_matrix(reorder=...)`` is applied
+    transparently: x is gathered by ``col_perm`` before the shard_map (x is
+    replicated, so the gather is collective-free) and, with gather=True, y
+    is scattered back to original row order after the all_gather. With
+    gather=False the row slabs stay in PERMUTED row order (``sh.row_iperm``
+    is the map back) -- a chained operator consuming the slabs must either
+    be built against the same permutation or unpermute explicitly.
     """
     from jax.experimental.shard_map import shard_map
 
@@ -297,11 +350,17 @@ def make_distributed_spmv(sh, mesh: Mesh, axis: str = "data",
 
     @jax.jit
     def run(x):
+        if sh.col_perm is not None:
+            x = jnp.take(x, sh.col_perm, axis=0)
         if panels:
-            return fn(sh.values, sh.chunk_col, sh.chunk_mask, sh.chunk_voff,
-                      sh.chunk_row, sh.chunk_vbase, sh.chunk_xbase,
-                      sh.row_start, x)
-        return fn(sh.values, sh.chunk_col, sh.chunk_mask, sh.chunk_voff,
-                  sh.chunk_row, sh.chunk_vbase, sh.row_start, x)
+            y = fn(sh.values, sh.chunk_col, sh.chunk_mask, sh.chunk_voff,
+                   sh.chunk_row, sh.chunk_vbase, sh.chunk_xbase,
+                   sh.row_start, x)
+        else:
+            y = fn(sh.values, sh.chunk_col, sh.chunk_mask, sh.chunk_voff,
+                   sh.chunk_row, sh.chunk_vbase, sh.row_start, x)
+        if gather and sh.row_iperm is not None:
+            y = jnp.take(y, sh.row_iperm, axis=0)
+        return y
 
     return run

@@ -264,9 +264,42 @@ def csr_to_spc5(csr: CSRMatrix, r: int, c: int) -> SPC5Matrix:
                       masks, voffset.astype(np.int64), values)
 
 
+def spc5_to_coo(mat: SPC5Matrix) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Decode beta(r,c) back to COO triplets, fully vectorized.
+
+    Values are stored in block order, row-major inside each block -- exactly
+    ``np.nonzero``'s order over the (nblocks, r*c) bit matrix -- so
+    ``mat.values`` maps 1:1 onto the decoded (row, col) pairs with no
+    per-element loop. This keeps matrix-level transforms (permutation,
+    re-blocking) sparse: nothing ever materializes an (nrows, ncols) dense
+    array.
+    """
+    r, c = mat.r, mat.c
+    if mat.nblocks == 0:
+        return (np.zeros(0, np.int64), np.zeros(0, np.int64),
+                np.zeros(0, mat.values.dtype))
+    n_intervals = mat.block_rowptr.shape[0] - 1
+    interval_of_block = np.repeat(
+        np.arange(n_intervals, dtype=np.int64), np.diff(mat.block_rowptr))
+    k = np.arange(r * c, dtype=np.uint32)
+    bits = ((mat.block_masks[:, None] >> k[None, :]) & np.uint32(1)) != 0
+    b_idx, k_idx = np.nonzero(bits)          # block-major, bit-ascending
+    rows = interval_of_block[b_idx] * r + k_idx // c
+    cols = mat.block_colidx[b_idx].astype(np.int64) + k_idx % c
+    return rows, cols, mat.values.copy()
+
+
 def spc5_to_csr(mat: SPC5Matrix) -> CSRMatrix:
-    """Exact inverse of :func:`csr_to_spc5` (used by round-trip tests)."""
-    return csr_from_dense(mat.to_dense())
+    """Exact inverse of :func:`csr_to_spc5` (used by round-trip tests and
+    matrix-level transforms); sparse throughout via :func:`spc5_to_coo`."""
+    rows, cols, vals = spc5_to_coo(mat)
+    return csr_from_coo(mat.shape, rows, cols, vals)
+
+
+def as_csr(m) -> CSRMatrix:
+    """Normalise a CSRMatrix-or-SPC5Matrix argument to CSR (the shared
+    entry-point dispatch of the structure/reorder analysis modules)."""
+    return spc5_to_csr(m) if isinstance(m, SPC5Matrix) else m
 
 
 def popcount_u32(x: np.ndarray) -> np.ndarray:
@@ -470,16 +503,17 @@ class SPC5Panels:
         return self.shape[1]
 
 
-def to_panels(mat: SPC5Matrix, pr: int = 512, cb: int = 64, xw: int = 512,
-              align: int = 8) -> SPC5Panels:
-    """Convert beta(r,c) to the row-panel-tiled layout (see SPC5Panels).
-
-    The only per-element Python loop is over CHUNKS (boundary discovery via
-    searchsorted); block/value assembly is vectorized, so conversion stays
-    fast on million-nnz matrices.
+def _panel_chunk_plan(mat: SPC5Matrix, pr: int, cb: int, xw: int,
+                      align: int = 8):
+    """Pass 1 of :func:`to_panels`: per panel, column-sort blocks and find
+    chunk boundaries. Returns ``(panels, pr, xw, npanels)`` where ``panels``
+    holds one ``(order, chunk_starts, xbases, nb)`` tuple per panel (None
+    for empty panels) and pr/xw are normalised to the layout's alignment
+    invariants. Shared with :func:`count_panel_chunks` so locality analysis
+    (repro.core.structure) predicts exactly the chunking the layout builds.
     """
     r, c = mat.r, mat.c
-    nrows, ncols = mat.shape
+    nrows = mat.shape[0]
     pr = max(r, -(-pr // r) * r)                 # multiple of r
     # a window must hold one block wherever it lands after aligning down
     xw = max(xw, c + align)
@@ -487,11 +521,9 @@ def to_panels(mat: SPC5Matrix, pr: int = 512, cb: int = 64, xw: int = 512,
     npanels = max(1, -(-nrows // pr))
     intervals_per_panel = pr // r
     n_intervals = mat.block_rowptr.shape[0] - 1
-    pop = popcount_u32(mat.block_masks).astype(np.int64)
     interval_of_block = np.repeat(
         np.arange(n_intervals, dtype=np.int64), np.diff(mat.block_rowptr))
 
-    # -- pass 1: per panel, column-sort blocks and find chunk boundaries
     panels = []          # (order, chunk_starts, xbases, nb) per panel
     for p in range(npanels):
         it0 = min(p * intervals_per_panel, n_intervals)
@@ -516,6 +548,39 @@ def to_panels(mat: SPC5Matrix, pr: int = 512, cb: int = 64, xw: int = 512,
             s = e
         panels.append((order, np.asarray(starts, dtype=np.int64),
                        np.asarray(xbases, dtype=np.int64), nb))
+    return panels, pr, xw, npanels
+
+
+def count_panel_chunks(mat: SPC5Matrix, pr: int = 512, cb: int = 64,
+                       xw: int = 512, align: int = 8) -> np.ndarray:
+    """Per-panel chunk counts of the (pr, cb, xw) panel layout -- the DMA
+    cost proxy: each chunk is one value-window + one x-window DMA.
+
+    Runs only pass 1 of the conversion (no value movement), so it is cheap
+    enough for reordering strategies to score candidate permutations with
+    and for ``structure.profile`` to report per-panel locality.
+    """
+    panels, _, _, npanels = _panel_chunk_plan(mat, pr, cb, xw, align)
+    return np.asarray([0 if pp is None else len(pp[1]) for pp in panels],
+                      dtype=np.int64)
+
+
+def to_panels(mat: SPC5Matrix, pr: int = 512, cb: int = 64, xw: int = 512,
+              align: int = 8) -> SPC5Panels:
+    """Convert beta(r,c) to the row-panel-tiled layout (see SPC5Panels).
+
+    The only per-element Python loop is over CHUNKS (boundary discovery via
+    searchsorted); block/value assembly is vectorized, so conversion stays
+    fast on million-nnz matrices.
+    """
+    r, c = mat.r, mat.c
+    nrows, ncols = mat.shape
+    panels, pr, xw, npanels = _panel_chunk_plan(mat, pr, cb, xw, align)
+    intervals_per_panel = pr // r
+    n_intervals = mat.block_rowptr.shape[0] - 1
+    pop = popcount_u32(mat.block_masks).astype(np.int64)
+    interval_of_block = np.repeat(
+        np.arange(n_intervals, dtype=np.int64), np.diff(mat.block_rowptr))
 
     nchunks = max(1, max((len(pp[1]) for pp in panels if pp is not None),
                          default=1))

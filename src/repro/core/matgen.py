@@ -26,6 +26,26 @@ def banded(dim: int, band: int, fill: float, seed: int = 0) -> CSRMatrix:
     return csr_from_coo((dim, dim), rows, cols, vals)
 
 
+def scrambled_banded(dim: int, band: int, fill: float,
+                     seed: int = 0) -> CSRMatrix:
+    """A banded matrix hidden under a random symmetric permutation.
+
+    The classic bandwidth-reduction test case: the nonzeros are scattered
+    (mean |col - row| ~ dim/3, panel chunks maximal) but a reordering
+    (repro.core.reorder's RCM strategy) can recover the band exactly --
+    this is the structural class where reordering pays most, used by the
+    reorder benchmarks to demonstrate the nchunks reduction.
+    """
+    csr = banded(dim, band, fill, seed=seed)
+    perm = np.random.default_rng(seed + 1).permutation(dim).astype(np.int64)
+    inv = np.empty(dim, dtype=np.int64)
+    inv[perm] = np.arange(dim, dtype=np.int64)
+    rowlen = np.diff(csr.rowptr).astype(np.int64)
+    rows = np.repeat(np.arange(dim, dtype=np.int64), rowlen)
+    return csr_from_coo((dim, dim), inv[rows],
+                        inv[csr.colidx.astype(np.int64)], csr.values)
+
+
 def fem_blocks(dim: int, bs: int, blocks_per_row: int, seed: int = 0) -> CSRMatrix:
     """Small dense bs x bs blocks scattered near the diagonal (bone010/ldoor-like)."""
     rng = np.random.default_rng(seed)

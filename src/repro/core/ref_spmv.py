@@ -185,3 +185,24 @@ def spmv_coo(rows: jax.Array, cols: jax.Array, vals: jax.Array,
     """
     prod = vals * x[cols]
     return jax.ops.segment_sum(prod, rows, num_segments=nrows)
+
+
+@functools.partial(jax.jit, static_argnames=("pr", "nrows"))
+def spmv_coo_panels(rows: jax.Array, cols: jax.Array, vals: jax.Array,
+                    x: jax.Array, *, pr: int, nrows: int) -> jax.Array:
+    """Row-panel-segmented COO tail of the beta(r,c)_test split.
+
+    ``rows`` are PANEL-LOCAL (in [0, pr)) and the arrays are bucketed
+    ``(npanels, smax)`` with zero-value padding, mirroring the panel
+    layout's uniform chunk padding: each panel's singletons are one fixed-
+    shape segment whose output is a (pr,) slab -- the shape a future Pallas
+    tail kernel would give one grid row, and what keeps the test variant's
+    working set bounded past the whole-vector VMEM ceiling. Padding entries
+    (vals == 0) land on local row 0 of their panel and add nothing.
+    """
+    npanels = rows.shape[0]
+    prod = vals * x[cols]                                   # (npanels, smax)
+    seg = jax.vmap(
+        lambda r_, p_: jax.ops.segment_sum(p_, r_, num_segments=pr))(rows,
+                                                                     prod)
+    return seg.reshape(npanels * pr)[:nrows]

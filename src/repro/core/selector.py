@@ -38,7 +38,9 @@ DEFAULT_KERNELS: Tuple[str, ...] = tuple(
 ) + ("1x8_test", "2x4_test")
 
 #: JSONL record-store schema version (bumped on incompatible field changes).
-RECORDS_VERSION = 1
+#: v2 adds the reorder fields (``reorder``/``bandwidth_post``/``nchunks``);
+#: v1 stores load with those defaulted.
+RECORDS_VERSION = 2
 
 #: Env var naming a record store (JSON/JSONL file or a directory of stores)
 #: that ``ops.prepare`` consults for auto-tuning when the caller passes none.
@@ -57,13 +59,18 @@ class PanelConfig:
 
     ``layout`` is "whole", "panels", or "auto" (let ``prepare`` pick by VMEM
     fit); ``pr``/``xw`` only matter for the panel-tiled layout; ``cb=None``
-    means the layout's default chunk size.
+    means the layout's default chunk size. ``reorder`` names the
+    ``repro.core.reorder`` strategy the measurement ran under ("" = no
+    reordering); it is part of the configuration identity, so the tuner
+    learns when reordering pays and ``ops.prepare`` applies the winning
+    strategy along with the tuned geometry.
     """
 
     layout: str = "auto"
     pr: int = 512
     xw: int = 512
     cb: Optional[int] = None
+    reorder: str = ""
 
 
 #: What ``tune`` returns when no record is usable -- matches the fixed
@@ -143,12 +150,21 @@ class Record:
     nnz_row: float = 0.0    # matrix features at measurement time (0 == legacy)
     bandwidth: float = 0.0
     fill: float = 0.0
+    # Reordering (repro.core.reorder): the strategy this measurement ran
+    # under ("" = none) and the features AFTER the permutation. The feature
+    # coordinates above stay PRE-reorder -- at tune time the caller only has
+    # the unreordered matrix -- so the post fields are evidence of what the
+    # strategy achieved, not interpolation inputs.
+    reorder: str = ""
+    bandwidth_post: float = 0.0
+    nchunks: int = 0  # total panel chunks of the measured layout (DMA proxy)
 
     def config(self) -> PanelConfig:
         """Normalised layout configuration this record measured."""
         layout = self.layout or ("panels" if self.pr else "whole")
         return PanelConfig(layout=layout, pr=int(self.pr), xw=int(self.xw),
-                           cb=int(self.cb) if self.cb else None)
+                           cb=int(self.cb) if self.cb else None,
+                           reorder=self.reorder)
 
     def features(self) -> MatrixFeatures:
         rc = kernel_block(self.kernel)
@@ -182,22 +198,32 @@ class RecordStore:
     def add(self, kernel: str, avg: float, workers: int, gflops: float,
             matrix: str = "", pr: int = 0, xw: int = 0, cb: int = 0,
             layout: str = "", nnz_row: float = 0.0, bandwidth: float = 0.0,
-            fill: float = 0.0) -> None:
+            fill: float = 0.0, reorder: str = "",
+            bandwidth_post: float = 0.0, nchunks: int = 0) -> None:
         self.records.append(Record(kernel, float(avg), int(workers),
                                    float(gflops), matrix, int(pr), int(xw),
                                    int(cb), layout, float(nnz_row),
-                                   float(bandwidth), float(fill)))
+                                   float(bandwidth), float(fill), reorder,
+                                   float(bandwidth_post), int(nchunks)))
 
     def add_measurement(self, kernel: str, feats: MatrixFeatures,
                         config: PanelConfig, workers: int, gflops: float,
-                        matrix: str = "") -> None:
-        """Full-schema add: config + features in one call (sweep mode)."""
+                        matrix: str = "", bandwidth_post: float = 0.0,
+                        nchunks: int = 0) -> None:
+        """Full-schema add: config + features in one call (sweep mode).
+
+        ``feats`` are the matrix's PRE-reorder features (the tune-time
+        coordinates); ``config.reorder`` names the strategy the measurement
+        ran under and ``bandwidth_post``/``nchunks`` record what it
+        achieved (see :class:`Record`).
+        """
         self.add(kernel, feats.avg, workers, gflops, matrix=matrix,
                  pr=config.pr if config.layout == "panels" else 0,
                  xw=config.xw if config.layout == "panels" else 0,
                  cb=config.cb or 0, layout=config.layout,
                  nnz_row=feats.nnz_row, bandwidth=feats.bandwidth,
-                 fill=feats.fill)
+                 fill=feats.fill, reorder=config.reorder,
+                 bandwidth_post=bandwidth_post, nchunks=nchunks)
 
     def extend(self, other: "RecordStore") -> "RecordStore":
         self.records.extend(other.records)
@@ -584,4 +610,5 @@ def clamp_config(cfg: PanelConfig, *, nrows: int, ncols: int, r: int, c: int,
         xw = -(-xw // align) * align
     if cb:
         cb = max(1, min(cb, max(1, nblocks)))
-    return PanelConfig(layout=cfg.layout, pr=pr, xw=xw, cb=cb)
+    return PanelConfig(layout=cfg.layout, pr=pr, xw=xw, cb=cb,
+                       reorder=cfg.reorder)

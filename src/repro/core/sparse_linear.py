@@ -54,7 +54,7 @@ class SparseLinear:
     beyond that ceiling (huge vocab projections, extreme-width MLPs).
     """
 
-    handle: object  # ops.SPC5Handle | ops.SPC5PanelHandle
+    handle: object  # ops.SPC5Handle | ops.SPC5PanelHandle | SPC5ReorderedHandle
     bias: Optional[jax.Array] = None
 
     @property
@@ -72,7 +72,8 @@ class SparseLinear:
                    bias: Optional[np.ndarray] = None,
                    cb: Optional[int] = None, dtype=None, layout: str = "auto",
                    pr: Optional[int] = None, xw: Optional[int] = None,
-                   nvec: int = 128, tune: bool = True) -> "SparseLinear":
+                   nvec: int = 128, tune: bool = True,
+                   reorder=None) -> "SparseLinear":
         """``nvec``: widest activation batch this layer will see -- feeds
         the auto layout's VMEM budget (SpMM tiles are nvt=min(nvec,128)
         wide). Defaults to 128 (one full lane tile) since batch size is
@@ -81,14 +82,19 @@ class SparseLinear:
         The record ``store`` drives both the (r,c) block choice and the
         (layout, pr, xw, cb) auto-tune in ``ops.prepare``; explicit
         ``layout``/``pr``/``xw``/``cb`` arguments are the escape hatch that
-        overrides tuning (``tune=False`` disables it)."""
+        overrides tuning (``tune=False`` disables it).
+
+        ``reorder`` (strategy name or ``repro.core.reorder.Reordering``)
+        permutes the pruned weight before the layout is built; the layer's
+        ``__call__`` is unchanged -- activations go in and come out in
+        original feature order (the handle gathers/scatters internally)."""
         w = prune_by_magnitude(np.asarray(w), density)
         csr = F.csr_from_dense(w)
         if block is None:
             block = choose_block(csr, store)
         mat = F.csr_to_spc5(csr, *block)
         h = ops.prepare(mat, cb=cb, dtype=dtype, layout=layout, pr=pr, xw=xw,
-                        nvec=nvec, store=store, tune=tune)
+                        nvec=nvec, store=store, tune=tune, reorder=reorder)
         b = None if bias is None else jnp.asarray(bias)
         return cls(handle=h, bias=b)
 

@@ -8,11 +8,21 @@ objects and return device handles; :func:`prepare` picks between the two
 device layouts (whole-vector :class:`SPC5Handle` when x/y fit the VMEM
 budget, row-panel-tiled :class:`SPC5PanelHandle` beyond it) and
 :func:`spmv`/:func:`spmm` dispatch on the handle kind.
+
+**Reordering** (``prepare(reorder=...)``): the matrix is permuted by a
+``repro.core.reorder`` strategy *before* the layout is built, and the
+returned plan hides the permutation from callers -- ``spmv``/``spmm`` on a
+:class:`SPC5ReorderedHandle` gather x by ``col_perm`` and scatter y by
+``row_perm^-1`` internally, fused into the kernels' index arrays where the
+layout permits (whole-vector kernels take a ``col_map`` for the x gather;
+interval-contiguous row permutations fold the inverse row scatter into
+``chunk_row`` outright) and as explicit ``jnp.take`` gathers otherwise.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import json
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +30,7 @@ import numpy as np
 
 from repro.core import formats as F
 from repro.core import ref_spmv as R
+from repro.core import reorder as RE
 from repro.core import selector as S
 from . import spc5_spmv, spc5_spmm
 
@@ -48,6 +59,10 @@ class SPC5Handle:
     @property
     def shape(self):
         return (self.nrows, self.ncols)
+
+    def apply(self, x: jax.Array, **kw) -> jax.Array:
+        """y = A @ x (SpMV for 1-D x, SpMM for 2-D x)."""
+        return (spmv if x.ndim == 1 else spmm)(self, x, **kw)
 
 
 def _handle_flatten(h: SPC5Handle):
@@ -91,6 +106,10 @@ class SPC5PanelHandle:
     def shape(self):
         return (self.nrows, self.ncols)
 
+    def apply(self, x: jax.Array, **kw) -> jax.Array:
+        """y = A @ x (SpMV for 1-D x, SpMM for 2-D x)."""
+        return (spmv if x.ndim == 1 else spmm)(self, x, **kw)
+
 
 def _panel_flatten(h: SPC5PanelHandle):
     return (tuple(h.dev),), (h.r, h.c, h.pr, h.cb, h.xw, h.vmax, h.npanels,
@@ -100,6 +119,74 @@ def _panel_flatten(h: SPC5PanelHandle):
 jax.tree_util.register_pytree_node(
     SPC5PanelHandle, _panel_flatten,
     lambda aux, ch: SPC5PanelHandle(R.SPC5PanelDevice(*ch[0]), *aux))
+
+
+@dataclasses.dataclass(frozen=True)
+class SPC5ReorderedHandle:
+    """A permutation-aware plan: inner device handle + the gather/scatter
+    that make the reordering invisible to callers.
+
+    ``apply``/:func:`spmv` compute ``A' @ x[col_perm]`` on the inner handle
+    (built from the permuted matrix) and return y in ORIGINAL row order:
+
+      * ``col_perm is None``: the column order is untouched;
+      * ``row_iperm is None``: the inverse row scatter is either untouched
+        or already fused into the inner handle's ``chunk_row`` (whole-vector
+        layout + interval-contiguous row permutation -- ``rows_fused``);
+      * on the whole-vector Pallas path the x gather is fused into the
+        kernel's decode via its ``col_map`` input; everywhere else it is an
+        explicit ``jnp.take``.
+
+    Registered as a pytree like the plain handles, so reordered sparse
+    weights cross jit boundaries; strategy + scalar stats ride in the
+    static aux (JSON string, hashable).
+    """
+
+    inner: object                       # SPC5Handle | SPC5PanelHandle
+    col_perm: Optional[jax.Array]       # (ncols,) int32 or None
+    row_iperm: Optional[jax.Array]      # (nrows,) int32 or None
+    rows_fused: bool = False
+    strategy: str = ""
+    stats_json: str = "{}"
+
+    @property
+    def shape(self):
+        return self.inner.shape
+
+    @property
+    def nrows(self) -> int:
+        return self.inner.nrows
+
+    @property
+    def ncols(self) -> int:
+        return self.inner.ncols
+
+    @property
+    def nnz(self) -> int:
+        return self.inner.nnz
+
+    @property
+    def stats(self) -> dict:
+        return json.loads(self.stats_json)
+
+    def apply(self, x: jax.Array, **kw) -> jax.Array:
+        """y = A @ x in ORIGINAL index order (SpMV for 1-D x, SpMM for 2-D).
+
+        The plan's entry point per the reordering contract: gathers x by
+        ``col_perm``, runs the inner handle's kernel, scatters y by
+        ``row_perm^-1`` -- all internal (see :func:`spmv`/:func:`spmm`).
+        """
+        return (spmv if x.ndim == 1 else spmm)(self, x, **kw)
+
+
+def _reordered_flatten(h: SPC5ReorderedHandle):
+    return ((h.inner, h.col_perm, h.row_iperm),), (h.rows_fused, h.strategy,
+                                                   h.stats_json)
+
+
+jax.tree_util.register_pytree_node(
+    SPC5ReorderedHandle, _reordered_flatten,
+    lambda aux, ch: SPC5ReorderedHandle(*ch[0], *aux))
 
 
 # Whole-vector path budget: x (ncols) + y (nrows) must sit in VMEM next to
@@ -121,11 +208,38 @@ def fits_whole_vector(nrows: int, ncols: int, itemsize: int = 4,
     return (nrows + ncols) * itemsize * min(max(nvec, 1), 128) <= budget_bytes
 
 
+def _resolve_reordering(mat: F.SPC5Matrix,
+                        reorder: Union[None, str, RE.Reordering],
+                        pr: int, xw: int, cb: Optional[int], align: int
+                        ) -> Optional[RE.Reordering]:
+    """Normalise prepare's ``reorder`` argument to a Reordering (or None).
+
+    Strategy names are built (and scored, possibly declining to identity)
+    by :func:`repro.core.reorder.reorder` at this matrix's block geometry
+    and the panel geometry in effect; an explicit Reordering is validated
+    against the matrix dims and used as-is.
+    """
+    if reorder is None:
+        return None
+    if isinstance(reorder, RE.Reordering):
+        if (reorder.nrows, reorder.ncols) != mat.shape:
+            raise ValueError(
+                f"reordering is for shape {(reorder.nrows, reorder.ncols)}, "
+                f"matrix is {mat.shape}")
+        return reorder
+    return RE.reorder(mat, str(reorder), r=mat.r, c=mat.c, pr=pr, xw=xw,
+                      cb=cb if cb else 64, align=align)
+
+
 def prepare(mat: F.SPC5Matrix, cb: Optional[int] = None, align: int = 8,
             dtype=None, layout: str = "auto", pr: Optional[int] = None,
             xw: Optional[int] = None, nvec: int = 1,
-            store: Optional[S.RecordStore] = None, tune: bool = True):
-    """Build a device handle; returns SPC5Handle or SPC5PanelHandle.
+            store: Optional[S.RecordStore] = None, tune: bool = True,
+            reorder: Union[None, str, RE.Reordering] = None):
+    """Build a device handle; returns SPC5Handle, SPC5PanelHandle, or --
+    when a reordering is applied -- an :class:`SPC5ReorderedHandle` plan
+    wrapping one of them (same ``spmv``/``spmm`` interface, permutation
+    handled internally).
 
     ``layout``: "whole" forces the VMEM-resident whole-vector layout,
     "panels" the row-panel-tiled one, "auto" (default) picks whole-vector
@@ -144,6 +258,14 @@ def prepare(mat: F.SPC5Matrix, cb: Optional[int] = None, align: int = 8,
     (``selector.clamp_config``). Any explicit argument is an escape hatch
     that bypasses tuning entirely (``tune=False`` disables it outright);
     with no store, the fixed defaults below apply unchanged.
+
+    **Reordering**: ``reorder`` is a strategy name ("sigma", "rcm",
+    "colwindow", "auto", "none"; see ``repro.core.reorder``) or a prebuilt
+    ``Reordering``. Strategies are scored at the geometry in effect and may
+    decline (the plain handle comes back unchanged). When the caller passes
+    no ``reorder`` and the tuner's best record carries one
+    (``PanelConfig.reorder``), that strategy is applied -- records grow the
+    reorder field precisely so the tuner learns when reordering pays.
 
     ``pr``/``xw`` default to 512; ``cb=None`` uses the layout's default
     chunk size (256 whole-vector, 64 panels -- panel chunks are smaller
@@ -172,19 +294,53 @@ def prepare(mat: F.SPC5Matrix, cb: Optional[int] = None, align: int = 8,
             pr = cfg.pr or None
             xw = cfg.xw or None
             cb = cfg.cb
+            if reorder is None and cfg.reorder:
+                reorder = cfg.reorder
     pr = 512 if pr is None else pr
     xw = 512 if xw is None else xw
+    reo = _resolve_reordering(mat, reorder, pr, xw, cb, align)
+    if reo is not None and not reo.is_identity:
+        mat = reo.permute_spc5(mat)
+    else:
+        reo = None                      # identity / declined: plain handle
     if layout == "auto":
         layout = ("whole" if fits_whole_vector(*mat.shape, itemsize,
                                                nvec=nvec)
                   else "panels")
     if layout == "panels":
-        return prepare_panels(mat, pr=pr, cb=64 if cb is None else cb, xw=xw,
-                              align=align, dtype=dtype)
+        h = prepare_panels(mat, pr=pr, cb=64 if cb is None else cb, xw=xw,
+                           align=align, dtype=dtype)
+        return h if reo is None else _wrap_reordered(h, reo)
     ch = F.to_chunked(mat, cb=256 if cb is None else cb, align=align)
-    return SPC5Handle(dev=R.device_put(ch, dtype=dtype), r=ch.r, c=ch.c,
-                      cb=ch.cb, vmax=ch.vmax, nrows=ch.nrows, ncols=ch.ncols,
-                      nnz=ch.nnz)
+    rows_fused = False
+    if (reo is not None and not reo.identity_rows
+            and reo.rows_interval_contiguous(mat.r)):
+        # fuse the inverse row permutation into the scatter indices: each
+        # block's r permuted rows map to r consecutive ORIGINAL rows, so
+        # chunk_row can point straight at the original base row and y needs
+        # no output gather at all
+        ch = dataclasses.replace(
+            ch, chunk_row=reo.row_perm[ch.chunk_row].astype(np.int32))
+        rows_fused = True
+    h = SPC5Handle(dev=R.device_put(ch, dtype=dtype), r=ch.r, c=ch.c,
+                   cb=ch.cb, vmax=ch.vmax, nrows=ch.nrows, ncols=ch.ncols,
+                   nnz=ch.nnz)
+    return h if reo is None else _wrap_reordered(h, reo,
+                                                 rows_fused=rows_fused)
+
+
+def _wrap_reordered(h, reo: RE.Reordering,
+                    rows_fused: bool = False) -> SPC5ReorderedHandle:
+    col_perm = (None if reo.identity_cols
+                else jnp.asarray(reo.col_perm.astype(np.int32)))
+    row_iperm = (None if (rows_fused or reo.identity_rows)
+                 else jnp.asarray(reo.row_iperm.astype(np.int32)))
+    stats = {k: v for k, v in reo.stats.items()
+             if isinstance(v, (int, float, str, bool))}
+    return SPC5ReorderedHandle(inner=h, col_perm=col_perm,
+                               row_iperm=row_iperm, rows_fused=rows_fused,
+                               strategy=reo.strategy,
+                               stats_json=json.dumps(stats, sort_keys=True))
 
 
 def prepare_panels(mat: F.SPC5Matrix, pr: int = 512, cb: int = 64,
@@ -201,11 +357,33 @@ def prepare_panels(mat: F.SPC5Matrix, pr: int = 512, cb: int = 64,
 def spmv(h, x: jax.Array, *, use_pallas: Optional[bool] = None,
          double_buffer: bool = True, interpret: Optional[bool] = None
          ) -> jax.Array:
-    """y = A @ x. Accepts SPC5Handle (whole-vector) or SPC5PanelHandle."""
+    """y = A @ x. Accepts SPC5Handle (whole-vector), SPC5PanelHandle, or a
+    reordered plan (SPC5ReorderedHandle) -- x and y are always in ORIGINAL
+    index order; permutation gathers happen internally."""
     if use_pallas is None:
         use_pallas = _on_tpu()
     if interpret is None:
         interpret = not _on_tpu()
+    if isinstance(h, SPC5ReorderedHandle):
+        inner = h.inner
+        if (h.col_perm is not None and use_pallas
+                and isinstance(inner, SPC5Handle)):
+            # fused x gather: the whole-vector kernels route their decode
+            # through col_map, so x never materialises in permuted order
+            fn = (spc5_spmv.spmv_pallas_db if double_buffer
+                  else spc5_spmv.spmv_pallas)
+            y = fn(inner.dev.chunk_vbase, inner.dev.chunk_col,
+                   inner.dev.chunk_mask, inner.dev.chunk_voff,
+                   inner.dev.chunk_row, inner.dev.values, x, h.col_perm,
+                   r=inner.r, c=inner.c, cb=inner.cb, vmax=inner.vmax,
+                   nrows=inner.nrows, ncols=inner.ncols, interpret=interpret)
+        else:
+            xg = x if h.col_perm is None else jnp.take(x, h.col_perm, axis=0)
+            y = spmv(inner, xg, use_pallas=use_pallas,
+                     double_buffer=double_buffer, interpret=interpret)
+        if h.row_iperm is not None:
+            y = jnp.take(y, h.row_iperm, axis=0)
+        return y
     if isinstance(h, SPC5PanelHandle):
         if not use_pallas:
             return R.spmv_panels(h.dev, x, r=h.r, c=h.c, pr=h.pr,
@@ -230,42 +408,129 @@ def spmv(h, x: jax.Array, *, use_pallas: Optional[bool] = None,
 class SPC5TestHandle:
     """beta(r,c)_test: multi-nnz blocks via the block kernel + singleton
     blocks via a COO tail (the paper's dual-loop specialisation as a storage
-    split -- DESIGN.md §2)."""
+    split -- DESIGN.md §2).
+
+    When the multi handle is row-panel-tiled, the tail is panel-segmented
+    too: ``single_*`` are (npanels, smax) buckets with PANEL-LOCAL rows
+    (padding entries have value 0), consumed by ``ref_spmv.spmv_coo_panels``
+    -- each panel's singletons form one fixed-shape segment producing a
+    (pr,) y slab, so the test variant's working set stays bounded past the
+    whole-vector VMEM ceiling exactly like the block kernel's
+    (``tail_pr`` > 0 marks this shape; 0 is the flat whole-vector tail).
+
+    ``col_perm``/``row_iperm`` carry an applied reordering (see
+    ``prepare_test(reorder=...)``): both the block part and the tail
+    operate in permuted index space, x is gathered once on the way in and
+    y scattered back once on the way out.
+    """
 
     multi: object  # SPC5Handle | SPC5PanelHandle (auto layout in prepare)
     single_rows: jax.Array
     single_cols: jax.Array
     single_values: jax.Array
+    tail_pr: int = 0
+    col_perm: Optional[jax.Array] = None
+    row_iperm: Optional[jax.Array] = None
 
 
 def _test_flatten(h: SPC5TestHandle):
-    return ((h.multi, h.single_rows, h.single_cols, h.single_values),), None
+    return ((h.multi, h.single_rows, h.single_cols, h.single_values,
+             h.col_perm, h.row_iperm),), (h.tail_pr,)
 
 
 jax.tree_util.register_pytree_node(
     SPC5TestHandle, _test_flatten,
-    lambda aux, ch: SPC5TestHandle(*ch[0]))
+    lambda aux, ch: SPC5TestHandle(ch[0][0], ch[0][1], ch[0][2], ch[0][3],
+                                   aux[0], ch[0][4], ch[0][5]))
+
+
+def _bucket_tail_by_panel(rows: np.ndarray, cols: np.ndarray,
+                          vals: np.ndarray, pr: int, npanels: int):
+    """Sort the singleton COO tail into per-panel buckets padded to the max
+    per-panel count (mask-free analogue of the panel layout's uniform chunk
+    padding). Entries are (panel, col)-sorted so a future Pallas tail
+    kernel can window x per panel like the block kernels do. Callers must
+    not pass an empty tail (the flat zero-length arrays already encode
+    'no singletons' without per-call cost)."""
+    n = rows.shape[0]
+    panel = rows.astype(np.int64) // pr
+    order = np.lexsort((cols, rows, panel))
+    counts = np.bincount(panel, minlength=npanels).astype(np.int64)
+    smax = int(counts.max())
+    brows = np.zeros((npanels, smax), dtype=np.int32)
+    bcols = np.zeros((npanels, smax), dtype=np.int32)
+    bvals = np.zeros((npanels, smax), dtype=vals.dtype)
+    cum = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    slot = np.arange(n, dtype=np.int64) - np.repeat(cum, counts)
+    p_sorted = panel[order]
+    brows[p_sorted, slot] = (rows[order].astype(np.int64) % pr).astype(np.int32)
+    bcols[p_sorted, slot] = cols[order]
+    bvals[p_sorted, slot] = vals[order]
+    return brows, bcols, bvals
 
 
 def prepare_test(mat: F.SPC5Matrix, cb: Optional[int] = None, align: int = 8,
-                 dtype=None) -> SPC5TestHandle:
+                 dtype=None, layout: str = "auto", pr: Optional[int] = None,
+                 xw: Optional[int] = None, nvec: int = 1,
+                 store: Optional[S.RecordStore] = None, tune: bool = True,
+                 reorder: Union[None, str, RE.Reordering] = None
+                 ) -> SPC5TestHandle:
+    """Build the beta(r,c)_test split handle (see SPC5TestHandle).
+
+    ``layout``/``pr``/``xw``/``store``/``tune`` pass through to
+    :func:`prepare` for the multi-block part; when that resolves to the
+    panel layout, the COO tail is bucketed per row panel as well.
+    ``reorder`` permutes the WHOLE matrix (blocks and singletons see the
+    same permutation) before the split, so both parts stay consistent.
+    """
+    reo = _resolve_reordering(mat, reorder, pr or 512, xw or 512, cb, align)
+    if reo is not None and not reo.is_identity:
+        mat = reo.permute_spc5(mat)
+    else:
+        reo = None
     split = F.split_singletons(mat)
     dt = dtype or mat.values.dtype
-    return SPC5TestHandle(
-        multi=prepare(split.multi, cb=cb, align=align, dtype=dtype),
-        single_rows=jnp.asarray(split.single_rows),
-        single_cols=jnp.asarray(split.single_cols),
-        single_values=jnp.asarray(split.single_values.astype(dt)),
-    )
+    multi = prepare(split.multi, cb=cb, align=align, dtype=dtype,
+                    layout=layout, pr=pr, xw=xw, nvec=nvec, store=store,
+                    tune=tune)
+    if isinstance(multi, SPC5PanelHandle) and split.single_values.shape[0]:
+        brows, bcols, bvals = _bucket_tail_by_panel(
+            split.single_rows, split.single_cols,
+            split.single_values.astype(dt), multi.pr, multi.npanels)
+        srows, scols, svals = (jnp.asarray(brows), jnp.asarray(bcols),
+                               jnp.asarray(bvals))
+        tail_pr = multi.pr
+    else:       # flat tail; zero-length == no singletons, skipped per call
+        srows = jnp.asarray(split.single_rows)
+        scols = jnp.asarray(split.single_cols)
+        svals = jnp.asarray(split.single_values.astype(dt))
+        tail_pr = 0
+    col_perm = row_iperm = None
+    if reo is not None:
+        col_perm = (None if reo.identity_cols
+                    else jnp.asarray(reo.col_perm.astype(np.int32)))
+        row_iperm = (None if reo.identity_rows
+                     else jnp.asarray(reo.row_iperm.astype(np.int32)))
+    return SPC5TestHandle(multi=multi, single_rows=srows, single_cols=scols,
+                          single_values=svals, tail_pr=tail_pr,
+                          col_perm=col_perm, row_iperm=row_iperm)
 
 
 def spmv_test(h: SPC5TestHandle, x: jax.Array, **kw) -> jax.Array:
-    """y = A @ x over the beta_test split."""
-    y = spmv(h.multi, x, **kw)
-    if h.single_values.shape[0] == 0:
-        return y
-    return y + R.spmv_coo(h.single_rows, h.single_cols, h.single_values, x,
-                          nrows=h.multi.nrows)
+    """y = A @ x over the beta_test split (original index order in and out)."""
+    xg = x if h.col_perm is None else jnp.take(x, h.col_perm, axis=0)
+    y = spmv(h.multi, xg, **kw)
+    if h.single_values.size:
+        if h.tail_pr:
+            y = y + R.spmv_coo_panels(h.single_rows, h.single_cols,
+                                      h.single_values, xg, pr=h.tail_pr,
+                                      nrows=h.multi.nrows)
+        else:
+            y = y + R.spmv_coo(h.single_rows, h.single_cols, h.single_values,
+                               xg, nrows=h.multi.nrows)
+    if h.row_iperm is not None:
+        y = jnp.take(y, h.row_iperm, axis=0)
+    return y
 
 
 def spmm(h, x: jax.Array, *, use_pallas: Optional[bool] = None,
@@ -280,6 +545,24 @@ def spmm(h, x: jax.Array, *, use_pallas: Optional[bool] = None,
         use_pallas = _on_tpu()
     if interpret is None:
         interpret = not _on_tpu()
+    if isinstance(h, SPC5ReorderedHandle):
+        inner = h.inner
+        if (h.col_perm is not None and use_pallas
+                and isinstance(inner, SPC5Handle)):
+            y = spc5_spmm.spmm_pallas(
+                inner.dev.chunk_vbase, inner.dev.chunk_col,
+                inner.dev.chunk_mask, inner.dev.chunk_voff,
+                inner.dev.chunk_row, inner.dev.values, x, h.col_perm,
+                r=inner.r, c=inner.c, cb=inner.cb, vmax=inner.vmax,
+                nrows=inner.nrows, ncols=inner.ncols,
+                nvt=min(nvt, x.shape[1]), interpret=interpret)
+        else:
+            xg = x if h.col_perm is None else jnp.take(x, h.col_perm, axis=0)
+            y = spmm(inner, xg, use_pallas=use_pallas, nvt=nvt,
+                     double_buffer=double_buffer, interpret=interpret)
+        if h.row_iperm is not None:
+            y = jnp.take(y, h.row_iperm, axis=0)
+        return y
     if isinstance(h, SPC5PanelHandle):
         if not use_pallas:
             return R.spmm_panels(h.dev, x, r=h.r, c=h.c, pr=h.pr,

@@ -33,8 +33,12 @@ from repro._compat.pallas import CompilerParams as _CompilerParams
 
 
 def _spmm_kernel(vbase_ref, col_ref, mask_ref, voff_ref, row_ref, values_hbm,
-                 x_ref, y_ref, vwin, sem, *, r: int, c: int, cb: int,
-                 vmax: int, nrows: int, ncols: int):
+                 x_ref, *rest, r: int, c: int, cb: int,
+                 vmax: int, nrows: int, ncols: int, fused_cols: bool = False):
+    if fused_cols:      # extra input ref: the reorder subsystem's column map
+        cmap_ref, y_ref, vwin, sem = rest
+    else:
+        (y_ref, vwin, sem), cmap_ref = rest, None
     i = pl.program_id(1)  # chunk index (inner, sequential)
 
     @pl.when(i == 0)
@@ -57,9 +61,13 @@ def _spmm_kernel(vbase_ref, col_ref, mask_ref, voff_ref, row_ref, values_hbm,
     vidx = jnp.clip(voff[:, None] + ranks, 0, vmax - 1)
     vals = jnp.take(vwin[...], vidx, axis=0) * bits.astype(vwin.dtype)
 
-    # Gather the c columns of x once: (cb, c, nvt)
+    # Gather the c columns of x once: (cb, c, nvt). Block columns are
+    # contiguous in permuted space, so a fused column permutation routes the
+    # gather through cmap (x stays in original order, see spc5_spmv).
     xcol = jnp.clip(col[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :],
                     0, ncols - 1)
+    if cmap_ref is not None:
+        xcol = jnp.take(cmap_ref[...], xcol, axis=0)
     xg = jnp.take(x_ref[...], xcol, axis=0)                          # (cb,c,nvt)
 
     y = y_ref[...]
@@ -77,27 +85,41 @@ def _spmm_kernel(vbase_ref, col_ref, mask_ref, voff_ref, row_ref, values_hbm,
     static_argnames=("r", "c", "cb", "vmax", "nrows", "ncols", "nvt",
                      "interpret"))
 def spmm_pallas(chunk_vbase, chunk_col, chunk_mask, chunk_voff, chunk_row,
-                values, x, *, r: int, c: int, cb: int, vmax: int, nrows: int,
-                ncols: int, nvt: int = 128, interpret: bool = False):
-    """Y = A @ X with A chunked beta(r,c) and X of shape (ncols, nvec)."""
+                values, x, col_map=None, *, r: int, c: int, cb: int,
+                vmax: int, nrows: int, ncols: int, nvt: int = 128,
+                interpret: bool = False):
+    """Y = A @ X with A chunked beta(r,c) and X of shape (ncols, nvec).
+
+    ``col_map`` (optional, (ncols,) int32) fuses a column permutation into
+    the decode -- X stays in original row order and the kernel gathers
+    ``x[col_map[col]]`` (the reordering subsystem's zero-copy path).
+    """
     nchunks = chunk_col.shape[0]
     nvec = x.shape[1]
     nvt = min(nvt, nvec)
     if nvec % nvt:
         raise ValueError(f"nvec={nvec} not divisible by tile {nvt}")
+    fused_cols = col_map is not None
     kernel = functools.partial(_spmm_kernel, r=r, c=c, cb=cb, vmax=vmax,
-                               nrows=nrows, ncols=ncols)
+                               nrows=nrows, ncols=ncols,
+                               fused_cols=fused_cols)
+    in_specs = [
+        pl.BlockSpec((1, cb), lambda j, i, vb: (i, 0)),
+        pl.BlockSpec((1, cb), lambda j, i, vb: (i, 0)),
+        pl.BlockSpec((1, cb), lambda j, i, vb: (i, 0)),
+        pl.BlockSpec((1, cb), lambda j, i, vb: (i, 0)),
+        pl.BlockSpec(memory_space=pl.ANY),
+        pl.BlockSpec((ncols, nvt), lambda j, i, vb: (0, j)),
+    ]
+    operands = [chunk_vbase, chunk_col, chunk_mask.astype(jnp.int32),
+                chunk_voff, chunk_row, values, x]
+    if fused_cols:
+        in_specs.append(pl.BlockSpec((ncols,), lambda j, i, vb: (0,)))
+        operands.append(col_map.astype(jnp.int32))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(nvec // nvt, nchunks),
-        in_specs=[
-            pl.BlockSpec((1, cb), lambda j, i, vb: (i, 0)),
-            pl.BlockSpec((1, cb), lambda j, i, vb: (i, 0)),
-            pl.BlockSpec((1, cb), lambda j, i, vb: (i, 0)),
-            pl.BlockSpec((1, cb), lambda j, i, vb: (i, 0)),
-            pl.BlockSpec(memory_space=pl.ANY),
-            pl.BlockSpec((ncols, nvt), lambda j, i, vb: (0, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((nrows, nvt), lambda j, i, vb: (0, j)),
         scratch_shapes=[
             pltpu.VMEM((vmax,), values.dtype),
@@ -111,8 +133,7 @@ def spmm_pallas(chunk_vbase, chunk_col, chunk_mask, chunk_voff, chunk_row,
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary")),
-    )(chunk_vbase, chunk_col, chunk_mask.astype(jnp.int32), chunk_voff,
-      chunk_row, values, x)
+    )(*operands)
 
 
 def _spmm_panel_kernel(vbase_ref, xbase_ref, col_ref, mask_ref, voff_ref,

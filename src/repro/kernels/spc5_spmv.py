@@ -46,8 +46,16 @@ from repro._compat.pallas import CompilerParams as _CompilerParams
 
 
 def _decode_chunk(mask, voff, col, vwin, x, *, r: int, c: int, ncols: int,
-                  vmax: int):
-    """Mask-expand one chunk: returns contrib (cb, r*c) and local row offsets."""
+                  vmax: int, cmap=None):
+    """Mask-expand one chunk: returns contrib (cb, r*c) and local row offsets.
+
+    ``cmap`` is the fused column-permutation map of the reordering subsystem
+    (repro.core.reorder): block columns are contiguous in *permuted* column
+    space, so a column permutation cannot be folded into ``chunk_col``
+    itself -- instead the decode routes its gather through ``cmap`` (one
+    extra VMEM-resident int32 vector), reading original-order x with zero
+    HBM cost. None keeps the pre-reorder index path bit-for-bit intact.
+    """
     rc = r * c
     k = jnp.arange(rc, dtype=jnp.int32)
     bits = ((mask[:, None] >> k[None, :]) & 1).astype(jnp.int32)   # (cb, rc)
@@ -55,13 +63,19 @@ def _decode_chunk(mask, voff, col, vwin, x, *, r: int, c: int, ncols: int,
     vidx = jnp.clip(voff[:, None] + ranks, 0, vmax - 1)
     vals = jnp.take(vwin, vidx, axis=0) * bits.astype(vwin.dtype)
     xcol = jnp.clip(col[:, None] + (k % c)[None, :], 0, ncols - 1)
+    if cmap is not None:
+        xcol = jnp.take(cmap, xcol, axis=0)
     xg = jnp.take(x, xcol, axis=0)
     return vals * xg
 
 
 def _spmv_kernel(vbase_ref, col_ref, mask_ref, voff_ref, row_ref, values_hbm,
-                 x_ref, y_ref, vwin, sem, *, r: int, c: int, cb: int,
-                 vmax: int, nrows: int, ncols: int):
+                 x_ref, *rest, r: int, c: int, cb: int,
+                 vmax: int, nrows: int, ncols: int, fused_cols: bool = False):
+    if fused_cols:                  # extra input ref: the column map (VMEM)
+        cmap_ref, y_ref, vwin, sem = rest
+    else:
+        (y_ref, vwin, sem), cmap_ref = rest, None
     i = pl.program_id(0)
 
     @pl.when(i == 0)
@@ -76,7 +90,8 @@ def _spmv_kernel(vbase_ref, col_ref, mask_ref, voff_ref, row_ref, values_hbm,
 
     mask = mask_ref[0]
     contrib = _decode_chunk(mask, voff_ref[0], col_ref[0], vwin[...],
-                            x_ref[...], r=r, c=c, ncols=ncols, vmax=vmax)
+                            x_ref[...], r=r, c=c, ncols=ncols, vmax=vmax,
+                            cmap=None if cmap_ref is None else cmap_ref[...])
     k = jnp.arange(r * c, dtype=jnp.int32)
     yrow = jnp.clip(row_ref[0][:, None] + (k // c)[None, :], 0, nrows - 1)
     y = y_ref[...]
@@ -87,22 +102,35 @@ def _spmv_kernel(vbase_ref, col_ref, mask_ref, voff_ref, row_ref, values_hbm,
     jax.jit,
     static_argnames=("r", "c", "cb", "vmax", "nrows", "ncols", "interpret"))
 def spmv_pallas(chunk_vbase, chunk_col, chunk_mask, chunk_voff, chunk_row,
-                values, x, *, r: int, c: int, cb: int, vmax: int, nrows: int,
-                ncols: int, interpret: bool = False) -> jax.Array:
+                values, x, col_map=None, *, r: int, c: int, cb: int,
+                vmax: int, nrows: int, ncols: int,
+                interpret: bool = False) -> jax.Array:
+    """``col_map`` (optional, (ncols,) int32) fuses a column permutation into
+    the decode: x stays in original order in VMEM and the kernel gathers
+    ``x[col_map[col]]`` -- the reordering subsystem's zero-copy path (see
+    ``_decode_chunk``)."""
     nchunks = chunk_col.shape[0]
+    fused_cols = col_map is not None
     kernel = functools.partial(_spmv_kernel, r=r, c=c, cb=cb, vmax=vmax,
-                               nrows=nrows, ncols=ncols)
+                               nrows=nrows, ncols=ncols,
+                               fused_cols=fused_cols)
+    in_specs = [
+        pl.BlockSpec((1, cb), lambda i, vb: (i, 0)),   # chunk_col
+        pl.BlockSpec((1, cb), lambda i, vb: (i, 0)),   # chunk_mask
+        pl.BlockSpec((1, cb), lambda i, vb: (i, 0)),   # chunk_voff
+        pl.BlockSpec((1, cb), lambda i, vb: (i, 0)),   # chunk_row
+        pl.BlockSpec(memory_space=pl.ANY),             # values (HBM)
+        pl.BlockSpec((ncols,), lambda i, vb: (0,)),    # x (VMEM, full)
+    ]
+    operands = [chunk_vbase, chunk_col, chunk_mask.astype(jnp.int32),
+                chunk_voff, chunk_row, values, x]
+    if fused_cols:
+        in_specs.append(pl.BlockSpec((ncols,), lambda i, vb: (0,)))
+        operands.append(col_map.astype(jnp.int32))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(nchunks,),
-        in_specs=[
-            pl.BlockSpec((1, cb), lambda i, vb: (i, 0)),   # chunk_col
-            pl.BlockSpec((1, cb), lambda i, vb: (i, 0)),   # chunk_mask
-            pl.BlockSpec((1, cb), lambda i, vb: (i, 0)),   # chunk_voff
-            pl.BlockSpec((1, cb), lambda i, vb: (i, 0)),   # chunk_row
-            pl.BlockSpec(memory_space=pl.ANY),             # values (HBM)
-            pl.BlockSpec((ncols,), lambda i, vb: (0,)),    # x (VMEM, full)
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((nrows,), lambda i, vb: (0,)),
         scratch_shapes=[
             pltpu.VMEM((vmax,), values.dtype),
@@ -116,8 +144,7 @@ def spmv_pallas(chunk_vbase, chunk_col, chunk_mask, chunk_voff, chunk_row,
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",)),
-    )(chunk_vbase, chunk_col, chunk_mask.astype(jnp.int32), chunk_voff,
-      chunk_row, values, x)
+    )(*operands)
 
 
 def _spmv_panel_kernel(vbase_ref, xbase_ref, col_ref, mask_ref, voff_ref,
@@ -289,10 +316,15 @@ def spmv_pallas_panels_db(chunk_vbase, chunk_xbase, chunk_col, chunk_mask,
 
 
 def _spmv_db_kernel(vbase_ref, col_ref, mask_ref, voff_ref, row_ref,
-                    values_hbm, x_ref, y_ref, vwin, sem, *, r: int, c: int,
-                    cb: int, vmax: int, nrows: int, ncols: int, nchunks: int):
+                    values_hbm, x_ref, *rest, r: int, c: int,
+                    cb: int, vmax: int, nrows: int, ncols: int, nchunks: int,
+                    fused_cols: bool = False):
     """Double-buffered variant: overlap chunk i+1's value DMA with chunk i's
     compute (the Pallas analogue of the asm kernel's software pipelining)."""
+    if fused_cols:                  # extra input ref: the column map (VMEM)
+        cmap_ref, y_ref, vwin, sem = rest
+    else:
+        (y_ref, vwin, sem), cmap_ref = rest, None
     i = pl.program_id(0)
     slot = jax.lax.rem(i, jnp.int32(2))
 
@@ -312,7 +344,8 @@ def _spmv_db_kernel(vbase_ref, col_ref, mask_ref, voff_ref, row_ref,
                           vwin.at[slot], sem.at[slot]).wait()
 
     contrib = _decode_chunk(mask_ref[0], voff_ref[0], col_ref[0], vwin[slot],
-                            x_ref[...], r=r, c=c, ncols=ncols, vmax=vmax)
+                            x_ref[...], r=r, c=c, ncols=ncols, vmax=vmax,
+                            cmap=None if cmap_ref is None else cmap_ref[...])
     k = jnp.arange(r * c, dtype=jnp.int32)
     yrow = jnp.clip(row_ref[0][:, None] + (k // c)[None, :], 0, nrows - 1)
     y = y_ref[...]
@@ -323,22 +356,33 @@ def _spmv_db_kernel(vbase_ref, col_ref, mask_ref, voff_ref, row_ref,
     jax.jit,
     static_argnames=("r", "c", "cb", "vmax", "nrows", "ncols", "interpret"))
 def spmv_pallas_db(chunk_vbase, chunk_col, chunk_mask, chunk_voff, chunk_row,
-                   values, x, *, r: int, c: int, cb: int, vmax: int,
-                   nrows: int, ncols: int, interpret: bool = False):
+                   values, x, col_map=None, *, r: int, c: int, cb: int,
+                   vmax: int, nrows: int, ncols: int,
+                   interpret: bool = False):
+    """``col_map`` fuses a column permutation into the decode, exactly as in
+    :func:`spmv_pallas`."""
     nchunks = chunk_col.shape[0]
+    fused_cols = col_map is not None
     kernel = functools.partial(_spmv_db_kernel, r=r, c=c, cb=cb, vmax=vmax,
-                               nrows=nrows, ncols=ncols, nchunks=nchunks)
+                               nrows=nrows, ncols=ncols, nchunks=nchunks,
+                               fused_cols=fused_cols)
+    in_specs = [
+        pl.BlockSpec((1, cb), lambda i, vb: (i, 0)),
+        pl.BlockSpec((1, cb), lambda i, vb: (i, 0)),
+        pl.BlockSpec((1, cb), lambda i, vb: (i, 0)),
+        pl.BlockSpec((1, cb), lambda i, vb: (i, 0)),
+        pl.BlockSpec(memory_space=pl.ANY),
+        pl.BlockSpec((ncols,), lambda i, vb: (0,)),
+    ]
+    operands = [chunk_vbase, chunk_col, chunk_mask.astype(jnp.int32),
+                chunk_voff, chunk_row, values, x]
+    if fused_cols:
+        in_specs.append(pl.BlockSpec((ncols,), lambda i, vb: (0,)))
+        operands.append(col_map.astype(jnp.int32))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(nchunks,),
-        in_specs=[
-            pl.BlockSpec((1, cb), lambda i, vb: (i, 0)),
-            pl.BlockSpec((1, cb), lambda i, vb: (i, 0)),
-            pl.BlockSpec((1, cb), lambda i, vb: (i, 0)),
-            pl.BlockSpec((1, cb), lambda i, vb: (i, 0)),
-            pl.BlockSpec(memory_space=pl.ANY),
-            pl.BlockSpec((ncols,), lambda i, vb: (0,)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((nrows,), lambda i, vb: (0,)),
         scratch_shapes=[
             pltpu.VMEM((2, vmax), values.dtype),
@@ -352,5 +396,4 @@ def spmv_pallas_db(chunk_vbase, chunk_col, chunk_mask, chunk_voff, chunk_row,
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",)),
-    )(chunk_vbase, chunk_col, chunk_mask.astype(jnp.int32), chunk_voff,
-      chunk_row, values, x)
+    )(*operands)

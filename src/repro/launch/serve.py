@@ -10,7 +10,10 @@ layer built in-process gets an auto-tuned (layout, pr, xw, cb).
 ``--vocab-spmv DENSITY`` additionally benches a magnitude-pruned
 SparseLinear vocab projection at decode shape (batch 1-vector SpMV) using
 the tuned configuration; ``--panel pr,xw,cb`` is the explicit escape hatch
-that overrides the tuner for that bench.
+that overrides the tuner for that bench, and ``--reorder STRATEGY``
+(sigma / rcm / colwindow / auto) permutes the pruned weight through the
+reordering subsystem (repro.core.reorder) before the layout is built --
+the layer's call signature is unchanged, the permutation is internal.
 """
 from __future__ import annotations
 
@@ -39,6 +42,9 @@ def main(argv=None):
     ap.add_argument("--panel", default="",
                     help="explicit pr,xw,cb for --vocab-spmv (overrides the "
                          "tuned config)")
+    ap.add_argument("--reorder", default="",
+                    help="reordering strategy for --vocab-spmv (sigma, rcm, "
+                         "colwindow, auto; empty = none)")
     args = ap.parse_args(argv)
 
     from repro.core import selector as S
@@ -89,6 +95,8 @@ def main(argv=None):
         if args.panel:
             pr, xw, cb = (int(v) for v in args.panel.split(","))
             kw = dict(layout="panels", pr=pr, xw=xw, cb=cb)
+        if args.reorder:
+            kw["reorder"] = args.reorder
         rng = np.random.default_rng(0)
         w = rng.standard_normal((cfg.vocab, cfg.d_model)).astype(np.float32)
         lin = SparseLinear.from_dense(w, density=args.vocab_spmv,
@@ -102,13 +110,22 @@ def main(argv=None):
             y = lin(x)
         y.block_until_ready()
         us = (time.perf_counter() - t0) / iters * 1e6
-        layout = type(h).__name__
-        cfg_str = (f"pr={h.pr},xw={h.xw},cb={h.cb}"
-                   if hasattr(h, "pr") else f"cb={h.cb}")
+        reo_str = ""
+        hh = h
+        if hasattr(h, "inner"):               # SPC5ReorderedHandle plan
+            hh = h.inner
+            reo_str = (f", reorder={h.strategy}"
+                       f"[fused_rows={int(h.rows_fused)}]")
+        elif args.reorder:
+            reo_str = f", reorder={args.reorder}[declined]"
+        layout = type(hh).__name__
+        cfg_str = (f"pr={hh.pr},xw={hh.xw},cb={hh.cb}"
+                   if hasattr(hh, "pr") else f"cb={hh.cb}")
         src = ("explicit --panel" if args.panel
                else ("tuned" if args.records else "defaults"))
         print(f"vocab_spmv[{cfg.vocab}x{cfg.d_model}@{args.vocab_spmv}]: "
-              f"{us:.1f} us/call ({layout}, {cfg_str}, config={src})")
+              f"{us:.1f} us/call ({layout}, {cfg_str}, config={src}"
+              f"{reo_str})")
 
 
 if __name__ == "__main__":
