@@ -49,7 +49,7 @@ for name in names:
         print(f"spmv_par.{name}.1x8_dev8{tag},{t*1e6:.1f},gflops={gf:.3f}")
         # full-schema record for the auto-tuner (workers=8 layout point);
         # serialise through Record itself so the schema stays in one place
-        cfg = (S.PanelConfig("whole", 0, 0, 512) if pr is None
+        cfg = (S.PanelConfig("whole_vector", 0, 0, 512) if pr is None
                else S.PanelConfig("panels", pr, 512, 64))
         rs = S.RecordStore()
         rs.add_measurement("1x8", feats, cfg, 8, gf, matrix=name)

@@ -15,13 +15,14 @@ Three record-producing modes:
   * ``sweep_matrix`` (the candidate-sweep mode, ``run(sweep=True)``)
     additionally measures a grid of candidate configurations per kernel so
     the tuner has per-config training data across the feature space;
-  * ``bench_reorder`` measures every reordering strategy
-    (repro.core.reorder) against the unreordered baseline on matrices
-    where ordering matters (a scrambled banded matrix -- the classic RCM
-    case -- and a genuinely scattered one), reporting pre/post bandwidth
-    and chunk totals so BENCH artifacts show whether reordering shrank DMA
-    traffic; records carry ``PanelConfig.reorder`` + the post features so
-    ``selector.tune`` learns when reordering pays.
+  * ``bench_reorder`` measures every (reordering strategy x panel geometry)
+    combination through the plan pipeline against the unreordered baseline
+    on matrices where ordering matters (a scrambled banded matrix -- the
+    classic RCM case -- and a genuinely scattered one), reporting pre/post
+    bandwidth and chunk totals so BENCH artifacts show whether reordering
+    shrank DMA traffic; every combination lands in the store with
+    ``PanelConfig.reorder`` + the post features, so ``selector.tune``'s
+    reorder signal covers the geometry grid, not just one default config.
 """
 from __future__ import annotations
 
@@ -51,8 +52,8 @@ PANEL_XW = 2048
 # grid. Whole-vector chunk sizes bracket the default; panel configs span
 # short/tall panels and narrow/wide x windows.
 SWEEP_CONFIGS: Tuple[PanelConfig, ...] = (
-    PanelConfig("whole", 0, 0, 256),
-    PanelConfig("whole", 0, 0, 512),
+    PanelConfig("whole_vector", 0, 0, 256),
+    PanelConfig("whole_vector", 0, 0, 512),
     PanelConfig("panels", 256, 512, 64),
     PanelConfig("panels", 512, 2048, 64),
     PanelConfig("panels", 2048, 2048, 64),
@@ -63,11 +64,13 @@ SWEEP_KERNELS = ((1, 8), (4, 4))
 # minutes-scale while covering the feature space.
 SWEEP_MATRICES = ("atmosmodd", "bone010", "ns3Da")
 
-# Reorder bench: strategies x matrices, at a geometry where per-panel x
-# windows (not the cb cap) bound the chunking, so ordering actually moves
-# the chunk count. "scrambled-band" is a banded matrix under a random
-# symmetric permutation (reordering should win big); "ns3Da" is uniform
-# random (strategies should decline rather than regress).
+# Reorder bench: (strategy x geometry) x matrices, at geometries where
+# per-panel x windows (not the cb cap) bound the chunking, so ordering
+# actually moves the chunk count. "scrambled-band" is a banded matrix under
+# a random symmetric permutation (reordering should win big); "ns3Da" is
+# uniform random (strategies should decline rather than regress). Every
+# combination goes through the plan pipeline and emits a record, so the
+# tuner's reorder signal covers the geometry grid.
 REORDER_STRATEGIES = ("none", "sigma", "rcm", "colwindow")
 REORDER_MATRICES = {
     "scrambled-band": lambda: matgen.scrambled_banded(12_000, 8, 1.0,
@@ -75,7 +78,11 @@ REORDER_MATRICES = {
     "ns3Da": matgen.SET_A["ns3Da"],
 }
 REORDER_RC = (1, 8)
-REORDER_PR, REORDER_XW, REORDER_CB = 256, 512, 64
+REORDER_GEOMS: Tuple[PanelConfig, ...] = (
+    PanelConfig("panels", 256, 512, 64),
+    PanelConfig("panels", 512, 1024, 64),
+    PanelConfig("panels", 256, 512, 32),
+)
 
 
 @functools.partial(jax.jit, static_argnames=("nrows",))
@@ -112,7 +119,7 @@ def bench_matrix(name: str, csr, store: Optional[RecordStore] = None,
     for rc in KERNELS:
         mat = F.csr_to_spc5(csr, *rc)
         feats = S.spc5_features(mat)
-        h = ops.prepare(mat, cb=512, dtype=np.float32, layout="whole")
+        h = ops.prepare(mat, cb=512, dtype=np.float32, layout="whole_vector")
         t = time_fn(lambda: ops.spmv(h, x, use_pallas=False))
         gf = flops / t / 1e9
         kname = f"{rc[0]}x{rc[1]}"
@@ -120,8 +127,8 @@ def bench_matrix(name: str, csr, store: Optional[RecordStore] = None,
                      f"gflops={gf:.3f};speedup_vs_csr={gf/gf_csr:.2f}")
         if store is not None:
             store.add_measurement(kname, feats,
-                                  PanelConfig("whole", 0, 0, 512), workers,
-                                  gf, matrix=name)
+                                  PanelConfig("whole_vector", 0, 0, 512),
+                                  workers, gf, matrix=name)
         # row-panel-tiled layout sweep (bounded-VMEM path). Locality stats
         # ride along: nchunks_total counts the REAL (mask != 0) chunks --
         # the layout's DMA-window total, what reordering tries to shrink --
@@ -152,11 +159,10 @@ def bench_matrix(name: str, csr, store: Optional[RecordStore] = None,
             gft = flops / tt / 1e9
             lines.append(
                 f"spmv_seq.{name}.{kname}_test,{tt*1e6:.1f},"
-                f"gflops={gft:.3f};singles="
-                f"{int(ht.single_values.shape[0])}")
+                f"gflops={gft:.3f};singles={int(ht.n_single)}")
             if store is not None:
                 store.add_measurement(f"{kname}_test", feats,
-                                      PanelConfig("whole", 0, 0, 512),
+                                      PanelConfig("whole_vector", 0, 0, 512),
                                       workers, gft, matrix=name)
     return lines
 
@@ -193,8 +199,8 @@ def sweep_matrix(name: str, csr, store: RecordStore,
                             tune=False)
             t = time_fn(lambda: ops.spmv(h, x, use_pallas=False), iters=iters)
             gf = flops / t / 1e9
-            tag = (f"whole_cb{cfg.cb}" if cfg.layout == "whole" else
-                   f"pr{cfg.pr}_xw{cfg.xw}_cb{cfg.cb}")
+            tag = (f"pr{cfg.pr}_xw{cfg.xw}_cb{cfg.cb}" if cfg.pr
+                   else f"whole_cb{cfg.cb}")
             lines.append(f"spmv_sweep.{name}.{kname}.{tag},{t*1e6:.1f},"
                          f"gflops={gf:.3f}")
             store.add_measurement(kname, feats, cfg, workers, gf, matrix=name)
@@ -202,17 +208,21 @@ def sweep_matrix(name: str, csr, store: RecordStore,
 
 
 def bench_reorder(name: str, csr, store: Optional[RecordStore] = None,
-                  workers: int = 1, iters: int = 8) -> List[str]:
-    """Reordering-strategy comparison at a window-bound panel geometry.
+                  workers: int = 1, iters: int = 8,
+                  geoms: Sequence[PanelConfig] = REORDER_GEOMS) -> List[str]:
+    """Reordering comparison over a (strategy x geometry) grid.
 
-    One line per strategy: throughput plus the pre/post locality metrics
-    (mean element bandwidth and total panel chunks = DMA windows). Each
-    result is checked against the unreordered baseline product, so a
-    permutation-plumbing regression fails the bench rather than emitting
-    wrong-but-fast numbers. Records tag the strategy in
-    ``PanelConfig.reorder`` (only when it actually applied) with the
-    post-reorder features, the tuner's training signal for when reordering
-    pays.
+    One line per combination: throughput plus the pre/post locality metrics
+    (mean element bandwidth and total panel chunks = DMA windows) at THAT
+    geometry -- whether a permutation pays depends on the window/chunk
+    shape, so each geometry gets its own accept/decline decision through
+    the plan pipeline. Each result is checked against the unreordered
+    baseline product, so a permutation-plumbing regression fails the bench
+    rather than emitting wrong-but-fast numbers. Every combination lands in
+    the store (``PanelConfig.reorder`` tags the strategy only when it
+    actually applied, with the post-reorder features), so ``selector.tune``
+    learns when reordering pays across the geometry grid, not just one
+    default config.
     """
     from repro.core import structure as ST
 
@@ -222,41 +232,44 @@ def bench_reorder(name: str, csr, store: Optional[RecordStore] = None,
     mat = F.csr_to_spc5(csr, *REORDER_RC)
     feats = S.spc5_features(mat)            # PRE-reorder tune coordinates
     kname = f"{REORDER_RC[0]}x{REORDER_RC[1]}"
-    pre = ST.profile(csr, blocks=(REORDER_RC,), r=mat.r, c=mat.c,
-                     pr=REORDER_PR, xw=REORDER_XW, cb=REORDER_CB)
     lines = []
     y_base = None
-    for strat in REORDER_STRATEGIES:
-        h = ops.prepare(mat, layout="panels", pr=REORDER_PR, xw=REORDER_XW,
-                        cb=REORDER_CB, dtype=np.float32, tune=False,
-                        reorder=None if strat == "none" else strat)
-        t = time_fn(lambda: ops.spmv(h, x, use_pallas=False), iters=iters)
-        gf = flops / t / 1e9
-        y = np.asarray(ops.spmv(h, x, use_pallas=False))
-        if y_base is None:
-            y_base = y
-        else:
-            np.testing.assert_allclose(y, y_base, atol=1e-3, rtol=1e-4)
-        if isinstance(h, ops.SPC5ReorderedHandle):
-            st = h.stats
-            applied = 1
-            bw_post = float(st.get("bw_post", 0.0))
-            nch_post = int(st.get("nchunks_post", 0))
-        else:
-            applied = 0
-            bw_post = pre.bandwidth_mean
-            nch_post = pre.nchunks_total
-        lines.append(
-            f"spmv_reorder.{name}.{kname}.{strat},{t*1e6:.1f},"
-            f"gflops={gf:.3f};applied={applied}"
-            f";bw_pre={pre.bandwidth_mean:.1f};bw_post={bw_post:.1f}"
-            f";nchunks_pre={pre.nchunks_total};nchunks_post={nch_post}")
-        if store is not None:
-            cfg = PanelConfig("panels", REORDER_PR, REORDER_XW, REORDER_CB,
-                              reorder=strat if applied else "")
-            store.add_measurement(kname, feats, cfg, workers, gf,
-                                  matrix=name, bandwidth_post=bw_post,
-                                  nchunks=nch_post)
+    for geo in geoms:
+        pre = ST.profile(csr, blocks=(REORDER_RC,), r=mat.r, c=mat.c,
+                         pr=geo.pr, xw=geo.xw, cb=geo.cb)
+        gtag = f"pr{geo.pr}_xw{geo.xw}_cb{geo.cb}"
+        for strat in REORDER_STRATEGIES:
+            h = ops.prepare(mat, layout="panels", pr=geo.pr, xw=geo.xw,
+                            cb=geo.cb, dtype=np.float32, tune=False,
+                            reorder=None if strat == "none" else strat)
+            t = time_fn(lambda: ops.spmv(h, x, use_pallas=False),
+                        iters=iters)
+            gf = flops / t / 1e9
+            y = np.asarray(ops.spmv(h, x, use_pallas=False))
+            if y_base is None:
+                y_base = y
+            else:
+                np.testing.assert_allclose(y, y_base, atol=1e-3, rtol=1e-4)
+            if h.is_reordered:
+                st = h.stats
+                applied = 1
+                bw_post = float(st.get("bw_post", 0.0))
+                nch_post = int(st.get("nchunks_post", 0))
+            else:
+                applied = 0
+                bw_post = pre.bandwidth_mean
+                nch_post = pre.nchunks_total
+            lines.append(
+                f"spmv_reorder.{name}.{kname}.{strat}.{gtag},{t*1e6:.1f},"
+                f"gflops={gf:.3f};applied={applied}"
+                f";bw_pre={pre.bandwidth_mean:.1f};bw_post={bw_post:.1f}"
+                f";nchunks_pre={pre.nchunks_total};nchunks_post={nch_post}")
+            if store is not None:
+                cfg = PanelConfig("panels", geo.pr, geo.xw, geo.cb,
+                                  reorder=strat if applied else "")
+                store.add_measurement(kname, feats, cfg, workers, gf,
+                                      matrix=name, bandwidth_post=bw_post,
+                                      nchunks=nch_post)
     return lines
 
 

@@ -12,152 +12,31 @@ Mapping of the paper's shared-memory design onto SPMD devices:
                                          | when the caller needs the full
                                          | vector, e.g. between CG steps)
 
-Each device holds equal-shape padded arrays (chunk count and value length
-padded to the max across shards) so the stacked global arrays shard evenly;
-padding chunks have mask==0 and contribute nothing.
+The sharding itself is the plan pipeline's ``shard`` pass
+(:func:`repro.core.plan.shard_plan`): the global matrix is tuned/reordered,
+row-partitioned, and each slab is stacked by its layout's registered
+``shard_build`` hook into a :class:`~repro.core.plan.ShardedPlan` -- so
+:func:`make_distributed_spmv` below is layout-agnostic (it squeezes one
+device's arrays and hands them to the registry's ``local_spmv``; no
+``if layout == ...`` branching anywhere in this module).
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
+from . import plan as PL
 from . import formats as F
-from . import ref_spmv as R
-from . import reorder as RE
 from . import selector as S
-from .partition import partition_matrix, partition_row_starts
 
-
-@dataclasses.dataclass(frozen=True)
-class ShardedSPC5:
-    """Stacked per-device chunked arrays, leading dim == n_devices."""
-
-    values: jax.Array       # (ndev, nvals_max)
-    chunk_col: jax.Array    # (ndev, nchunks_max, cb)
-    chunk_mask: jax.Array   # (ndev, nchunks_max, cb)
-    chunk_voff: jax.Array   # (ndev, nchunks_max, cb)
-    chunk_row: jax.Array    # (ndev, nchunks_max, cb) LOCAL rows
-    chunk_vbase: jax.Array  # (ndev, nchunks_max)
-    row_start: jax.Array    # (ndev,) global first row of the shard
-    r: int
-    c: int
-    cb: int
-    vmax: int
-    rows_max: int           # padded local row count (uniform)
-    nrows: int
-    ncols: int
-    nnz: int
-    # Reordering (repro.core.reorder): the sharded matrix was permuted
-    # before partitioning; make_distributed_spmv gathers x by col_perm on
-    # the way in (x is replicated, so one host-side gather) and scatters y
-    # back by row_perm^-1 after the all_gather. None == no reordering.
-    col_perm: Optional[jax.Array] = None
-    row_iperm: Optional[jax.Array] = None
-    reorder: str = ""
-
-    @property
-    def ndev(self) -> int:
-        return self.chunk_col.shape[0]
-
-
-@dataclasses.dataclass(frozen=True)
-class ShardedSPC5Panels:
-    """Stacked per-device row-panel-tiled arrays, leading dim == n_devices.
-
-    Per-device panels compose with row sharding: each device owns a
-    contiguous row slab (block-balanced, as the flat layout) and tiles it
-    into its own (npanels, nchunks) grid, so local VMEM per grid step stays
-    ``pr + xw + vmax`` elements however large the global matrix is. Panel
-    and chunk counts are padded to the max across shards (padding chunks
-    have mask==0).
-    """
-
-    values: jax.Array       # (ndev, nvals_max)
-    chunk_col: jax.Array    # (ndev, npan_max, nch_max, cb)
-    chunk_mask: jax.Array   # (ndev, npan_max, nch_max, cb)
-    chunk_voff: jax.Array   # (ndev, npan_max, nch_max, cb)
-    chunk_row: jax.Array    # (ndev, npan_max, nch_max, cb) panel-relative
-    chunk_vbase: jax.Array  # (ndev, npan_max, nch_max)
-    chunk_xbase: jax.Array  # (ndev, npan_max, nch_max)
-    row_start: jax.Array    # (ndev,) global first row of the shard
-    r: int
-    c: int
-    pr: int
-    cb: int
-    xw: int
-    vmax: int
-    rows_max: int           # npan_max * pr (uniform padded local y length)
-    nrows: int
-    ncols: int
-    ncols_pad: int
-    nnz: int
-    col_perm: Optional[jax.Array] = None    # see ShardedSPC5
-    row_iperm: Optional[jax.Array] = None
-    reorder: str = ""
-
-    @property
-    def ndev(self) -> int:
-        return self.chunk_col.shape[0]
-
-
-def shard_matrix_panels(mat: F.SPC5Matrix, ndev: int, pr: int = 512,
-                        cb: int = 64, xw: int = 512,
-                        mesh: Optional[Mesh] = None, axis: str = "data",
-                        dtype=None) -> ShardedSPC5Panels:
-    """Row-shard + panel-tile each shard + stack (+ device_put)."""
-    parts = partition_matrix(mat, ndev)
-    row_starts = partition_row_starts(mat, ndev)
-    pans = [F.to_panels(p, pr=pr, cb=cb, xw=xw) for p in parts]
-    pr = pans[0].pr                        # normalised to a multiple of r
-    npan = max(p.npanels for p in pans)
-    nch = max(p.nchunks for p in pans)
-    vmax = max(p.vmax for p in pans)
-    nvals = max(int(p.chunk_vbase.max()) + vmax for p in pans)
-    ncols_pad = max(p.ncols_pad for p in pans)
-
-    def pad3(a, fill=0):   # (npanels, nchunks, cb) -> (npan, nch, cb)
-        return np.pad(a, ((0, npan - a.shape[0]), (0, nch - a.shape[1]),
-                          (0, 0)), constant_values=fill)
-
-    def pad2(a):           # (npanels, nchunks) -> (npan, nch)
-        return np.pad(a, ((0, npan - a.shape[0]), (0, nch - a.shape[1])))
-
-    dt = dtype or mat.values.dtype
-    stacked = ShardedSPC5Panels(
-        values=jnp.asarray(np.stack([
-            np.pad(p.values, (0, nvals - p.values.shape[0]))
-            for p in pans]).astype(dt)),
-        chunk_col=jnp.asarray(np.stack([pad3(p.chunk_col) for p in pans])),
-        chunk_mask=jnp.asarray(np.stack([pad3(p.chunk_mask).astype(np.int32)
-                                         for p in pans])),
-        chunk_voff=jnp.asarray(np.stack([pad3(p.chunk_voff) for p in pans])),
-        chunk_row=jnp.asarray(np.stack([pad3(p.chunk_row) for p in pans])),
-        chunk_vbase=jnp.asarray(np.stack([pad2(p.chunk_vbase) for p in pans])),
-        chunk_xbase=jnp.asarray(np.stack([pad2(p.chunk_xbase) for p in pans])),
-        row_start=jnp.asarray(row_starts),
-        r=mat.r, c=mat.c, pr=pr, cb=pans[0].cb, xw=pans[0].xw, vmax=vmax,
-        rows_max=npan * pr, nrows=mat.shape[0], ncols=mat.shape[1],
-        ncols_pad=ncols_pad, nnz=mat.nnz,
-    )
-    if mesh is not None:
-        spec = P(axis)
-        put = lambda a: jax.device_put(a, NamedSharding(mesh, spec))
-        stacked = dataclasses.replace(
-            stacked,
-            values=put(stacked.values), chunk_col=put(stacked.chunk_col),
-            chunk_mask=put(stacked.chunk_mask),
-            chunk_voff=put(stacked.chunk_voff),
-            chunk_row=put(stacked.chunk_row),
-            chunk_vbase=put(stacked.chunk_vbase),
-            chunk_xbase=put(stacked.chunk_xbase),
-            row_start=put(stacked.row_start))
-    return stacked
+# Legacy names: both sharded containers are the one ShardedPlan now
+# (inspect ``sh.layout`` -- a plan-registry key -- to discriminate).
+ShardedPlan = PL.ShardedPlan
+ShardedSPC5 = PL.ShardedPlan
+ShardedSPC5Panels = PL.ShardedPlan
 
 
 def shard_matrix(mat: F.SPC5Matrix, ndev: int, cb: Optional[int] = None,
@@ -165,157 +44,64 @@ def shard_matrix(mat: F.SPC5Matrix, ndev: int, cb: Optional[int] = None,
                  dtype=None, pr: Optional[int] = None, xw: int = 512,
                  store: Optional[S.RecordStore] = None,
                  config: Optional[S.PanelConfig] = None, tune: bool = True,
-                 reorder=None):
-    """Partition + chunk + stack + (optionally) device_put with sharding.
+                 reorder=None) -> PL.ShardedPlan:
+    """Partition + build + stack + (optionally) device_put with sharding.
 
-    ``pr=None`` keeps the flat whole-vector per-device layout; passing a
-    panel height returns :class:`ShardedSPC5Panels` instead (row sharding
-    composed with per-device row-panel tiling). ``cb=None`` uses the
-    layout's default chunk size (256 flat, 64 panels); an explicit ``cb``
-    is honored as-is.
+    Thin wrapper over the plan pipeline's shard pass
+    (:func:`repro.core.plan.shard_plan`). ``pr=None`` keeps the flat
+    whole-vector per-device layout; passing a panel height (or a
+    tuned/explicit panels ``config``) selects row sharding composed with
+    per-device row-panel tiling. ``cb=None`` uses the layout's default
+    chunk size.
 
     **Auto-tuning**: when neither ``pr`` nor ``cb`` is given and a record
     store is available (``store``, or the selector's default store), the
     per-device layout comes from ``selector.tune`` at ``workers=ndev``,
-    clamped to the per-shard row count. Passing ``config`` (a
-    ``selector.PanelConfig``) is the explicit escape hatch that bypasses
-    tuning; ``tune=False`` disables it and keeps the fixed defaults.
+    clamped to the per-shard row count. Passing ``config`` is the explicit
+    escape hatch; ``tune=False`` keeps the fixed defaults.
 
     **Reordering**: ``reorder`` (strategy name or a prebuilt
     ``repro.core.reorder.Reordering``) permutes the GLOBAL matrix before
-    row partitioning -- bandwidth reduction concentrates each shard's
-    column footprint, and sigma-sorting balances row lengths across the
-    block-balanced partition. The permutation rides on the returned shard
-    object and ``make_distributed_spmv`` applies it transparently (x and y
-    stay in original index order for callers). A tuned config carrying
-    ``config.reorder`` applies the same way when the caller passes none.
+    row partitioning; the permutation rides on the returned plan and
+    :func:`make_distributed_spmv` applies it transparently. A tuned config
+    carrying ``config.reorder`` applies the same way.
     """
-    if config is None and tune and pr is None and cb is None:
-        tstore = store if store is not None else S.get_default_store()
-        if tstore is not None and tstore.records:
-            config = S.tune(S.spc5_features(mat), store=tstore,
-                            kernel=f"{mat.r}x{mat.c}", workers=ndev)
-    if reorder is None and config is not None and config.reorder:
-        reorder = config.reorder
-    reo = None
-    if reorder is not None:
-        reo = (reorder if isinstance(reorder, RE.Reordering)
-               else RE.reorder(mat, str(reorder), r=mat.r, c=mat.c,
-                               pr=(config.pr if config is not None
-                                   and config.layout == "panels"
-                                   else pr) or 512,
-                               xw=xw, cb=cb or 64))
-        if reo.is_identity:
-            reo = None
-        else:
-            mat = reo.permute_spc5(mat)
-
-    def _attach(sh):
-        if reo is None:
-            return sh
-        return dataclasses.replace(
-            sh,
-            col_perm=jnp.asarray(reo.col_perm.astype(np.int32)),
-            row_iperm=jnp.asarray(reo.row_iperm.astype(np.int32)),
-            reorder=reo.strategy)
-
-    if config is not None:
-        # clamp against the per-shard slab, not the global matrix: each
-        # device tiles only ~nrows/ndev rows
-        rows_loc = -(-mat.nrows // max(ndev, 1))
-        config = S.clamp_config(
-            config, nrows=max(rows_loc, mat.r), ncols=mat.ncols, r=mat.r,
-            c=mat.c, nblocks=max(1, -(-mat.nblocks // max(ndev, 1))))
-        if config.layout == "panels":
-            return _attach(shard_matrix_panels(
-                mat, ndev, pr=config.pr or 512, cb=config.cb or 64,
-                xw=config.xw or 512, mesh=mesh, axis=axis, dtype=dtype))
-        cb = config.cb if cb is None else cb
-    if pr is not None:
-        return _attach(shard_matrix_panels(mat, ndev, pr=pr,
-                                           cb=64 if cb is None else cb,
-                                           xw=xw, mesh=mesh, axis=axis,
-                                           dtype=dtype))
-    cb = 256 if cb is None else cb
-    parts = partition_matrix(mat, ndev)
-    row_starts = partition_row_starts(mat, ndev)
-    chunked = [F.to_chunked(p, cb=cb) for p in parts]
-    nch = max(ch.nchunks for ch in chunked)
-    vmax = max(ch.vmax for ch in chunked)
-    nvals = max(ch.values.shape[0] + vmax for ch in chunked)
-    rows_max = max(p.shape[0] for p in parts)
-
-    def pad2(a, n):  # pad axis0 of (nchunks, cb)
-        return np.pad(a, ((0, n - a.shape[0]), (0, 0)))
-
-    dt = dtype or mat.values.dtype
-    stacked = ShardedSPC5(
-        values=jnp.asarray(np.stack([
-            np.pad(ch.values, (0, nvals - ch.values.shape[0]))
-            for ch in chunked]).astype(dt)),
-        chunk_col=jnp.asarray(np.stack([pad2(ch.chunk_col, nch) for ch in chunked])),
-        chunk_mask=jnp.asarray(np.stack([pad2(ch.chunk_mask, nch).astype(np.int32)
-                                         for ch in chunked])),
-        chunk_voff=jnp.asarray(np.stack([pad2(ch.chunk_voff, nch) for ch in chunked])),
-        chunk_row=jnp.asarray(np.stack([pad2(ch.chunk_row, nch) for ch in chunked])),
-        chunk_vbase=jnp.asarray(np.stack([
-            np.pad(ch.chunk_vbase, (0, nch - ch.chunk_vbase.shape[0]))
-            for ch in chunked])),
-        row_start=jnp.asarray(row_starts),
-        r=mat.r, c=mat.c, cb=cb, vmax=vmax, rows_max=rows_max,
-        nrows=mat.shape[0], ncols=mat.shape[1], nnz=mat.nnz,
-    )
-    if mesh is not None:
-        spec = P(axis)
-        put = lambda a: jax.device_put(a, NamedSharding(mesh, spec))
-        stacked = dataclasses.replace(
-            stacked,
-            values=put(stacked.values), chunk_col=put(stacked.chunk_col),
-            chunk_mask=put(stacked.chunk_mask), chunk_voff=put(stacked.chunk_voff),
-            chunk_row=put(stacked.chunk_row), chunk_vbase=put(stacked.chunk_vbase),
-            row_start=put(stacked.row_start))
-    return _attach(stacked)
+    return PL.shard_plan(mat, ndev, cb=cb, mesh=mesh, axis=axis, dtype=dtype,
+                         pr=pr, xw=xw, store=store, config=config, tune=tune,
+                         reorder=reorder)
 
 
-def _local_spmv(sh: ShardedSPC5, values, col, mask, voff, row, vbase, x):
-    """SpMV on one shard's arrays (leading device dim already squeezed)."""
-    dev = R.SPC5Device(values=values, chunk_col=col, chunk_mask=mask,
-                       chunk_voff=voff, chunk_row=row, chunk_vbase=vbase)
-    return R.spmv(dev, x, r=sh.r, c=sh.c, nrows=sh.rows_max, ncols=sh.ncols)
+def shard_matrix_panels(mat: F.SPC5Matrix, ndev: int, pr: int = 512,
+                        cb: int = 64, xw: int = 512,
+                        mesh: Optional[Mesh] = None, axis: str = "data",
+                        dtype=None) -> PL.ShardedPlan:
+    """Row-shard + panel-tile each shard (explicit geometry, no tuning)."""
+    return PL.shard_plan(mat, ndev, pr=pr, cb=cb, xw=xw, mesh=mesh,
+                         axis=axis, dtype=dtype, tune=False)
 
 
-def _local_spmv_panels(sh: ShardedSPC5Panels, values, col, mask, voff, row,
-                       vbase, xbase, x):
-    dev = R.SPC5PanelDevice(values=values, chunk_col=col, chunk_mask=mask,
-                            chunk_voff=voff, chunk_row=row, chunk_vbase=vbase,
-                            chunk_xbase=xbase)
-    return R.spmv_panels(dev, x, r=sh.r, c=sh.c, pr=sh.pr, nrows=sh.rows_max,
-                         ncols_pad=sh.ncols_pad)
+def make_distributed_spmv(sh: PL.ShardedPlan, mesh: Mesh,
+                          axis: str = "data", gather: bool = True):
+    """Build a jit'd y = A @ x over the mesh from a :class:`ShardedPlan`.
 
-
-def make_distributed_spmv(sh, mesh: Mesh, axis: str = "data",
-                          gather: bool = True):
-    """Build a jit'd y = A @ x over the mesh.
-
-    ``sh`` is :class:`ShardedSPC5` (flat per-device layout) or
-    :class:`ShardedSPC5Panels` (row sharding composed with per-device
-    row-panel tiling). With gather=True the result is the full replicated y
-    (one all_gather at the end -- the only collective; the paper's no-sync
-    merge). With gather=False the caller keeps the row-slab layout
-    (ndev, rows_max), sharded over ``axis``, e.g. to chain into an operator
-    that consumes row-sharded activations with zero collectives.
+    Layout-agnostic: the shard_map body squeezes each stacked array's
+    leading device dimension and hands the slice tuple to the plan
+    registry's ``local_spmv`` hook for ``sh.layout``. With gather=True the
+    result is the full replicated y (one all_gather at the end -- the only
+    collective; the paper's no-sync merge). With gather=False the caller
+    keeps the row-slab layout (ndev, rows_max), sharded over ``axis``.
 
     A reordering attached by ``shard_matrix(reorder=...)`` is applied
     transparently: x is gathered by ``col_perm`` before the shard_map (x is
     replicated, so the gather is collective-free) and, with gather=True, y
     is scattered back to original row order after the all_gather. With
     gather=False the row slabs stay in PERMUTED row order (``sh.row_iperm``
-    is the map back) -- a chained operator consuming the slabs must either
-    be built against the same permutation or unpermute explicitly.
+    is the map back).
     """
     from jax.experimental.shard_map import shard_map
 
-    panels = isinstance(sh, ShardedSPC5Panels)
+    spec = PL.get_layout(sh.layout)
+    narr = len(sh.arrays)
 
     def finish(y_loc, row_start):
         if not gather:
@@ -329,21 +115,12 @@ def make_distributed_spmv(sh, mesh: Mesh, axis: str = "data",
         y = y.at[idx.reshape(-1)].add(ys.reshape(-1))
         return y[:sh.nrows]
 
-    if panels:
-        def body(values, col, mask, voff, row, vbase, xbase, row_start, x):
-            y_loc = _local_spmv_panels(sh, values[0], col[0], mask[0],
-                                       voff[0], row[0], vbase[0], xbase[0], x)
-            return finish(y_loc, row_start)
+    def body(*args):
+        arrs, row_start, x = args[:narr], args[narr], args[narr + 1]
+        y_loc = spec.local_spmv(sh, tuple(a[0] for a in arrs), x)
+        return finish(y_loc, row_start)
 
-        in_specs = (P(axis),) * 8 + (P(),)
-    else:
-        def body(values, col, mask, voff, row, vbase, row_start, x):
-            y_loc = _local_spmv(sh, values[0], col[0], mask[0], voff[0],
-                                row[0], vbase[0], x)
-            return finish(y_loc, row_start)
-
-        in_specs = (P(axis),) * 7 + (P(),)
-
+    in_specs = (P(axis),) * (narr + 1) + (P(),)
     out_specs = P() if gather else P(axis)
     fn = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                    check_rep=False)
@@ -352,13 +129,7 @@ def make_distributed_spmv(sh, mesh: Mesh, axis: str = "data",
     def run(x):
         if sh.col_perm is not None:
             x = jnp.take(x, sh.col_perm, axis=0)
-        if panels:
-            y = fn(sh.values, sh.chunk_col, sh.chunk_mask, sh.chunk_voff,
-                   sh.chunk_row, sh.chunk_vbase, sh.chunk_xbase,
-                   sh.row_start, x)
-        else:
-            y = fn(sh.values, sh.chunk_col, sh.chunk_mask, sh.chunk_voff,
-                   sh.chunk_row, sh.chunk_vbase, sh.row_start, x)
+        y = fn(*sh.arrays, sh.row_start, x)
         if gather and sh.row_iperm is not None:
             y = jnp.take(y, sh.row_iperm, axis=0)
         return y

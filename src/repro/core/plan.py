@@ -1,0 +1,1047 @@
+"""Execution plans: one layout registry + composable passes + one executor.
+
+Before this module, every device layout came with its own handle class
+(whole-vector, row-panel-tiled, reordered wrapper, beta_test split) and every
+consumer -- ops, SparseLinear, the distributed path, serving, the benches --
+re-implemented ``if layout == "panels"``-style dispatch. This module is the
+single seam that replaces all of that:
+
+  * **Registry** (:class:`LayoutSpec`, :func:`register_layout`): a layout is
+    one registration carrying ``build`` / ``lower_spmv`` / ``lower_spmm`` /
+    ``cost`` / ``clamp`` entries (plus sharding hooks). The registry's key
+    set -- ``whole_vector``, ``panels``, ``test`` -- is the one source of
+    truth for layout names everywhere (``selector.Record.layout``,
+    ``PanelConfig.layout``, benchmark records); legacy spellings ("whole")
+    are mapped by :func:`canonical_layout`.
+
+  * **Plan** (:class:`SPC5Plan`): the single device handle. A frozen pytree
+    whose leaves are the layout's device arrays (+ optional permutation
+    vectors) and whose static aux holds the layout key, the geometry, and an
+    inspectable ``trace`` of every pass decision. Layout-specific attributes
+    (``pr``, ``vmax``, ``dev``, ``single_values``, ...) resolve through the
+    geometry/registry, so the plan satisfies the legacy handle APIs.
+
+  * **Passes** (:func:`make_plan` pipeline): ``tune`` (selector consult) ->
+    ``reorder`` (permutation transform; carries ``col_map`` fusion and
+    ``rows_fused`` decisions as plan metadata) -> ``layout`` (resolve "auto"
+    via the registry's cost entries) -> ``build`` (registry build + fusion).
+    Each pass appends its decision to ``plan.trace``.
+
+  * **Executor** (:func:`execute_spmv` / :func:`execute_spmm`): the ONLY
+    place that dispatches on the layout key -- it routes to the registered
+    lowering and applies the plan's inverse row permutation. The ``shard``
+    pass (:func:`shard_plan`) turns row slabs into per-device sub-arrays of
+    the same registered layout, so ``make_distributed_spmv`` is generic too.
+
+Adding a layout is one :func:`register_layout` call -- see
+``docs/architecture.md`` for the recipe.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import spc5_spmm, spc5_spmv
+
+from . import formats as F
+from . import ref_spmv as R
+from . import reorder as RE
+from . import selector as S
+
+# ----------------------------------------------------------------------------
+# Canonical layout names
+# ----------------------------------------------------------------------------
+
+LAYOUT_WHOLE = "whole_vector"
+LAYOUT_PANELS = "panels"
+LAYOUT_TEST = "test"
+
+#: Legacy spellings accepted by :func:`canonical_layout` (old JSONL stores
+#: and pre-plan call sites used "whole" for the whole-vector layout).
+_LAYOUT_ALIASES: Dict[str, str] = {
+    "whole": LAYOUT_WHOLE,
+}
+
+#: Non-layout sentinels that pass through canonicalization untouched:
+#: "auto" = let the layout pass pick, "" = unknown/legacy record.
+_LAYOUT_SENTINELS = ("auto", "")
+
+
+def canonical_layout(name: str) -> str:
+    """Map a layout name to the registry's key set (one source of truth).
+
+    Registry keys and the sentinels "auto"/"" pass through; legacy spellings
+    are translated; anything else raises -- a tuned config or a record store
+    can never smuggle an unknown layout past the pipeline.
+    """
+    if name in _LAYOUT_SENTINELS or name in _REGISTRY:
+        return name
+    if name in _LAYOUT_ALIASES:
+        return _LAYOUT_ALIASES[name]
+    raise ValueError(
+        f"unknown layout {name!r}; expected one of {layout_names()} "
+        f"(or a legacy alias {sorted(_LAYOUT_ALIASES)})")
+
+
+# ----------------------------------------------------------------------------
+# Registry
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayoutSpec:
+    """One device layout, registered once, dispatched everywhere.
+
+    ``array_names`` fixes the order of the plan's device arrays (and names
+    them for attribute access); ``build(state)`` converts the host matrix to
+    ``(arrays, geom, extra)``; ``lower_spmv``/``lower_spmm`` are the kernel
+    lowerings (they own the column-permutation gather so layouts that can
+    fuse it -- the whole-vector kernels' ``col_map`` input -- do);
+    ``cost(nrows, ncols, itemsize, nvec)`` estimates the layout's VMEM
+    footprint in bytes for "auto" selection; ``clamp`` validates a tuned
+    configuration against a concrete matrix. ``shard_build``/``local_spmv``
+    are the distributed hooks: stack per-device row slabs / run one shard's
+    SpMV inside shard_map. ``auto_eligible`` excludes layouts (the beta_test
+    split) from "auto" resolution.
+    """
+
+    name: str
+    array_names: Tuple[str, ...]
+    build: Callable
+    lower_spmv: Callable
+    lower_spmm: Callable
+    cost: Callable
+    clamp: Callable
+    default_cb: int
+    device_view: Optional[Callable] = None
+    shard_build: Optional[Callable] = None
+    local_spmv: Optional[Callable] = None
+    auto_eligible: bool = True
+
+
+_REGISTRY: Dict[str, LayoutSpec] = {}
+
+#: Preference order for "auto" resolution: the first registered layout whose
+#: ``cost`` fits the VMEM budget wins (whole-vector is cheapest per chunk,
+#: panels are bounded-VMEM and always fit).
+_AUTO_ORDER: List[str] = []
+
+
+def register_layout(spec: LayoutSpec) -> LayoutSpec:
+    """Add a layout to the registry (idempotent by name, last wins)."""
+    if spec.name in _LAYOUT_SENTINELS:
+        raise ValueError(f"{spec.name!r} is reserved")
+    if spec.name not in _REGISTRY and spec.auto_eligible:
+        _AUTO_ORDER.append(spec.name)
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get_layout(name: str) -> LayoutSpec:
+    key = canonical_layout(name)
+    if key not in _REGISTRY:
+        raise ValueError(f"layout {name!r} is not registered; "
+                         f"have {layout_names()}")
+    return _REGISTRY[key]
+
+
+def layout_names() -> Tuple[str, ...]:
+    """The registry's key set -- the canonical layout names."""
+    return tuple(sorted(_REGISTRY))
+
+
+# Whole-vector path budget: x (ncols) + y (nrows) must sit in VMEM next to
+# the decode working set. ~2 MiB of f32 leaves headroom in a 16 MiB VMEM
+# for the SpMV kernels; SpMM tiles are nvec-wide, so callers that will run
+# SpMM must scale the footprint by nvec (see fits_whole_vector).
+VMEM_WHOLE_VECTOR_BUDGET = 2 * 2**20
+
+
+def fits_whole_vector(nrows: int, ncols: int, itemsize: int = 4,
+                      budget_bytes: int = VMEM_WHOLE_VECTOR_BUDGET,
+                      nvec: int = 1) -> bool:
+    """Layout selection rule: whole-vector only when x AND y fit the budget.
+
+    ``nvec`` is the widest multi-vector batch the handle will see: the
+    whole-vector SpMM kernel holds (ncols, nvt) and (nrows, nvt) tiles with
+    nvt = min(nvec, 128), so the footprint scales by that factor.
+    """
+    return _cost_whole(nrows, ncols, itemsize, nvec) <= budget_bytes
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve_attr(obj, name):
+    """Shared attribute resolution for plan containers: geometry meta keys
+    first, then the layout's named device arrays."""
+    meta = object.__getattribute__(obj, "meta")
+    for k, v in meta:
+        if k == name:
+            return v
+    layout = object.__getattribute__(obj, "layout")
+    spec = _REGISTRY.get(layout)
+    if spec is not None and name in spec.array_names:
+        arrays = object.__getattribute__(obj, "arrays")
+        return arrays[spec.array_names.index(name)]
+    raise AttributeError(
+        f"{type(obj).__name__} ({layout!r}) has no attribute {name!r}")
+
+
+# ----------------------------------------------------------------------------
+# The plan
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SPC5Plan:
+    """The single device handle: layout key + device arrays + geometry +
+    permutation metadata + the pass trace.
+
+    Registered as a pytree (device arrays, sub-plans, and permutation
+    vectors are leaves; layout/geometry/trace are static aux), so plans live
+    inside model parameter pytrees and cross jit boundaries exactly like the
+    four handle classes they replace. Geometry keys (``r``, ``c``, ``cb``,
+    ``pr``, ``vmax``, ...) and the layout's array names
+    (``single_values``, ...) resolve as attributes, which is what keeps the
+    legacy handle APIs intact.
+    """
+
+    layout: str
+    arrays: Tuple[jax.Array, ...]
+    meta: Tuple[Tuple[str, Any], ...]
+    children: Tuple["SPC5Plan", ...] = ()
+    col_perm: Optional[jax.Array] = None
+    row_iperm: Optional[jax.Array] = None
+    rows_fused: bool = False
+    trace_json: str = "[]"
+
+    # -- attribute resolution through geometry / layout array names --------
+    def __getattr__(self, name):
+        return _resolve_attr(self, name)
+
+    # -- generic handle API ------------------------------------------------
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (self.nrows, self.ncols)
+
+    @property
+    def dev(self):
+        """The layout's device-array view (legacy ``handle.dev`` API)."""
+        spec = get_layout(self.layout)
+        if spec.device_view is None:
+            raise AttributeError(f"layout {self.layout!r} has no dev view")
+        return spec.device_view(self.arrays)
+
+    @property
+    def multi(self) -> "SPC5Plan":
+        """The beta_test split's multi-nnz-block sub-plan."""
+        if not self.children:
+            raise AttributeError(f"layout {self.layout!r} has no sub-plans")
+        return self.children[0]
+
+    @property
+    def trace(self) -> List[dict]:
+        """Every pass decision that produced this plan, in pipeline order."""
+        return json.loads(self.trace_json)
+
+    @property
+    def is_reordered(self) -> bool:
+        """True when a reordering pass actually permuted this plan."""
+        return (self.col_perm is not None or self.row_iperm is not None
+                or self.rows_fused)
+
+    @property
+    def strategy(self) -> str:
+        """The applied reordering strategy ("" when none applied)."""
+        for e in self.trace:
+            if e.get("pass") == "reorder" and e.get("applied"):
+                return e.get("strategy", "")
+        return ""
+
+    @property
+    def stats(self) -> dict:
+        """The reorder pass's scalar evidence (legacy reordered-handle API)."""
+        for e in self.trace:
+            if e.get("pass") == "reorder" and "stats" in e:
+                return e["stats"]
+        return {}
+
+    def apply(self, x: jax.Array, **kw) -> jax.Array:
+        """y = A @ x (SpMV for 1-D x, SpMM for 2-D x), original index order."""
+        return (execute_spmv if x.ndim == 1 else execute_spmm)(self, x, **kw)
+
+
+def _plan_flatten(p: SPC5Plan):
+    return ((p.arrays, p.children, p.col_perm, p.row_iperm),), \
+        (p.layout, p.meta, p.rows_fused, p.trace_json)
+
+
+def _plan_unflatten(aux, ch):
+    arrays, children, col_perm, row_iperm = ch[0]
+    return SPC5Plan(aux[0], arrays, aux[1], children, col_perm, row_iperm,
+                    aux[2], aux[3])
+
+
+jax.tree_util.register_pytree_node(SPC5Plan, _plan_flatten, _plan_unflatten)
+
+
+# ----------------------------------------------------------------------------
+# Pipeline state + passes
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PlanState:
+    """Mutable pipeline state threaded through the passes."""
+
+    mat: F.SPC5Matrix
+    layout: str = "auto"            # requested (canonical or "auto")
+    multi_layout: str = "auto"      # the test split's inner-layout request
+    pr: Optional[int] = None
+    xw: Optional[int] = None
+    cb: Optional[int] = None
+    nvec: int = 1
+    align: int = 8
+    dtype: Any = None
+    store: Optional[S.RecordStore] = None
+    tune: bool = True
+    reorder: Union[None, str, RE.Reordering] = None
+    reo: Optional[RE.Reordering] = None     # resolved + applied reordering
+    rows_fusible: bool = False
+    trace: List[dict] = dataclasses.field(default_factory=list)
+
+    @property
+    def itemsize(self) -> int:
+        return np.dtype(self.dtype or self.mat.values.dtype).itemsize
+
+
+def _tune_pass(st: PlanState) -> None:
+    """Selector consult: fill (layout, pr, xw, cb, reorder) from a record
+    store when the caller requested nothing explicit."""
+    entry: dict = {"pass": "tune"}
+    explicit = (st.layout != "auto" or st.pr is not None
+                or st.xw is not None or st.cb is not None)
+    if st.layout == LAYOUT_TEST:
+        # the split's multi sub-plan runs its own pipeline (incl. tuning)
+        entry["source"] = "delegated"
+    elif not st.tune:
+        entry["source"] = "disabled"
+    elif explicit:
+        entry["source"] = "explicit"
+    else:
+        tstore = st.store if st.store is not None else S.get_default_store()
+        if tstore is None or not tstore.records:
+            entry["source"] = "no-store"
+        else:
+            mat = st.mat
+            cfg = S.tune(S.spc5_features(mat), store=tstore,
+                         kernel=f"{mat.r}x{mat.c}")
+            cfg = S.clamp_config(cfg, nrows=mat.nrows, ncols=mat.ncols,
+                                 r=mat.r, c=mat.c, nblocks=mat.nblocks,
+                                 align=st.align)
+            demoted = False
+            if (cfg.layout == LAYOUT_WHOLE
+                    and not fits_whole_vector(*mat.shape, st.itemsize,
+                                              nvec=st.nvec)):
+                # a tuned whole-vector pick must never blow the VMEM budget;
+                # drop its geometry too -- a whole-layout cb (256/512) is an
+                # unmeasured, oversized panel chunk (vmax ~ cb*r*c elements)
+                cfg = S.PanelConfig(layout=LAYOUT_PANELS)
+                demoted = True
+            st.layout = cfg.layout
+            st.pr = cfg.pr or None
+            st.xw = cfg.xw or None
+            st.cb = cfg.cb
+            if st.reorder is None and cfg.reorder:
+                st.reorder = cfg.reorder
+            entry.update(source="store", layout=cfg.layout,
+                         pr=int(cfg.pr or 0), xw=int(cfg.xw or 0),
+                         cb=int(cfg.cb or 0), reorder=cfg.reorder,
+                         demoted=demoted)
+    st.trace.append(entry)
+
+
+def _scalar_stats(stats: dict) -> dict:
+    return {k: v for k, v in stats.items()
+            if isinstance(v, (int, float, str, bool))}
+
+
+def _reorder_pass(st: PlanState) -> None:
+    """Permutation transform: resolve the ``reorder`` request (strategy
+    names are built AND scored at the geometry in effect, and may decline),
+    permute the matrix, and record the fusion decision
+    (``rows_fusible`` -> the whole-vector build folds the inverse row
+    scatter into ``chunk_row``)."""
+    entry: dict = {"pass": "reorder", "strategy": "", "applied": False}
+    reo = st.reorder
+    if isinstance(reo, RE.Reordering):
+        if (reo.nrows, reo.ncols) != st.mat.shape:
+            raise ValueError(
+                f"reordering is for shape {(reo.nrows, reo.ncols)}, "
+                f"matrix is {st.mat.shape}")
+    elif reo is not None:
+        reo = RE.reorder(st.mat, str(reo), r=st.mat.r, c=st.mat.c,
+                         pr=512 if st.pr is None else st.pr,
+                         xw=512 if st.xw is None else st.xw,
+                         cb=st.cb if st.cb else 64, align=st.align)
+    if reo is not None and not reo.is_identity:
+        st.mat = reo.permute_spc5(st.mat)
+        st.reo = reo
+        st.rows_fusible = (not reo.identity_rows
+                           and reo.rows_interval_contiguous(st.mat.r))
+        entry.update(strategy=reo.strategy, applied=True,
+                     rows_fusible=st.rows_fusible,
+                     stats=_scalar_stats(reo.stats))
+    elif reo is not None:               # declined / explicit identity
+        entry.update(strategy=reo.strategy, stats=_scalar_stats(reo.stats))
+    st.trace.append(entry)
+
+
+def _layout_pass(st: PlanState) -> None:
+    """Resolve "auto" through the registry's cost entries: the first
+    auto-eligible layout whose VMEM cost fits the budget wins."""
+    entry: dict = {"pass": "layout"}
+    if st.layout == "auto":
+        entry["reason"] = "vmem-fit"
+        for name in _AUTO_ORDER:
+            spec = _REGISTRY[name]
+            if spec.cost(st.mat.nrows, st.mat.ncols, st.itemsize,
+                         st.nvec) <= VMEM_WHOLE_VECTOR_BUDGET:
+                st.layout = name
+                break
+        else:                           # pragma: no cover - panels always fit
+            raise RuntimeError("no registered layout fits the VMEM budget")
+    else:
+        entry["reason"] = "requested"
+    entry["layout"] = st.layout
+    st.trace.append(entry)
+
+
+def _build_pass(st: PlanState) -> SPC5Plan:
+    """Registry build + permutation attachment -> the finished plan."""
+    spec = get_layout(st.layout)
+    arrays, geom, extra = spec.build(st)
+    rows_fused = bool(extra.get("rows_fused", False))
+    col_perm = row_iperm = None
+    if st.reo is not None:
+        reo = st.reo
+        col_perm = (None if reo.identity_cols
+                    else jnp.asarray(reo.col_perm.astype(np.int32)))
+        row_iperm = (None if (rows_fused or reo.identity_rows)
+                     else jnp.asarray(reo.row_iperm.astype(np.int32)))
+    st.trace.append({"pass": "build", "layout": st.layout,
+                     "rows_fused": rows_fused,
+                     **{k: v for k, v in sorted(geom.items())
+                        if isinstance(v, (int, float, str, bool))}})
+    return SPC5Plan(layout=st.layout, arrays=tuple(arrays),
+                    meta=tuple(sorted(geom.items())),
+                    children=tuple(extra.get("children", ())),
+                    col_perm=col_perm, row_iperm=row_iperm,
+                    rows_fused=rows_fused,
+                    trace_json=json.dumps(st.trace, sort_keys=True))
+
+
+def make_plan(mat: F.SPC5Matrix, *, layout: str = "auto",
+              pr: Optional[int] = None, xw: Optional[int] = None,
+              cb: Optional[int] = None, nvec: int = 1, align: int = 8,
+              dtype=None, store: Optional[S.RecordStore] = None,
+              tune: bool = True,
+              reorder: Union[None, str, RE.Reordering] = None,
+              multi_layout: str = "auto") -> SPC5Plan:
+    """The plan pipeline: tune -> reorder -> layout -> build.
+
+    This is the single entry point behind ``ops.prepare`` /
+    ``ops.prepare_panels`` / ``ops.prepare_test`` /
+    ``SparseLinear.from_dense``; every pass records its decision in the
+    returned plan's ``trace``. ``layout`` accepts a registry key, a legacy
+    alias, or "auto"; ``multi_layout`` is the beta_test split's inner-layout
+    request (only meaningful with ``layout="test"``).
+    """
+    st = PlanState(mat=mat, layout=canonical_layout(layout),
+                   multi_layout=canonical_layout(multi_layout),
+                   pr=pr, xw=xw, cb=cb, nvec=nvec, align=align, dtype=dtype,
+                   store=store, tune=tune, reorder=reorder)
+    _tune_pass(st)
+    _reorder_pass(st)
+    _layout_pass(st)
+    return _build_pass(st)
+
+
+# ----------------------------------------------------------------------------
+# Executor (the ONLY layout dispatch)
+# ----------------------------------------------------------------------------
+
+def execute_spmv(plan: SPC5Plan, x: jax.Array, *,
+                 use_pallas: Optional[bool] = None,
+                 double_buffer: bool = True,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """y = A @ x through the plan's registered lowering.
+
+    x and y are always in ORIGINAL index order: the lowering owns the
+    column-permutation gather (fused into the whole-vector kernels'
+    ``col_map`` decode where possible) and this executor applies the
+    inverse row permutation -- unless the build fused it into the scatter
+    indices (``rows_fused``).
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if interpret is None:
+        interpret = not _on_tpu()
+    spec = get_layout(plan.layout)
+    y = spec.lower_spmv(plan, x, use_pallas=use_pallas,
+                        double_buffer=double_buffer, interpret=interpret)
+    if plan.row_iperm is not None:
+        y = jnp.take(y, plan.row_iperm, axis=0)
+    return y
+
+
+def execute_spmm(plan: SPC5Plan, x: jax.Array, *,
+                 use_pallas: Optional[bool] = None, nvt: int = 128,
+                 double_buffer: bool = True,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """Y = A @ X, X of shape (ncols, nvec), through the registered lowering."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if interpret is None:
+        interpret = not _on_tpu()
+    spec = get_layout(plan.layout)
+    y = spec.lower_spmm(plan, x, use_pallas=use_pallas, nvt=nvt,
+                        double_buffer=double_buffer, interpret=interpret)
+    if plan.row_iperm is not None:
+        y = jnp.take(y, plan.row_iperm, axis=0)
+    return y
+
+
+def _gathered_x(plan: SPC5Plan, x: jax.Array) -> jax.Array:
+    return x if plan.col_perm is None else jnp.take(x, plan.col_perm, axis=0)
+
+
+# ----------------------------------------------------------------------------
+# whole_vector layout
+# ----------------------------------------------------------------------------
+
+_WHOLE_ARRAYS = tuple(R.SPC5Device._fields)      # values, chunk_col, ...
+
+
+def _cost_whole(nrows: int, ncols: int, itemsize: int, nvec: int) -> int:
+    return (nrows + ncols) * itemsize * min(max(nvec, 1), 128)
+
+
+def _build_whole(st: PlanState):
+    ch = F.to_chunked(st.mat, cb=256 if st.cb is None else st.cb,
+                      align=st.align)
+    rows_fused = False
+    if st.reo is not None and st.rows_fusible:
+        # fuse the inverse row permutation into the scatter indices: each
+        # block's r permuted rows map to r consecutive ORIGINAL rows, so
+        # chunk_row can point straight at the original base row and y needs
+        # no output gather at all
+        ch = dataclasses.replace(
+            ch, chunk_row=st.reo.row_perm[ch.chunk_row].astype(np.int32))
+        rows_fused = True
+    dev = R.device_put(ch, dtype=st.dtype)
+    geom = dict(r=ch.r, c=ch.c, cb=ch.cb, vmax=ch.vmax, nrows=ch.nrows,
+                ncols=ch.ncols, nnz=ch.nnz)
+    return tuple(dev), geom, {"rows_fused": rows_fused}
+
+
+def _lower_spmv_whole(plan: SPC5Plan, x, *, use_pallas, double_buffer,
+                      interpret):
+    dev = plan.dev
+    if not use_pallas:
+        return R.spmv(dev, _gathered_x(plan, x), r=plan.r, c=plan.c,
+                      nrows=plan.nrows, ncols=plan.ncols)
+    # fused x gather: the whole-vector kernels route their decode through
+    # col_map, so x never materialises in permuted order
+    fn = (spc5_spmv.spmv_pallas_db if double_buffer
+          else spc5_spmv.spmv_pallas)
+    return fn(dev.chunk_vbase, dev.chunk_col, dev.chunk_mask, dev.chunk_voff,
+              dev.chunk_row, dev.values, x, plan.col_perm,
+              r=plan.r, c=plan.c, cb=plan.cb, vmax=plan.vmax,
+              nrows=plan.nrows, ncols=plan.ncols, interpret=interpret)
+
+
+def _lower_spmm_whole(plan: SPC5Plan, x, *, use_pallas, nvt, double_buffer,
+                      interpret):
+    dev = plan.dev
+    if not use_pallas:
+        return R.spmm(dev, _gathered_x(plan, x), r=plan.r, c=plan.c,
+                      nrows=plan.nrows, ncols=plan.ncols)
+    return spc5_spmm.spmm_pallas(
+        dev.chunk_vbase, dev.chunk_col, dev.chunk_mask, dev.chunk_voff,
+        dev.chunk_row, dev.values, x, plan.col_perm,
+        r=plan.r, c=plan.c, cb=plan.cb, vmax=plan.vmax, nrows=plan.nrows,
+        ncols=plan.ncols, nvt=min(nvt, x.shape[1]), interpret=interpret)
+
+
+def _clamp_whole(cfg: S.PanelConfig, *, nrows, ncols, r, c, nblocks,
+                 align=8) -> S.PanelConfig:
+    return S.clamp_config(cfg, nrows=nrows, ncols=ncols, r=r, c=c,
+                          nblocks=nblocks, align=align)
+
+
+def _shard_build_whole(st: "ShardState"):
+    """Stack per-device chunked arrays (padded to uniform shapes)."""
+    cb = 256 if st.cb is None else st.cb
+    chunked = [F.to_chunked(p, cb=cb) for p in st.parts]
+    nch = max(ch.nchunks for ch in chunked)
+    vmax = max(ch.vmax for ch in chunked)
+    nvals = max(ch.values.shape[0] + vmax for ch in chunked)
+    rows_max = max(p.shape[0] for p in st.parts)
+
+    def pad2(a, n):  # pad axis0 of (nchunks, cb)
+        return np.pad(a, ((0, n - a.shape[0]), (0, 0)))
+
+    dt = st.dtype or st.mat.values.dtype
+    arrays = (
+        jnp.asarray(np.stack([
+            np.pad(ch.values, (0, nvals - ch.values.shape[0]))
+            for ch in chunked]).astype(dt)),
+        jnp.asarray(np.stack([pad2(ch.chunk_col, nch) for ch in chunked])),
+        jnp.asarray(np.stack([pad2(ch.chunk_mask, nch).astype(np.int32)
+                              for ch in chunked])),
+        jnp.asarray(np.stack([pad2(ch.chunk_voff, nch) for ch in chunked])),
+        jnp.asarray(np.stack([pad2(ch.chunk_row, nch) for ch in chunked])),
+        jnp.asarray(np.stack([
+            np.pad(ch.chunk_vbase, (0, nch - ch.chunk_vbase.shape[0]))
+            for ch in chunked])),
+    )
+    geom = dict(r=st.mat.r, c=st.mat.c, cb=cb, vmax=vmax, rows_max=rows_max,
+                nrows=st.mat.shape[0], ncols=st.mat.shape[1], nnz=st.mat.nnz)
+    return arrays, geom
+
+
+def _local_spmv_whole(sh: "ShardedPlan", local: Tuple[jax.Array, ...], x):
+    dev = R.SPC5Device(*local)
+    return R.spmv(dev, x, r=sh.r, c=sh.c, nrows=sh.rows_max, ncols=sh.ncols)
+
+
+register_layout(LayoutSpec(
+    name=LAYOUT_WHOLE,
+    array_names=_WHOLE_ARRAYS,
+    build=_build_whole,
+    lower_spmv=_lower_spmv_whole,
+    lower_spmm=_lower_spmm_whole,
+    cost=_cost_whole,
+    clamp=_clamp_whole,
+    default_cb=256,
+    device_view=lambda arrays: R.SPC5Device(*arrays),
+    shard_build=_shard_build_whole,
+    local_spmv=_local_spmv_whole,
+))
+
+
+# ----------------------------------------------------------------------------
+# panels layout
+# ----------------------------------------------------------------------------
+
+_PANEL_ARRAYS = tuple(R.SPC5PanelDevice._fields)
+
+
+def _cost_panels(nrows: int, ncols: int, itemsize: int, nvec: int) -> int:
+    # VMEM per grid step is pr + xw + vmax elements regardless of matrix
+    # size -- the bounded-VMEM layout always fits the budget
+    return 0
+
+
+def _build_panels(st: PlanState):
+    pan = F.to_panels(st.mat, pr=512 if st.pr is None else st.pr,
+                      cb=64 if st.cb is None else st.cb,
+                      xw=512 if st.xw is None else st.xw, align=st.align)
+    dev = R.device_put_panels(pan, dtype=st.dtype)
+    geom = dict(r=pan.r, c=pan.c, pr=pan.pr, cb=pan.cb, xw=pan.xw,
+                vmax=pan.vmax, npanels=pan.npanels, nchunks=pan.nchunks,
+                nrows=pan.nrows, ncols=pan.ncols, ncols_pad=pan.ncols_pad,
+                nnz=pan.nnz)
+    return tuple(dev), geom, {}
+
+
+def _lower_spmv_panels(plan: SPC5Plan, x, *, use_pallas, double_buffer,
+                       interpret):
+    xg = _gathered_x(plan, x)
+    dev = plan.dev
+    if not use_pallas:
+        return R.spmv_panels(dev, xg, r=plan.r, c=plan.c, pr=plan.pr,
+                             nrows=plan.nrows, ncols_pad=plan.ncols_pad)
+    fn = (spc5_spmv.spmv_pallas_panels_db if double_buffer
+          else spc5_spmv.spmv_pallas_panels)
+    return fn(dev.chunk_vbase, dev.chunk_xbase, dev.chunk_col, dev.chunk_mask,
+              dev.chunk_voff, dev.chunk_row, dev.values, xg,
+              r=plan.r, c=plan.c, cb=plan.cb, vmax=plan.vmax, xw=plan.xw,
+              pr=plan.pr, nrows=plan.nrows, ncols_pad=plan.ncols_pad,
+              interpret=interpret)
+
+
+def _lower_spmm_panels(plan: SPC5Plan, x, *, use_pallas, nvt, double_buffer,
+                       interpret):
+    xg = _gathered_x(plan, x)
+    dev = plan.dev
+    if not use_pallas:
+        return R.spmm_panels(dev, xg, r=plan.r, c=plan.c, pr=plan.pr,
+                             nrows=plan.nrows, ncols_pad=plan.ncols_pad)
+    fn = (spc5_spmm.spmm_pallas_panels_db if double_buffer
+          else spc5_spmm.spmm_pallas_panels)
+    return fn(dev.chunk_vbase, dev.chunk_xbase, dev.chunk_col, dev.chunk_mask,
+              dev.chunk_voff, dev.chunk_row, dev.values, xg,
+              r=plan.r, c=plan.c, cb=plan.cb, vmax=plan.vmax, xw=plan.xw,
+              pr=plan.pr, nrows=plan.nrows, ncols_pad=plan.ncols_pad,
+              nvt=min(nvt, x.shape[1]), interpret=interpret)
+
+
+def _shard_build_panels(st: "ShardState"):
+    """Row-shard + panel-tile each shard + stack (padded to uniform grids)."""
+    pr = 512 if st.pr is None else st.pr
+    cb = 64 if st.cb is None else st.cb
+    xw = 512 if st.xw is None else st.xw
+    pans = [F.to_panels(p, pr=pr, cb=cb, xw=xw) for p in st.parts]
+    pr = pans[0].pr                        # normalised to a multiple of r
+    npan = max(p.npanels for p in pans)
+    nch = max(p.nchunks for p in pans)
+    vmax = max(p.vmax for p in pans)
+    nvals = max(int(p.chunk_vbase.max()) + vmax for p in pans)
+    ncols_pad = max(p.ncols_pad for p in pans)
+
+    def pad3(a):   # (npanels, nchunks, cb) -> (npan, nch, cb)
+        return np.pad(a, ((0, npan - a.shape[0]), (0, nch - a.shape[1]),
+                          (0, 0)))
+
+    def pad2(a):           # (npanels, nchunks) -> (npan, nch)
+        return np.pad(a, ((0, npan - a.shape[0]), (0, nch - a.shape[1])))
+
+    dt = st.dtype or st.mat.values.dtype
+    arrays = (
+        jnp.asarray(np.stack([
+            np.pad(p.values, (0, nvals - p.values.shape[0]))
+            for p in pans]).astype(dt)),
+        jnp.asarray(np.stack([pad3(p.chunk_col) for p in pans])),
+        jnp.asarray(np.stack([pad3(p.chunk_mask).astype(np.int32)
+                              for p in pans])),
+        jnp.asarray(np.stack([pad3(p.chunk_voff) for p in pans])),
+        jnp.asarray(np.stack([pad3(p.chunk_row) for p in pans])),
+        jnp.asarray(np.stack([pad2(p.chunk_vbase) for p in pans])),
+        jnp.asarray(np.stack([pad2(p.chunk_xbase) for p in pans])),
+    )
+    geom = dict(r=st.mat.r, c=st.mat.c, pr=pr, cb=pans[0].cb, xw=pans[0].xw,
+                vmax=vmax, rows_max=npan * pr, nrows=st.mat.shape[0],
+                ncols=st.mat.shape[1], ncols_pad=ncols_pad, nnz=st.mat.nnz)
+    return arrays, geom
+
+
+def _local_spmv_panels(sh: "ShardedPlan", local: Tuple[jax.Array, ...], x):
+    dev = R.SPC5PanelDevice(*local)
+    return R.spmv_panels(dev, x, r=sh.r, c=sh.c, pr=sh.pr, nrows=sh.rows_max,
+                         ncols_pad=sh.ncols_pad)
+
+
+register_layout(LayoutSpec(
+    name=LAYOUT_PANELS,
+    array_names=_PANEL_ARRAYS,
+    build=_build_panels,
+    lower_spmv=_lower_spmv_panels,
+    lower_spmm=_lower_spmm_panels,
+    cost=_cost_panels,
+    clamp=_clamp_whole,                 # same generic dim clamp
+    default_cb=64,
+    device_view=lambda arrays: R.SPC5PanelDevice(*arrays),
+    shard_build=_shard_build_panels,
+    local_spmv=_local_spmv_panels,
+))
+
+
+# ----------------------------------------------------------------------------
+# test layout: beta(r,c)_test split (multi-block sub-plan + COO tail)
+# ----------------------------------------------------------------------------
+
+_TEST_ARRAYS = ("single_rows", "single_cols", "single_values", "tail_xbase")
+
+
+def _bucket_tail_by_panel(rows: np.ndarray, cols: np.ndarray,
+                          vals: np.ndarray, pr: int, npanels: int,
+                          align: int = 8):
+    """Sort the singleton COO tail into per-panel buckets padded to the max
+    per-panel count (mask-free analogue of the panel layout's uniform chunk
+    padding), plus one aligned x window per panel covering the bucket's
+    column span -- the Pallas tail kernel DMAs x per panel exactly like the
+    block kernels window it per chunk. Callers must not pass an empty tail
+    (the flat zero-length arrays already encode 'no singletons')."""
+    n = rows.shape[0]
+    panel = rows.astype(np.int64) // pr
+    order = np.lexsort((cols, rows, panel))
+    counts = np.bincount(panel, minlength=npanels).astype(np.int64)
+    smax = int(counts.max())
+    brows = np.zeros((npanels, smax), dtype=np.int32)
+    bcols = np.zeros((npanels, smax), dtype=np.int32)
+    bvals = np.zeros((npanels, smax), dtype=vals.dtype)
+    cum = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    slot = np.arange(n, dtype=np.int64) - np.repeat(cum, counts)
+    p_sorted = panel[order]
+    brows[p_sorted, slot] = (rows[order].astype(np.int64) % pr).astype(np.int32)
+    bcols[p_sorted, slot] = cols[order]
+    bvals[p_sorted, slot] = vals[order]
+    # per-panel x windows: xbase aligned down, width = max span (one static
+    # window width keeps the kernel's DMA tile uniform across panels)
+    cmin = np.full(npanels, np.iinfo(np.int64).max, dtype=np.int64)
+    cmax = np.zeros(npanels, dtype=np.int64)
+    np.minimum.at(cmin, panel, cols.astype(np.int64))
+    np.maximum.at(cmax, panel, cols.astype(np.int64))
+    cmin[counts == 0] = 0
+    cmax[counts == 0] = 0
+    xbase = (cmin // align) * align
+    span = int((cmax - xbase + 1).max())
+    tail_xw = max(align, -(-span // align) * align)
+    ncols_pad = int(xbase.max()) + tail_xw
+    return brows, bcols, bvals, xbase.astype(np.int32), tail_xw, ncols_pad
+
+
+def _build_test(st: PlanState):
+    split = F.split_singletons(st.mat)
+    dt = st.dtype or st.mat.values.dtype
+    multi = make_plan(split.multi, layout=st.multi_layout, pr=st.pr,
+                      xw=st.xw, cb=st.cb, nvec=st.nvec, align=st.align,
+                      dtype=st.dtype, store=st.store, tune=st.tune,
+                      reorder=None)
+    n_single = int(split.single_values.shape[0])
+    if multi.layout == LAYOUT_PANELS and n_single:
+        brows, bcols, bvals, xbase, tail_xw, tail_pad = \
+            _bucket_tail_by_panel(split.single_rows, split.single_cols,
+                                  split.single_values.astype(dt), multi.pr,
+                                  multi.npanels, align=st.align)
+        arrays = (jnp.asarray(brows), jnp.asarray(bcols), jnp.asarray(bvals),
+                  jnp.asarray(xbase))
+        tail_pr = multi.pr
+    else:       # flat tail; zero-length == no singletons, skipped per call
+        arrays = (jnp.asarray(split.single_rows),
+                  jnp.asarray(split.single_cols),
+                  jnp.asarray(split.single_values.astype(dt)),
+                  jnp.zeros((0,), jnp.int32))
+        tail_pr, tail_xw, tail_pad = 0, 0, 0
+    geom = dict(nrows=st.mat.nrows, ncols=st.mat.ncols, nnz=st.mat.nnz,
+                tail_pr=tail_pr, tail_xw=tail_xw, tail_ncols_pad=tail_pad,
+                n_single=n_single)
+    return arrays, geom, {"children": (multi,)}
+
+
+def _tail_spmv(plan: SPC5Plan, xg, *, use_pallas, interpret):
+    """The singleton tail's contribution (permuted index space)."""
+    rows, cols, vals, xbase = plan.arrays
+    if plan.tail_pr:
+        if use_pallas:
+            return spc5_spmv.spmv_tail_pallas(
+                xbase, rows, cols, vals, xg, pr=plan.tail_pr,
+                xw=plan.tail_xw, nrows=plan.nrows,
+                ncols_pad=plan.tail_ncols_pad, interpret=interpret)
+        return R.spmv_coo_panels(rows, cols, vals, xg, pr=plan.tail_pr,
+                                 nrows=plan.nrows)
+    return R.spmv_coo(rows, cols, vals, xg, nrows=plan.nrows)
+
+
+def _lower_spmv_test(plan: SPC5Plan, x, *, use_pallas, double_buffer,
+                     interpret):
+    xg = _gathered_x(plan, x)
+    y = execute_spmv(plan.multi, xg, use_pallas=use_pallas,
+                     double_buffer=double_buffer, interpret=interpret)
+    if plan.single_values.size:
+        y = y + _tail_spmv(plan, xg, use_pallas=use_pallas,
+                           interpret=interpret)
+    return y
+
+
+def _lower_spmm_test(plan: SPC5Plan, x, *, use_pallas, nvt, double_buffer,
+                     interpret):
+    xg = _gathered_x(plan, x)
+    y = execute_spmm(plan.multi, xg, use_pallas=use_pallas, nvt=nvt,
+                     double_buffer=double_buffer, interpret=interpret)
+    if plan.single_values.size:
+        rows, cols, vals = (plan.single_rows, plan.single_cols,
+                            plan.single_values)
+        if plan.tail_pr:                # bucketed: panel-local -> global rows
+            npanels = rows.shape[0]
+            rows = (jnp.arange(npanels, dtype=rows.dtype)[:, None]
+                    * plan.tail_pr + rows)
+            tail = R.spmm_coo(rows.reshape(-1), cols.reshape(-1),
+                              vals.reshape(-1), xg,
+                              nrows=npanels * plan.tail_pr)[:plan.nrows]
+        else:
+            tail = R.spmm_coo(rows, cols, vals, xg, nrows=plan.nrows)
+        y = y + tail
+    return y
+
+
+register_layout(LayoutSpec(
+    name=LAYOUT_TEST,
+    array_names=_TEST_ARRAYS,
+    build=_build_test,
+    lower_spmv=_lower_spmv_test,
+    lower_spmm=_lower_spmm_test,
+    cost=lambda nrows, ncols, itemsize, nvec: 0,
+    clamp=_clamp_whole,
+    default_cb=256,
+    auto_eligible=False,
+))
+
+
+# ----------------------------------------------------------------------------
+# Shard pass: distributed slabs as per-device sub-plans
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardedPlan:
+    """Per-device sub-plans of one registered layout, stacked.
+
+    ``arrays`` hold the layout's device arrays with a leading ``ndev``
+    dimension (per-device shapes padded to the max across shards; padding
+    chunks have mask == 0 and contribute nothing), in the layout's
+    ``array_names`` order -- so the generic distributed executor can squeeze
+    one device's slice and hand it to the registry's ``local_spmv`` without
+    knowing which layout it is. A reordering applied before partitioning
+    rides along exactly as on :class:`SPC5Plan`.
+    """
+
+    layout: str
+    arrays: Tuple[jax.Array, ...]
+    row_start: jax.Array            # (ndev,) global first row of each shard
+    meta: Tuple[Tuple[str, Any], ...]
+    col_perm: Optional[jax.Array] = None
+    row_iperm: Optional[jax.Array] = None
+    reorder: str = ""
+    trace_json: str = "[]"
+
+    def __getattr__(self, name):
+        return _resolve_attr(self, name)
+
+    @property
+    def ndev(self) -> int:
+        return int(self.arrays[0].shape[0])
+
+    @property
+    def trace(self) -> List[dict]:
+        return json.loads(self.trace_json)
+
+
+@dataclasses.dataclass
+class ShardState:
+    """Build context handed to a layout's ``shard_build`` hook."""
+
+    mat: F.SPC5Matrix
+    parts: List[F.SPC5Matrix]
+    pr: Optional[int] = None
+    xw: Optional[int] = None
+    cb: Optional[int] = None
+    dtype: Any = None
+
+
+def shard_plan(mat: F.SPC5Matrix, ndev: int, *, cb: Optional[int] = None,
+               mesh=None, axis: str = "data", dtype=None,
+               pr: Optional[int] = None, xw: int = 512,
+               store: Optional[S.RecordStore] = None,
+               config: Optional[S.PanelConfig] = None, tune: bool = True,
+               reorder=None) -> ShardedPlan:
+    """The shard pass: tune -> reorder -> partition -> per-layout stacking.
+
+    Mirrors :func:`make_plan` for the distributed path: the global matrix is
+    (optionally) tuned at ``workers=ndev`` and reordered, then row-
+    partitioned with the block-balanced interval algorithm, and each slab is
+    built in the resolved layout and stacked by the registry's
+    ``shard_build`` hook. ``pr=None`` keeps the flat whole-vector per-device
+    layout; a panel height (or a tuned/explicit panels config) selects the
+    row-panel-tiled one. The returned :class:`ShardedPlan` carries the
+    permutation and the pass trace; ``distributed.make_distributed_spmv``
+    consumes it without any layout branching.
+    """
+    from .partition import partition_matrix, partition_row_starts
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    trace: List[dict] = []
+    # The tune/reorder passes here intentionally differ from make_plan's:
+    # tuning runs at workers=ndev and clamps against the PER-SHARD slab (not
+    # the global matrix), and there is no whole-vector VMEM demotion because
+    # each device's local kernel only ever sees its rows_max-row slab.
+    tentry: dict = {"pass": "tune", "workers": int(ndev)}
+    if config is None and tune and pr is None and cb is None:
+        tstore = store if store is not None else S.get_default_store()
+        if tstore is not None and tstore.records:
+            config = S.tune(S.spc5_features(mat), store=tstore,
+                            kernel=f"{mat.r}x{mat.c}", workers=ndev)
+            tentry.update(source="store", layout=config.layout,
+                          pr=int(config.pr or 0), xw=int(config.xw or 0),
+                          cb=int(config.cb or 0), reorder=config.reorder)
+        else:
+            tentry["source"] = "no-store"
+    else:
+        tentry["source"] = ("explicit" if (config is not None
+                                           or pr is not None
+                                           or cb is not None)
+                            else "disabled")
+    trace.append(tentry)
+    if reorder is None and config is not None and config.reorder:
+        reorder = config.reorder
+
+    rentry: dict = {"pass": "reorder", "strategy": "", "applied": False}
+    reo = None
+    if reorder is not None:
+        reo = (reorder if isinstance(reorder, RE.Reordering)
+               else RE.reorder(mat, str(reorder), r=mat.r, c=mat.c,
+                               pr=(config.pr if config is not None
+                                   and config.layout == LAYOUT_PANELS
+                                   else pr) or 512,
+                               xw=xw, cb=cb or 64))
+        rentry.update(strategy=reo.strategy,
+                      stats=_scalar_stats(reo.stats))
+        if reo.is_identity:
+            reo = None
+        else:
+            mat = reo.permute_spc5(mat)
+            rentry["applied"] = True
+    trace.append(rentry)
+
+    layout = LAYOUT_WHOLE
+    spr, sxw, scb = pr, xw, cb
+    if config is not None:
+        # clamp against the per-shard slab, not the global matrix: each
+        # device tiles only ~nrows/ndev rows
+        rows_loc = -(-mat.nrows // max(ndev, 1))
+        clayout = (config.layout if config.layout in _REGISTRY
+                   else LAYOUT_WHOLE)
+        config = get_layout(clayout).clamp(
+            config, nrows=max(rows_loc, mat.r), ncols=mat.ncols, r=mat.r,
+            c=mat.c, nblocks=max(1, -(-mat.nblocks // max(ndev, 1))))
+        if config.layout == LAYOUT_PANELS:
+            layout = LAYOUT_PANELS
+            spr = config.pr or 512
+            sxw = config.xw or 512
+            scb = config.cb or 64
+        else:
+            scb = config.cb if cb is None else cb
+    if layout != LAYOUT_PANELS and pr is not None:
+        layout = LAYOUT_PANELS
+        spr, scb = pr, (64 if scb is None else scb)
+
+    spec = get_layout(layout)
+    parts = partition_matrix(mat, ndev)
+    row_starts = partition_row_starts(mat, ndev)
+    sstate = ShardState(mat=mat, parts=parts, pr=spr, xw=sxw, cb=scb,
+                        dtype=dtype)
+    arrays, geom = spec.shard_build(sstate)
+    trace.append({"pass": "shard", "layout": layout, "ndev": int(ndev),
+                  **{k: v for k, v in sorted(geom.items())
+                     if isinstance(v, (int, float, str, bool))}})
+    row_start = jnp.asarray(row_starts)
+    if mesh is not None:
+        put = lambda a: jax.device_put(
+            a, NamedSharding(mesh, PartitionSpec(axis)))
+        arrays = tuple(put(a) for a in arrays)
+        row_start = put(row_start)
+    col_perm = row_iperm = None
+    reorder_name = ""
+    if reo is not None:
+        col_perm = jnp.asarray(reo.col_perm.astype(np.int32))
+        row_iperm = jnp.asarray(reo.row_iperm.astype(np.int32))
+        reorder_name = reo.strategy
+    return ShardedPlan(layout=layout, arrays=arrays, row_start=row_start,
+                       meta=tuple(sorted(geom.items())), col_perm=col_perm,
+                       row_iperm=row_iperm, reorder=reorder_name,
+                       trace_json=json.dumps(trace, sort_keys=True))

@@ -187,6 +187,14 @@ def spmv_coo(rows: jax.Array, cols: jax.Array, vals: jax.Array,
     return jax.ops.segment_sum(prod, rows, num_segments=nrows)
 
 
+@functools.partial(jax.jit, static_argnames=("nrows",))
+def spmm_coo(rows: jax.Array, cols: jax.Array, vals: jax.Array,
+             x: jax.Array, *, nrows: int) -> jax.Array:
+    """Multi-vector COO tail: Y contribution for X of shape (ncols, nvec)."""
+    prod = vals[:, None] * x[cols]
+    return jax.ops.segment_sum(prod, rows, num_segments=nrows)
+
+
 @functools.partial(jax.jit, static_argnames=("pr", "nrows"))
 def spmv_coo_panels(rows: jax.Array, cols: jax.Array, vals: jax.Array,
                     x: jax.Array, *, pr: int, nrows: int) -> jax.Array:

@@ -53,13 +53,30 @@ def kernel_block(kernel: str) -> Tuple[int, int]:
     return int(r), int(c)
 
 
+def _canon_layout(name: str) -> str:
+    """Normalise a layout name to the plan registry's key set.
+
+    The registry (``repro.core.plan``) is the one source of truth for layout
+    names; this shim maps legacy spellings in old JSONL stores ("whole" ->
+    "whole_vector") and leaves the sentinels "auto" (let the layout pass
+    pick) and "" (legacy record, layout inferred from ``pr``) untouched.
+    Imported lazily so the selector stays a leaf module.
+    """
+    if name in ("", "auto"):
+        return name
+    from . import plan
+    return plan.canonical_layout(name)
+
+
 @dataclasses.dataclass(frozen=True)
 class PanelConfig:
     """A device-layout configuration for ``ops.prepare``.
 
-    ``layout`` is "whole", "panels", or "auto" (let ``prepare`` pick by VMEM
-    fit); ``pr``/``xw`` only matter for the panel-tiled layout; ``cb=None``
-    means the layout's default chunk size. ``reorder`` names the
+    ``layout`` is a plan-registry key ("whole_vector", "panels", "test") or
+    "auto" (let ``prepare`` pick by VMEM fit); legacy spellings ("whole")
+    are normalised at construction so the registry's key set stays the one
+    source of truth. ``pr``/``xw`` only matter for the panel-tiled layout;
+    ``cb=None`` means the layout's default chunk size. ``reorder`` names the
     ``repro.core.reorder`` strategy the measurement ran under ("" = no
     reordering); it is part of the configuration identity, so the tuner
     learns when reordering pays and ``ops.prepare`` applies the winning
@@ -71,6 +88,9 @@ class PanelConfig:
     xw: int = 512
     cb: Optional[int] = None
     reorder: str = ""
+
+    def __post_init__(self):
+        object.__setattr__(self, "layout", _canon_layout(self.layout))
 
 
 #: What ``tune`` returns when no record is usable -- matches the fixed
@@ -146,7 +166,7 @@ class Record:
     pr: int = 0       # row-panel height of the tiled layout; 0 == whole-vector
     xw: int = 0       # panel x-window width; 0 == n/a (whole-vector/legacy)
     cb: int = 0       # chunk size; 0 == layout default / legacy record
-    layout: str = ""  # "whole"/"panels"; "" == legacy (inferred from pr)
+    layout: str = ""  # plan-registry key; "" == legacy (inferred from pr)
     nnz_row: float = 0.0    # matrix features at measurement time (0 == legacy)
     bandwidth: float = 0.0
     fill: float = 0.0
@@ -159,9 +179,14 @@ class Record:
     bandwidth_post: float = 0.0
     nchunks: int = 0  # total panel chunks of the measured layout (DMA proxy)
 
+    def __post_init__(self):
+        # loader shim: legacy layout spellings in old stores normalise to
+        # the plan registry's key set ("" stays "", inferred in config())
+        self.layout = _canon_layout(self.layout)
+
     def config(self) -> PanelConfig:
         """Normalised layout configuration this record measured."""
-        layout = self.layout or ("panels" if self.pr else "whole")
+        layout = self.layout or ("panels" if self.pr else "whole_vector")
         return PanelConfig(layout=layout, pr=int(self.pr), xw=int(self.xw),
                            cb=int(self.cb) if self.cb else None,
                            reorder=self.reorder)

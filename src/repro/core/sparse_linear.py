@@ -49,12 +49,14 @@ def choose_block(csr: F.CSRMatrix, store: Optional[S.RecordStore] = None,
 class SparseLinear:
     """y = A x (+ b) with A stored in chunked beta(r,c).
 
-    The handle is whichever device layout ``ops.prepare`` selected:
-    whole-vector for layers whose in/out vectors fit VMEM, row-panel-tiled
-    beyond that ceiling (huge vocab projections, extreme-width MLPs).
+    The handle is an execution plan (:class:`repro.core.plan.SPC5Plan`) in
+    whichever layout the plan pipeline selected: whole-vector for layers
+    whose in/out vectors fit VMEM, row-panel-tiled beyond that ceiling
+    (huge vocab projections, extreme-width MLPs). ``handle.layout`` names
+    the registry key; ``handle.trace`` records every pipeline decision.
     """
 
-    handle: object  # ops.SPC5Handle | ops.SPC5PanelHandle | SPC5ReorderedHandle
+    handle: object  # repro.core.plan.SPC5Plan
     bias: Optional[jax.Array] = None
 
     @property

@@ -1,472 +1,96 @@
-"""jit'd public wrappers for the SPC5 Pallas kernels.
+"""Public SpMV/SpMM entry points, now thin wrappers over ``repro.core.plan``.
 
-Dispatches by backend: on TPU the Pallas kernels run natively; elsewhere they
-run in ``interpret=True`` (the kernel body executed in Python, per-op) when
-``force_pallas`` is set, and otherwise fall back to the jnp reference, which
-is numerically identical. Conversion helpers take host ``SPC5Matrix``
-objects and return device handles; :func:`prepare` picks between the two
-device layouts (whole-vector :class:`SPC5Handle` when x/y fit the VMEM
-budget, row-panel-tiled :class:`SPC5PanelHandle` beyond it) and
-:func:`spmv`/:func:`spmm` dispatch on the handle kind.
+Historically this module owned four handle classes (whole-vector, panel,
+reordered, beta_test) and the layout dispatch between them; all of that
+lives in the execution-plan architecture now (layout registry + composable
+passes + one executor -- see ``repro.core.plan`` and
+``docs/architecture.md``). The entry points below keep their exact
+signatures and semantics:
 
-**Reordering** (``prepare(reorder=...)``): the matrix is permuted by a
-``repro.core.reorder`` strategy *before* the layout is built, and the
-returned plan hides the permutation from callers -- ``spmv``/``spmm`` on a
-:class:`SPC5ReorderedHandle` gather x by ``col_perm`` and scatter y by
-``row_perm^-1`` internally, fused into the kernels' index arrays where the
-layout permits (whole-vector kernels take a ``col_map`` for the x gather;
-interval-contiguous row permutations fold the inverse row scatter into
-``chunk_row`` outright) and as explicit ``jnp.take`` gathers otherwise.
+  * :func:`prepare` / :func:`prepare_panels` / :func:`prepare_test` run the
+    plan pipeline (tune -> reorder -> layout -> build) and return an
+    :class:`~repro.core.plan.SPC5Plan` -- a pytree handle satisfying the old
+    handle APIs (``.dev``, geometry attributes, ``.multi`` /
+    ``.single_values`` for the test split, ``.strategy`` / ``.stats`` /
+    ``.rows_fused`` for reordered plans), so existing jit/checkpoint call
+    sites are untouched;
+  * :func:`spmv` / :func:`spmm` / :func:`spmv_test` route to the plan
+    executor, which dispatches through the layout registry (the only place
+    layout branching exists).
+
+The legacy class names are aliases of ``SPC5Plan``; inspect ``plan.layout``
+(a ``repro.core.plan`` registry key) or ``plan.trace`` to discriminate.
 """
 from __future__ import annotations
 
-import dataclasses
-import json
 from typing import Optional, Union
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.core import formats as F
-from repro.core import ref_spmv as R
+from repro.core import plan as P
 from repro.core import reorder as RE
 from repro.core import selector as S
-from . import spc5_spmv, spc5_spmm
 
+# Canonical layout keys (re-exported for call sites and tests).
+LAYOUT_WHOLE = P.LAYOUT_WHOLE
+LAYOUT_PANELS = P.LAYOUT_PANELS
+LAYOUT_TEST = P.LAYOUT_TEST
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+# The four pre-plan handle classes, now one: every entry point returns an
+# SPC5Plan and the executor dispatches on its registry key.
+SPC5Plan = P.SPC5Plan
+SPC5Handle = P.SPC5Plan
+SPC5PanelHandle = P.SPC5Plan
+SPC5ReorderedHandle = P.SPC5Plan
+SPC5TestHandle = P.SPC5Plan
 
-
-@dataclasses.dataclass(frozen=True)
-class SPC5Handle:
-    """Device-resident chunked beta(r,c) matrix + static meta.
-
-    Registered as a pytree (arrays = leaves, geometry = static aux) so sparse
-    weights can live inside model parameter pytrees and cross jit boundaries.
-    """
-
-    dev: R.SPC5Device
-    r: int
-    c: int
-    cb: int
-    vmax: int
-    nrows: int
-    ncols: int
-    nnz: int
-
-    @property
-    def shape(self):
-        return (self.nrows, self.ncols)
-
-    def apply(self, x: jax.Array, **kw) -> jax.Array:
-        """y = A @ x (SpMV for 1-D x, SpMM for 2-D x)."""
-        return (spmv if x.ndim == 1 else spmm)(self, x, **kw)
-
-
-def _handle_flatten(h: SPC5Handle):
-    return (tuple(h.dev),), (h.r, h.c, h.cb, h.vmax, h.nrows, h.ncols, h.nnz)
-
-
-def _handle_unflatten(aux, children):
-    return SPC5Handle(R.SPC5Device(*children[0]), *aux)
-
-
-jax.tree_util.register_pytree_node(SPC5Handle, _handle_flatten,
-                                   _handle_unflatten)
-
-
-@dataclasses.dataclass(frozen=True)
-class SPC5PanelHandle:
-    """Device-resident row-panel-tiled beta(r,c) matrix + static meta.
-
-    The 2-D-grid layout (see :class:`repro.core.formats.SPC5Panels`): VMEM
-    per grid step is bounded by ``pr + xw + vmax`` elements regardless of
-    matrix size, so this handle serves matrices far beyond the whole-vector
-    path's ``nrows + ncols`` VMEM ceiling. Registered as a pytree like
-    :class:`SPC5Handle`.
-    """
-
-    dev: R.SPC5PanelDevice
-    r: int
-    c: int
-    pr: int
-    cb: int
-    xw: int
-    vmax: int
-    npanels: int
-    nchunks: int
-    nrows: int
-    ncols: int
-    ncols_pad: int
-    nnz: int
-
-    @property
-    def shape(self):
-        return (self.nrows, self.ncols)
-
-    def apply(self, x: jax.Array, **kw) -> jax.Array:
-        """y = A @ x (SpMV for 1-D x, SpMM for 2-D x)."""
-        return (spmv if x.ndim == 1 else spmm)(self, x, **kw)
-
-
-def _panel_flatten(h: SPC5PanelHandle):
-    return (tuple(h.dev),), (h.r, h.c, h.pr, h.cb, h.xw, h.vmax, h.npanels,
-                             h.nchunks, h.nrows, h.ncols, h.ncols_pad, h.nnz)
-
-
-jax.tree_util.register_pytree_node(
-    SPC5PanelHandle, _panel_flatten,
-    lambda aux, ch: SPC5PanelHandle(R.SPC5PanelDevice(*ch[0]), *aux))
-
-
-@dataclasses.dataclass(frozen=True)
-class SPC5ReorderedHandle:
-    """A permutation-aware plan: inner device handle + the gather/scatter
-    that make the reordering invisible to callers.
-
-    ``apply``/:func:`spmv` compute ``A' @ x[col_perm]`` on the inner handle
-    (built from the permuted matrix) and return y in ORIGINAL row order:
-
-      * ``col_perm is None``: the column order is untouched;
-      * ``row_iperm is None``: the inverse row scatter is either untouched
-        or already fused into the inner handle's ``chunk_row`` (whole-vector
-        layout + interval-contiguous row permutation -- ``rows_fused``);
-      * on the whole-vector Pallas path the x gather is fused into the
-        kernel's decode via its ``col_map`` input; everywhere else it is an
-        explicit ``jnp.take``.
-
-    Registered as a pytree like the plain handles, so reordered sparse
-    weights cross jit boundaries; strategy + scalar stats ride in the
-    static aux (JSON string, hashable).
-    """
-
-    inner: object                       # SPC5Handle | SPC5PanelHandle
-    col_perm: Optional[jax.Array]       # (ncols,) int32 or None
-    row_iperm: Optional[jax.Array]      # (nrows,) int32 or None
-    rows_fused: bool = False
-    strategy: str = ""
-    stats_json: str = "{}"
-
-    @property
-    def shape(self):
-        return self.inner.shape
-
-    @property
-    def nrows(self) -> int:
-        return self.inner.nrows
-
-    @property
-    def ncols(self) -> int:
-        return self.inner.ncols
-
-    @property
-    def nnz(self) -> int:
-        return self.inner.nnz
-
-    @property
-    def stats(self) -> dict:
-        return json.loads(self.stats_json)
-
-    def apply(self, x: jax.Array, **kw) -> jax.Array:
-        """y = A @ x in ORIGINAL index order (SpMV for 1-D x, SpMM for 2-D).
-
-        The plan's entry point per the reordering contract: gathers x by
-        ``col_perm``, runs the inner handle's kernel, scatters y by
-        ``row_perm^-1`` -- all internal (see :func:`spmv`/:func:`spmm`).
-        """
-        return (spmv if x.ndim == 1 else spmm)(self, x, **kw)
-
-
-def _reordered_flatten(h: SPC5ReorderedHandle):
-    return ((h.inner, h.col_perm, h.row_iperm),), (h.rows_fused, h.strategy,
-                                                   h.stats_json)
-
-
-jax.tree_util.register_pytree_node(
-    SPC5ReorderedHandle, _reordered_flatten,
-    lambda aux, ch: SPC5ReorderedHandle(*ch[0], *aux))
-
-
-# Whole-vector path budget: x (ncols) + y (nrows) must sit in VMEM next to
-# the decode working set. ~2 MiB of f32 leaves headroom in a 16 MiB VMEM
-# for the SpMV kernels; SpMM tiles are nvec-wide, so callers that will run
-# SpMM must scale the footprint by nvec (see fits_whole_vector / prepare).
-VMEM_WHOLE_VECTOR_BUDGET = 2 * 2**20
-
-
-def fits_whole_vector(nrows: int, ncols: int, itemsize: int = 4,
-                      budget_bytes: int = VMEM_WHOLE_VECTOR_BUDGET,
-                      nvec: int = 1) -> bool:
-    """Layout selection rule: whole-vector only when x AND y fit the budget.
-
-    ``nvec`` is the widest multi-vector batch the handle will see: the
-    whole-vector SpMM kernel holds (ncols, nvt) and (nrows, nvt) tiles with
-    nvt = min(nvec, 128), so the footprint scales by that factor.
-    """
-    return (nrows + ncols) * itemsize * min(max(nvec, 1), 128) <= budget_bytes
-
-
-def _resolve_reordering(mat: F.SPC5Matrix,
-                        reorder: Union[None, str, RE.Reordering],
-                        pr: int, xw: int, cb: Optional[int], align: int
-                        ) -> Optional[RE.Reordering]:
-    """Normalise prepare's ``reorder`` argument to a Reordering (or None).
-
-    Strategy names are built (and scored, possibly declining to identity)
-    by :func:`repro.core.reorder.reorder` at this matrix's block geometry
-    and the panel geometry in effect; an explicit Reordering is validated
-    against the matrix dims and used as-is.
-    """
-    if reorder is None:
-        return None
-    if isinstance(reorder, RE.Reordering):
-        if (reorder.nrows, reorder.ncols) != mat.shape:
-            raise ValueError(
-                f"reordering is for shape {(reorder.nrows, reorder.ncols)}, "
-                f"matrix is {mat.shape}")
-        return reorder
-    return RE.reorder(mat, str(reorder), r=mat.r, c=mat.c, pr=pr, xw=xw,
-                      cb=cb if cb else 64, align=align)
+VMEM_WHOLE_VECTOR_BUDGET = P.VMEM_WHOLE_VECTOR_BUDGET
+fits_whole_vector = P.fits_whole_vector
 
 
 def prepare(mat: F.SPC5Matrix, cb: Optional[int] = None, align: int = 8,
             dtype=None, layout: str = "auto", pr: Optional[int] = None,
             xw: Optional[int] = None, nvec: int = 1,
             store: Optional[S.RecordStore] = None, tune: bool = True,
-            reorder: Union[None, str, RE.Reordering] = None):
-    """Build a device handle; returns SPC5Handle, SPC5PanelHandle, or --
-    when a reordering is applied -- an :class:`SPC5ReorderedHandle` plan
-    wrapping one of them (same ``spmv``/``spmm`` interface, permutation
-    handled internally).
+            reorder: Union[None, str, RE.Reordering] = None) -> P.SPC5Plan:
+    """Build an execution plan for ``mat`` (see ``repro.core.plan``).
 
-    ``layout``: "whole" forces the VMEM-resident whole-vector layout,
-    "panels" the row-panel-tiled one, "auto" (default) picks whole-vector
-    when x and y fit the VMEM budget (:func:`fits_whole_vector`) and panels
-    otherwise -- small problems keep the cheaper single-scatter kernels,
-    big ones get the bounded-VMEM 2-D grid. Pass ``nvec`` (widest SpMM
-    batch this handle will see) so "auto" budgets the nvt-wide SpMM tiles,
-    not just the SpMV vectors.
+    ``layout``: a registry key ("whole_vector", "panels", "test"), a legacy
+    alias ("whole"), or "auto" (default) -- auto picks whole-vector when x
+    and y fit the VMEM budget (:func:`fits_whole_vector`) and panels
+    otherwise. Pass ``nvec`` (widest SpMM batch this plan will see) so
+    "auto" budgets the nvt-wide SpMM tiles, not just the SpMV vectors.
 
     **Auto-tuning**: when nothing is requested explicitly (``layout="auto"``
     and ``pr``/``xw``/``cb`` all None) and a record store is available --
     passed as ``store``, installed via ``selector.set_default_store``, or
     named by ``$SPC5_RECORDS`` -- the configuration comes from
     ``selector.tune`` fitted on that store's measurements for this block
-    geometry, clamped against this matrix's dims
-    (``selector.clamp_config``). Any explicit argument is an escape hatch
-    that bypasses tuning entirely (``tune=False`` disables it outright);
-    with no store, the fixed defaults below apply unchanged.
+    geometry, clamped against this matrix's dims. Any explicit argument is
+    an escape hatch that bypasses tuning entirely (``tune=False`` disables
+    it outright).
 
     **Reordering**: ``reorder`` is a strategy name ("sigma", "rcm",
     "colwindow", "auto", "none"; see ``repro.core.reorder``) or a prebuilt
     ``Reordering``. Strategies are scored at the geometry in effect and may
-    decline (the plain handle comes back unchanged). When the caller passes
-    no ``reorder`` and the tuner's best record carries one
-    (``PanelConfig.reorder``), that strategy is applied -- records grow the
-    reorder field precisely so the tuner learns when reordering pays.
+    decline (the plan comes back unpermuted). When the caller passes no
+    ``reorder`` and the tuner's best record carries one, that strategy is
+    applied. Every decision lands in the returned ``plan.trace``.
 
     ``pr``/``xw`` default to 512; ``cb=None`` uses the layout's default
-    chunk size (256 whole-vector, 64 panels -- panel chunks are smaller
-    because each also pins an x window); an explicit ``cb`` is honored
-    as-is on either path.
+    chunk size (256 whole-vector, 64 panels).
     """
-    if layout not in ("auto", "whole", "panels"):
-        raise ValueError(f"unknown layout {layout!r}")
-    itemsize = np.dtype(dtype or mat.values.dtype).itemsize
-    if tune and layout == "auto" and pr is None and xw is None and cb is None:
-        tstore = store if store is not None else S.get_default_store()
-        if tstore is not None and tstore.records:
-            cfg = S.tune(S.spc5_features(mat), store=tstore,
-                         kernel=f"{mat.r}x{mat.c}")
-            cfg = S.clamp_config(cfg, nrows=mat.nrows, ncols=mat.ncols,
-                                 r=mat.r, c=mat.c, nblocks=mat.nblocks,
-                                 align=align)
-            if (cfg.layout == "whole"
-                    and not fits_whole_vector(*mat.shape, itemsize,
-                                              nvec=nvec)):
-                # a tuned whole-vector pick must never blow the VMEM budget;
-                # drop its geometry too -- a whole-layout cb (256/512) is an
-                # unmeasured, oversized panel chunk (vmax ~ cb*r*c elements)
-                cfg = S.PanelConfig(layout="panels")
-            layout = cfg.layout
-            pr = cfg.pr or None
-            xw = cfg.xw or None
-            cb = cfg.cb
-            if reorder is None and cfg.reorder:
-                reorder = cfg.reorder
-    pr = 512 if pr is None else pr
-    xw = 512 if xw is None else xw
-    reo = _resolve_reordering(mat, reorder, pr, xw, cb, align)
-    if reo is not None and not reo.is_identity:
-        mat = reo.permute_spc5(mat)
-    else:
-        reo = None                      # identity / declined: plain handle
-    if layout == "auto":
-        layout = ("whole" if fits_whole_vector(*mat.shape, itemsize,
-                                               nvec=nvec)
-                  else "panels")
-    if layout == "panels":
-        h = prepare_panels(mat, pr=pr, cb=64 if cb is None else cb, xw=xw,
-                           align=align, dtype=dtype)
-        return h if reo is None else _wrap_reordered(h, reo)
-    ch = F.to_chunked(mat, cb=256 if cb is None else cb, align=align)
-    rows_fused = False
-    if (reo is not None and not reo.identity_rows
-            and reo.rows_interval_contiguous(mat.r)):
-        # fuse the inverse row permutation into the scatter indices: each
-        # block's r permuted rows map to r consecutive ORIGINAL rows, so
-        # chunk_row can point straight at the original base row and y needs
-        # no output gather at all
-        ch = dataclasses.replace(
-            ch, chunk_row=reo.row_perm[ch.chunk_row].astype(np.int32))
-        rows_fused = True
-    h = SPC5Handle(dev=R.device_put(ch, dtype=dtype), r=ch.r, c=ch.c,
-                   cb=ch.cb, vmax=ch.vmax, nrows=ch.nrows, ncols=ch.ncols,
-                   nnz=ch.nnz)
-    return h if reo is None else _wrap_reordered(h, reo,
-                                                 rows_fused=rows_fused)
-
-
-def _wrap_reordered(h, reo: RE.Reordering,
-                    rows_fused: bool = False) -> SPC5ReorderedHandle:
-    col_perm = (None if reo.identity_cols
-                else jnp.asarray(reo.col_perm.astype(np.int32)))
-    row_iperm = (None if (rows_fused or reo.identity_rows)
-                 else jnp.asarray(reo.row_iperm.astype(np.int32)))
-    stats = {k: v for k, v in reo.stats.items()
-             if isinstance(v, (int, float, str, bool))}
-    return SPC5ReorderedHandle(inner=h, col_perm=col_perm,
-                               row_iperm=row_iperm, rows_fused=rows_fused,
-                               strategy=reo.strategy,
-                               stats_json=json.dumps(stats, sort_keys=True))
+    return P.make_plan(mat, layout=layout, pr=pr, xw=xw, cb=cb, nvec=nvec,
+                       align=align, dtype=dtype, store=store, tune=tune,
+                       reorder=reorder)
 
 
 def prepare_panels(mat: F.SPC5Matrix, pr: int = 512, cb: int = 64,
-                   xw: int = 512, align: int = 8,
-                   dtype=None) -> SPC5PanelHandle:
-    pan = F.to_panels(mat, pr=pr, cb=cb, xw=xw, align=align)
-    return SPC5PanelHandle(
-        dev=R.device_put_panels(pan, dtype=dtype), r=pan.r, c=pan.c,
-        pr=pan.pr, cb=pan.cb, xw=pan.xw, vmax=pan.vmax, npanels=pan.npanels,
-        nchunks=pan.nchunks, nrows=pan.nrows, ncols=pan.ncols,
-        ncols_pad=pan.ncols_pad, nnz=pan.nnz)
-
-
-def spmv(h, x: jax.Array, *, use_pallas: Optional[bool] = None,
-         double_buffer: bool = True, interpret: Optional[bool] = None
-         ) -> jax.Array:
-    """y = A @ x. Accepts SPC5Handle (whole-vector), SPC5PanelHandle, or a
-    reordered plan (SPC5ReorderedHandle) -- x and y are always in ORIGINAL
-    index order; permutation gathers happen internally."""
-    if use_pallas is None:
-        use_pallas = _on_tpu()
-    if interpret is None:
-        interpret = not _on_tpu()
-    if isinstance(h, SPC5ReorderedHandle):
-        inner = h.inner
-        if (h.col_perm is not None and use_pallas
-                and isinstance(inner, SPC5Handle)):
-            # fused x gather: the whole-vector kernels route their decode
-            # through col_map, so x never materialises in permuted order
-            fn = (spc5_spmv.spmv_pallas_db if double_buffer
-                  else spc5_spmv.spmv_pallas)
-            y = fn(inner.dev.chunk_vbase, inner.dev.chunk_col,
-                   inner.dev.chunk_mask, inner.dev.chunk_voff,
-                   inner.dev.chunk_row, inner.dev.values, x, h.col_perm,
-                   r=inner.r, c=inner.c, cb=inner.cb, vmax=inner.vmax,
-                   nrows=inner.nrows, ncols=inner.ncols, interpret=interpret)
-        else:
-            xg = x if h.col_perm is None else jnp.take(x, h.col_perm, axis=0)
-            y = spmv(inner, xg, use_pallas=use_pallas,
-                     double_buffer=double_buffer, interpret=interpret)
-        if h.row_iperm is not None:
-            y = jnp.take(y, h.row_iperm, axis=0)
-        return y
-    if isinstance(h, SPC5PanelHandle):
-        if not use_pallas:
-            return R.spmv_panels(h.dev, x, r=h.r, c=h.c, pr=h.pr,
-                                 nrows=h.nrows, ncols_pad=h.ncols_pad)
-        fn = (spc5_spmv.spmv_pallas_panels_db if double_buffer
-              else spc5_spmv.spmv_pallas_panels)
-        return fn(h.dev.chunk_vbase, h.dev.chunk_xbase, h.dev.chunk_col,
-                  h.dev.chunk_mask, h.dev.chunk_voff, h.dev.chunk_row,
-                  h.dev.values, x, r=h.r, c=h.c, cb=h.cb, vmax=h.vmax,
-                  xw=h.xw, pr=h.pr, nrows=h.nrows, ncols_pad=h.ncols_pad,
-                  interpret=interpret)
-    if not use_pallas:
-        return R.spmv(h.dev, x, r=h.r, c=h.c, nrows=h.nrows, ncols=h.ncols)
-    fn = spc5_spmv.spmv_pallas_db if double_buffer else spc5_spmv.spmv_pallas
-    return fn(h.dev.chunk_vbase, h.dev.chunk_col, h.dev.chunk_mask,
-              h.dev.chunk_voff, h.dev.chunk_row, h.dev.values, x,
-              r=h.r, c=h.c, cb=h.cb, vmax=h.vmax, nrows=h.nrows,
-              ncols=h.ncols, interpret=interpret)
-
-
-@dataclasses.dataclass(frozen=True)
-class SPC5TestHandle:
-    """beta(r,c)_test: multi-nnz blocks via the block kernel + singleton
-    blocks via a COO tail (the paper's dual-loop specialisation as a storage
-    split -- DESIGN.md §2).
-
-    When the multi handle is row-panel-tiled, the tail is panel-segmented
-    too: ``single_*`` are (npanels, smax) buckets with PANEL-LOCAL rows
-    (padding entries have value 0), consumed by ``ref_spmv.spmv_coo_panels``
-    -- each panel's singletons form one fixed-shape segment producing a
-    (pr,) y slab, so the test variant's working set stays bounded past the
-    whole-vector VMEM ceiling exactly like the block kernel's
-    (``tail_pr`` > 0 marks this shape; 0 is the flat whole-vector tail).
-
-    ``col_perm``/``row_iperm`` carry an applied reordering (see
-    ``prepare_test(reorder=...)``): both the block part and the tail
-    operate in permuted index space, x is gathered once on the way in and
-    y scattered back once on the way out.
-    """
-
-    multi: object  # SPC5Handle | SPC5PanelHandle (auto layout in prepare)
-    single_rows: jax.Array
-    single_cols: jax.Array
-    single_values: jax.Array
-    tail_pr: int = 0
-    col_perm: Optional[jax.Array] = None
-    row_iperm: Optional[jax.Array] = None
-
-
-def _test_flatten(h: SPC5TestHandle):
-    return ((h.multi, h.single_rows, h.single_cols, h.single_values,
-             h.col_perm, h.row_iperm),), (h.tail_pr,)
-
-
-jax.tree_util.register_pytree_node(
-    SPC5TestHandle, _test_flatten,
-    lambda aux, ch: SPC5TestHandle(ch[0][0], ch[0][1], ch[0][2], ch[0][3],
-                                   aux[0], ch[0][4], ch[0][5]))
-
-
-def _bucket_tail_by_panel(rows: np.ndarray, cols: np.ndarray,
-                          vals: np.ndarray, pr: int, npanels: int):
-    """Sort the singleton COO tail into per-panel buckets padded to the max
-    per-panel count (mask-free analogue of the panel layout's uniform chunk
-    padding). Entries are (panel, col)-sorted so a future Pallas tail
-    kernel can window x per panel like the block kernels do. Callers must
-    not pass an empty tail (the flat zero-length arrays already encode
-    'no singletons' without per-call cost)."""
-    n = rows.shape[0]
-    panel = rows.astype(np.int64) // pr
-    order = np.lexsort((cols, rows, panel))
-    counts = np.bincount(panel, minlength=npanels).astype(np.int64)
-    smax = int(counts.max())
-    brows = np.zeros((npanels, smax), dtype=np.int32)
-    bcols = np.zeros((npanels, smax), dtype=np.int32)
-    bvals = np.zeros((npanels, smax), dtype=vals.dtype)
-    cum = np.concatenate([[0], np.cumsum(counts)[:-1]])
-    slot = np.arange(n, dtype=np.int64) - np.repeat(cum, counts)
-    p_sorted = panel[order]
-    brows[p_sorted, slot] = (rows[order].astype(np.int64) % pr).astype(np.int32)
-    bcols[p_sorted, slot] = cols[order]
-    bvals[p_sorted, slot] = vals[order]
-    return brows, bcols, bvals
+                   xw: int = 512, align: int = 8, dtype=None) -> P.SPC5Plan:
+    """Row-panel-tiled plan with explicit geometry (no tuning)."""
+    return P.make_plan(mat, layout=P.LAYOUT_PANELS, pr=pr, cb=cb, xw=xw,
+                       align=align, dtype=dtype, tune=False)
 
 
 def prepare_test(mat: F.SPC5Matrix, cb: Optional[int] = None, align: int = 8,
@@ -474,111 +98,38 @@ def prepare_test(mat: F.SPC5Matrix, cb: Optional[int] = None, align: int = 8,
                  xw: Optional[int] = None, nvec: int = 1,
                  store: Optional[S.RecordStore] = None, tune: bool = True,
                  reorder: Union[None, str, RE.Reordering] = None
-                 ) -> SPC5TestHandle:
-    """Build the beta(r,c)_test split handle (see SPC5TestHandle).
+                 ) -> P.SPC5Plan:
+    """Build the beta(r,c)_test split plan: multi-nnz blocks in the block
+    layout + the singleton COO tail (panel-bucketed, with a Pallas tail
+    kernel, when the multi part resolves to panels).
 
-    ``layout``/``pr``/``xw``/``store``/``tune`` pass through to
-    :func:`prepare` for the multi-block part; when that resolves to the
-    panel layout, the COO tail is bucketed per row panel as well.
-    ``reorder`` permutes the WHOLE matrix (blocks and singletons see the
-    same permutation) before the split, so both parts stay consistent.
+    ``layout``/``pr``/``xw``/``store``/``tune`` configure the multi-block
+    sub-plan; ``reorder`` permutes the WHOLE matrix (blocks and singletons
+    see the same permutation) before the split.
     """
-    reo = _resolve_reordering(mat, reorder, pr or 512, xw or 512, cb, align)
-    if reo is not None and not reo.is_identity:
-        mat = reo.permute_spc5(mat)
-    else:
-        reo = None
-    split = F.split_singletons(mat)
-    dt = dtype or mat.values.dtype
-    multi = prepare(split.multi, cb=cb, align=align, dtype=dtype,
-                    layout=layout, pr=pr, xw=xw, nvec=nvec, store=store,
-                    tune=tune)
-    if isinstance(multi, SPC5PanelHandle) and split.single_values.shape[0]:
-        brows, bcols, bvals = _bucket_tail_by_panel(
-            split.single_rows, split.single_cols,
-            split.single_values.astype(dt), multi.pr, multi.npanels)
-        srows, scols, svals = (jnp.asarray(brows), jnp.asarray(bcols),
-                               jnp.asarray(bvals))
-        tail_pr = multi.pr
-    else:       # flat tail; zero-length == no singletons, skipped per call
-        srows = jnp.asarray(split.single_rows)
-        scols = jnp.asarray(split.single_cols)
-        svals = jnp.asarray(split.single_values.astype(dt))
-        tail_pr = 0
-    col_perm = row_iperm = None
-    if reo is not None:
-        col_perm = (None if reo.identity_cols
-                    else jnp.asarray(reo.col_perm.astype(np.int32)))
-        row_iperm = (None if reo.identity_rows
-                     else jnp.asarray(reo.row_iperm.astype(np.int32)))
-    return SPC5TestHandle(multi=multi, single_rows=srows, single_cols=scols,
-                          single_values=svals, tail_pr=tail_pr,
-                          col_perm=col_perm, row_iperm=row_iperm)
+    return P.make_plan(mat, layout=P.LAYOUT_TEST, multi_layout=layout,
+                       pr=pr, xw=xw, cb=cb, nvec=nvec, align=align,
+                       dtype=dtype, store=store, tune=tune, reorder=reorder)
 
 
-def spmv_test(h: SPC5TestHandle, x: jax.Array, **kw) -> jax.Array:
-    """y = A @ x over the beta_test split (original index order in and out)."""
-    xg = x if h.col_perm is None else jnp.take(x, h.col_perm, axis=0)
-    y = spmv(h.multi, xg, **kw)
-    if h.single_values.size:
-        if h.tail_pr:
-            y = y + R.spmv_coo_panels(h.single_rows, h.single_cols,
-                                      h.single_values, xg, pr=h.tail_pr,
-                                      nrows=h.multi.nrows)
-        else:
-            y = y + R.spmv_coo(h.single_rows, h.single_cols, h.single_values,
-                               xg, nrows=h.multi.nrows)
-    if h.row_iperm is not None:
-        y = jnp.take(y, h.row_iperm, axis=0)
-    return y
+def spmv(h: P.SPC5Plan, x: jax.Array, *, use_pallas: Optional[bool] = None,
+         double_buffer: bool = True, interpret: Optional[bool] = None
+         ) -> jax.Array:
+    """y = A @ x for any plan layout -- x and y are always in ORIGINAL index
+    order; permutation gathers happen inside the executor/lowering."""
+    return P.execute_spmv(h, x, use_pallas=use_pallas,
+                          double_buffer=double_buffer, interpret=interpret)
 
 
-def spmm(h, x: jax.Array, *, use_pallas: Optional[bool] = None,
+def spmm(h: P.SPC5Plan, x: jax.Array, *, use_pallas: Optional[bool] = None,
          nvt: int = 128, double_buffer: bool = True,
          interpret: Optional[bool] = None) -> jax.Array:
-    """Y = A @ X, X of shape (ncols, nvec). Accepts either handle kind.
+    """Y = A @ X, X of shape (ncols, nvec), for any plan layout."""
+    return P.execute_spmm(h, x, use_pallas=use_pallas, nvt=nvt,
+                          double_buffer=double_buffer, interpret=interpret)
 
-    ``double_buffer`` (panel layout only) overlaps the next grid step's
-    value/x-slab DMAs with the current decode, mirroring the SpMV kernels.
-    """
-    if use_pallas is None:
-        use_pallas = _on_tpu()
-    if interpret is None:
-        interpret = not _on_tpu()
-    if isinstance(h, SPC5ReorderedHandle):
-        inner = h.inner
-        if (h.col_perm is not None and use_pallas
-                and isinstance(inner, SPC5Handle)):
-            y = spc5_spmm.spmm_pallas(
-                inner.dev.chunk_vbase, inner.dev.chunk_col,
-                inner.dev.chunk_mask, inner.dev.chunk_voff,
-                inner.dev.chunk_row, inner.dev.values, x, h.col_perm,
-                r=inner.r, c=inner.c, cb=inner.cb, vmax=inner.vmax,
-                nrows=inner.nrows, ncols=inner.ncols,
-                nvt=min(nvt, x.shape[1]), interpret=interpret)
-        else:
-            xg = x if h.col_perm is None else jnp.take(x, h.col_perm, axis=0)
-            y = spmm(inner, xg, use_pallas=use_pallas, nvt=nvt,
-                     double_buffer=double_buffer, interpret=interpret)
-        if h.row_iperm is not None:
-            y = jnp.take(y, h.row_iperm, axis=0)
-        return y
-    if isinstance(h, SPC5PanelHandle):
-        if not use_pallas:
-            return R.spmm_panels(h.dev, x, r=h.r, c=h.c, pr=h.pr,
-                                 nrows=h.nrows, ncols_pad=h.ncols_pad)
-        fn = (spc5_spmm.spmm_pallas_panels_db if double_buffer
-              else spc5_spmm.spmm_pallas_panels)
-        return fn(
-            h.dev.chunk_vbase, h.dev.chunk_xbase, h.dev.chunk_col,
-            h.dev.chunk_mask, h.dev.chunk_voff, h.dev.chunk_row,
-            h.dev.values, x, r=h.r, c=h.c, cb=h.cb, vmax=h.vmax, xw=h.xw,
-            pr=h.pr, nrows=h.nrows, ncols_pad=h.ncols_pad,
-            nvt=min(nvt, x.shape[1]), interpret=interpret)
-    if not use_pallas:
-        return R.spmm(h.dev, x, r=h.r, c=h.c, nrows=h.nrows, ncols=h.ncols)
-    return spc5_spmm.spmm_pallas(
-        h.dev.chunk_vbase, h.dev.chunk_col, h.dev.chunk_mask,
-        h.dev.chunk_voff, h.dev.chunk_row, h.dev.values, x,
-        r=h.r, c=h.c, cb=h.cb, vmax=h.vmax, nrows=h.nrows, ncols=h.ncols,
-        nvt=min(nvt, x.shape[1]), interpret=interpret)
+
+def spmv_test(h: P.SPC5Plan, x: jax.Array, **kw) -> jax.Array:
+    """y = A @ x over the beta_test split (same executor as :func:`spmv`;
+    kept as a named entry point for API compatibility)."""
+    return P.execute_spmv(h, x, **kw)

@@ -315,6 +315,67 @@ def spmv_pallas_panels_db(chunk_vbase, chunk_xbase, chunk_col, chunk_mask,
     return y[:nrows]
 
 
+def _spmv_tail_kernel(xbase_ref, rows_ref, cols_ref, vals_ref, x_hbm, y_ref,
+                      xwin, sem, *, pr: int, xw: int):
+    """One grid row per panel bucket of the beta(r,c)_test singleton tail.
+
+    The panel's x window is DMA'd exactly like the block kernels' chunk
+    windows (``xbase_ref`` is scalar-prefetched, one aligned ``xw``-wide
+    slab per panel); rows are PANEL-LOCAL so the scatter target is the
+    panel's own (pr,) y tile. Padding entries (vals == 0) land on local row
+    0 / window column 0 and contribute nothing.
+    """
+    p = pl.program_id(0)
+    copy = pltpu.make_async_copy(x_hbm.at[pl.ds(xbase_ref[p], xw)], xwin, sem)
+    copy.start()
+    copy.wait()
+    vals = vals_ref[0]
+    rel = jnp.clip(cols_ref[0] - xbase_ref[p], 0, xw - 1)
+    prod = vals * jnp.take(xwin[...], rel, axis=0)
+    rows = jnp.clip(rows_ref[0], 0, pr - 1)
+    y = jnp.zeros((pr,), dtype=vals.dtype)
+    y_ref[...] = y.at[rows].add(prod)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("pr", "xw", "nrows", "ncols_pad", "interpret"))
+def spmv_tail_pallas(tail_xbase, rows, cols, vals, x, *, pr: int, xw: int,
+                     nrows: int, ncols_pad: int,
+                     interpret: bool = False) -> jax.Array:
+    """Panel-segmented COO tail of the beta(r,c)_test split as a Pallas
+    kernel: grid ``(npanels,)``, one (pr,) output tile per panel bucket,
+    x windowed per panel (``rows``/``cols``/``vals`` are the (npanels, smax)
+    buckets; ``tail_xbase`` the per-panel window starts; numerics match
+    ``ref_spmv.spmv_coo_panels``, the oracle)."""
+    npanels, smax = rows.shape
+    xp = jnp.pad(x, (0, max(0, ncols_pad - x.shape[0])))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                  # tail_xbase
+        grid=(npanels,),
+        in_specs=[
+            pl.BlockSpec((1, smax), lambda p, xb: (p, 0)),   # rows
+            pl.BlockSpec((1, smax), lambda p, xb: (p, 0)),   # cols
+            pl.BlockSpec((1, smax), lambda p, xb: (p, 0)),   # vals
+            pl.BlockSpec(memory_space=pl.ANY),  # x (HBM, windowed DMA)
+        ],
+        out_specs=pl.BlockSpec((pr,), lambda p, xb: (p,)),
+        scratch_shapes=[
+            pltpu.VMEM((xw,), x.dtype),
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    y = pl.pallas_call(
+        functools.partial(_spmv_tail_kernel, pr=pr, xw=xw),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((npanels * pr,), vals.dtype),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",)),
+    )(tail_xbase.astype(jnp.int32), rows, cols, vals, xp)
+    return y[:nrows]
+
+
 def _spmv_db_kernel(vbase_ref, col_ref, mask_ref, voff_ref, row_ref,
                     values_hbm, x_ref, *rest, r: int, c: int,
                     cb: int, vmax: int, nrows: int, ncols: int, nchunks: int,

@@ -110,21 +110,21 @@ def main(argv=None):
             y = lin(x)
         y.block_until_ready()
         us = (time.perf_counter() - t0) / iters * 1e6
-        reo_str = ""
-        hh = h
-        if hasattr(h, "inner"):               # SPC5ReorderedHandle plan
-            hh = h.inner
+        # the plan is self-describing: layout key + geometry from its static
+        # meta, reordering from its pass trace -- no layout branching here
+        if h.is_reordered:
             reo_str = (f", reorder={h.strategy}"
                        f"[fused_rows={int(h.rows_fused)}]")
         elif args.reorder:
             reo_str = f", reorder={args.reorder}[declined]"
-        layout = type(hh).__name__
-        cfg_str = (f"pr={hh.pr},xw={hh.xw},cb={hh.cb}"
-                   if hasattr(hh, "pr") else f"cb={hh.cb}")
+        else:
+            reo_str = ""
+        cfg_str = ",".join(f"{k}={v}" for k, v in h.meta
+                           if k in ("pr", "xw", "cb"))
         src = ("explicit --panel" if args.panel
                else ("tuned" if args.records else "defaults"))
         print(f"vocab_spmv[{cfg.vocab}x{cfg.d_model}@{args.vocab_spmv}]: "
-              f"{us:.1f} us/call ({layout}, {cfg_str}, config={src}"
+              f"{us:.1f} us/call ({h.layout}, {cfg_str}, config={src}"
               f"{reo_str})")
 
 

@@ -91,13 +91,11 @@ def test_spmv_f64_x64_mode():
 
 
 def test_spmv_bf16():
+    import dataclasses
     d, h = make_handle(40, 40, 0.3, (1, 8), seed=4)
-    hb = ops.SPC5Handle(
-        dev=ref.SPC5Device(*(a.astype(jnp.bfloat16)
-                             if a.dtype == jnp.float32 else a
-                             for a in h.dev)),
-        r=h.r, c=h.c, cb=h.cb, vmax=h.vmax, nrows=h.nrows, ncols=h.ncols,
-        nnz=h.nnz)
+    hb = dataclasses.replace(
+        h, arrays=tuple(a.astype(jnp.bfloat16) if a.dtype == jnp.float32
+                        else a for a in h.arrays))
     x = jnp.asarray(np.random.default_rng(5).standard_normal(40),
                     dtype=jnp.bfloat16)
     y = ops.spmv(hb, x, use_pallas=True, interpret=True)

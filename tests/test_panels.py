@@ -92,15 +92,15 @@ def test_panel_layout_invariants():
 def test_prepare_auto_layout_selection():
     small = F.csr_to_spc5(F.csr_from_dense(rand_dense(48, 40, 0.3, 1)), 2, 4)
     h = ops.prepare(small)
-    assert isinstance(h, ops.SPC5Handle)
+    assert h.layout == ops.LAYOUT_WHOLE
     # force a tiny budget so a modest matrix exceeds the whole-vector ceiling
     assert not ops.fits_whole_vector(10**6, 10**6)
     big = F.csr_to_spc5(F.csr_from_dense(rand_dense(300, 280, 0.05, 2)), 2, 4)
     hp = ops.prepare(big, layout="panels", pr=32, xw=64)
-    assert isinstance(hp, ops.SPC5PanelHandle)
+    assert hp.layout == ops.LAYOUT_PANELS
     x = np.random.default_rng(3).standard_normal(280).astype(np.float32)
-    y_whole = ops.spmv(ops.prepare(big, layout="whole"), jnp.asarray(x),
-                       use_pallas=False)
+    y_whole = ops.spmv(ops.prepare(big, layout="whole_vector"),
+                       jnp.asarray(x), use_pallas=False)
     y_pan = ops.spmv(hp, jnp.asarray(x), use_pallas=False)
     np.testing.assert_allclose(np.asarray(y_pan), np.asarray(y_whole),
                                atol=1e-5)
@@ -122,7 +122,7 @@ def test_sparse_linear_panel_layout():
     w = rng.standard_normal((160, 144)).astype(np.float32)
     sl = SparseLinear.from_dense(w, density=0.2, layout="panels", pr=16,
                                  xw=32)
-    assert isinstance(sl.handle, ops.SPC5PanelHandle)
+    assert sl.handle.layout == ops.LAYOUT_PANELS
     wp = prune_by_magnitude(w, 0.2)
     x = rng.standard_normal((3, 144)).astype(np.float32)
     np.testing.assert_allclose(np.asarray(sl(jnp.asarray(x))), x @ wp.T,
@@ -160,7 +160,7 @@ def test_property_panels_match_whole(n, m, density, rc, pr, xw, seed):
     d = rand_dense(n, m, density, seed=seed)
     mat = F.csr_to_spc5(F.csr_from_dense(d), *rc)
     hp = ops.prepare_panels(mat, pr=pr, cb=8, xw=xw)
-    hw = ops.prepare(mat, layout="whole")
+    hw = ops.prepare(mat, layout="whole_vector")
     x = np.random.default_rng(seed + 1).standard_normal(m).astype(np.float32)
     y_pan = np.asarray(ops.spmv(hp, jnp.asarray(x), use_pallas=False))
     y_whole = np.asarray(ops.spmv(hw, jnp.asarray(x), use_pallas=False))

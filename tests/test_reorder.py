@@ -179,8 +179,9 @@ def test_fused_pallas_paths_match_oracle():
     x = np.random.default_rng(3).standard_normal(160).astype(np.float32)
     tgt = d.astype(np.float64) @ x.astype(np.float64)
     mat = F.csr_to_spc5(csr, 2, 4)
-    h = ops.prepare(mat, layout="whole", dtype=np.float32, reorder="rcm")
-    assert isinstance(h, ops.SPC5ReorderedHandle)
+    h = ops.prepare(mat, layout="whole_vector", dtype=np.float32,
+                    reorder="rcm")
+    assert h.is_reordered
     assert h.rows_fused and h.row_iperm is None     # scatter fused away
     assert h.col_perm is not None
     for db in (False, True):
@@ -194,7 +195,7 @@ def test_fused_pallas_paths_match_oracle():
     # panel layout: explicit gathers (pallas panel kernels untouched)
     hp = ops.prepare(mat, layout="panels", dtype=np.float32, reorder="rcm",
                      **GEOM)
-    if isinstance(hp, ops.SPC5ReorderedHandle):
+    if hp.is_reordered:
         yp = np.asarray(ops.spmv(hp, jnp.asarray(x), use_pallas=True,
                                  interpret=True))
         np.testing.assert_allclose(yp, tgt, atol=2e-3)
@@ -202,8 +203,9 @@ def test_fused_pallas_paths_match_oracle():
 
 def test_reordered_handle_pytree_and_stats():
     mat = F.csr_to_spc5(scrambled(96, band=4, seed=7), 1, 8)
-    h = ops.prepare(mat, layout="whole", dtype=np.float32, reorder="rcm")
-    assert isinstance(h, ops.SPC5ReorderedHandle)
+    h = ops.prepare(mat, layout="whole_vector", dtype=np.float32,
+                    reorder="rcm")
+    assert h.is_reordered
     assert h.shape == (96, 96) and h.nnz == mat.nnz
     assert h.stats["applied"] == 1.0
     flat, tdef = jax.tree.flatten(h)
@@ -215,9 +217,12 @@ def test_reordered_handle_pytree_and_stats():
 
 def test_prepare_reorder_none_and_declined_stay_plain():
     mat = F.csr_to_spc5(matgen.banded(128, 4, 1.0, seed=1), 1, 8)
-    assert isinstance(ops.prepare(mat, layout="whole"), ops.SPC5Handle)
-    h = ops.prepare(mat, layout="whole", reorder="none")
-    assert isinstance(h, ops.SPC5Handle)        # explicit no-op
+    h0 = ops.prepare(mat, layout="whole_vector")
+    assert h0.layout == ops.LAYOUT_WHOLE and not h0.is_reordered
+    h = ops.prepare(mat, layout="whole_vector", reorder="none")
+    assert not h.is_reordered                   # explicit no-op
+    # legacy layout spelling still accepted by the wrapper
+    assert ops.prepare(mat, layout="whole").layout == ops.LAYOUT_WHOLE
     with pytest.raises(ValueError):             # shape-mismatched Reordering
         ops.prepare(mat, reorder=RE.identity((4, 4)))
 
@@ -295,7 +300,7 @@ def test_records_carry_reorder_fields(tmp_path):
     csr = scrambled(96, band=4, seed=17)
     mat = F.csr_to_spc5(csr, 1, 8)
     h = ops.prepare(mat, dtype=np.float32, store=back)
-    assert isinstance(h, ops.SPC5ReorderedHandle)
+    assert h.is_reordered
     assert h.strategy == "rcm"
     x = np.random.default_rng(7).standard_normal(96).astype(np.float32)
     y = np.asarray(ops.spmv(h, jnp.asarray(x), use_pallas=False))

@@ -45,7 +45,7 @@ def planted_store(best: S.PanelConfig, worse: S.PanelConfig,
 
 
 BEST = S.PanelConfig(layout="panels", pr=16, xw=32, cb=8)
-WORSE = S.PanelConfig(layout="whole", pr=0, xw=0, cb=256)
+WORSE = S.PanelConfig(layout="whole_vector", pr=0, xw=0, cb=256)
 
 
 def test_jsonl_roundtrip_full_schema(tmp_path):
@@ -67,6 +67,13 @@ def test_jsonl_roundtrip_full_schema(tmp_path):
     st3 = S.RecordStore(lp)
     assert st3.records[0].layout == "" and st3.records[0].xw == 0
     assert st3.records[0].config() == S.PanelConfig("panels", 512, 0, None)
+    # legacy layout spellings normalise to the plan registry's key set
+    legacy2 = S.RecordStore()
+    legacy2.add("1x8", 3.0, 1, 2.0, cb=512, layout="whole")
+    l2 = str(tmp_path / "legacy2.json")
+    legacy2.save(l2)
+    assert S.RecordStore(l2).records[0].layout == "whole_vector"
+    assert S.PanelConfig("whole").layout == "whole_vector"
 
 
 def test_load_records_merges_and_dedups(tmp_path):
@@ -131,8 +138,10 @@ def test_tuned_whole_pick_demoted_with_default_geometry():
         st.add_measurement("1x8", f, S.PanelConfig("whole", 0, 0, 512), 1, 9.0)
     big = F.csr_to_spc5(matgen.banded(300_000, 4, 1.0, seed=9), 1, 8)
     h = ops.prepare(big, dtype=np.float32, store=st)
-    assert isinstance(h, ops.SPC5PanelHandle)
+    assert h.layout == ops.LAYOUT_PANELS
     assert (h.pr, h.xw, h.cb) == (512, 512, 64)
+    tune_entry = [e for e in h.trace if e["pass"] == "tune"][0]
+    assert tune_entry["source"] == "store" and tune_entry["demoted"]
 
 
 def test_tune_empty_store_falls_back_to_defaults():
@@ -149,22 +158,24 @@ def test_prepare_consults_tune_and_honours_overrides():
     st = planted_store(BEST, WORSE)
     # no store: the pre-tuning default (auto -> whole for a small matrix)
     h0 = ops.prepare(mat, dtype=np.float32)
-    assert isinstance(h0, ops.SPC5Handle)
+    assert h0.layout == ops.LAYOUT_WHOLE
     # store passed explicitly: tuned panel config wins
     h1 = ops.prepare(mat, dtype=np.float32, store=st)
-    assert isinstance(h1, ops.SPC5PanelHandle)
+    assert h1.layout == ops.LAYOUT_PANELS
     assert (h1.pr, h1.xw, h1.cb) == (16, 32, 8)
     # process-default store: same result with no store argument
     S.set_default_store(st)
     h2 = ops.prepare(mat, dtype=np.float32)
-    assert isinstance(h2, ops.SPC5PanelHandle) and h2.pr == 16
+    assert h2.layout == ops.LAYOUT_PANELS and h2.pr == 16
     # explicit arguments are the escape hatch over the tuner
-    assert isinstance(ops.prepare(mat, dtype=np.float32, layout="whole"),
-                      ops.SPC5Handle)
+    hw = ops.prepare(mat, dtype=np.float32, layout="whole_vector")
+    assert hw.layout == ops.LAYOUT_WHOLE
+    assert [e for e in hw.trace if e["pass"] == "tune"][0]["source"] \
+        == "explicit"
     assert ops.prepare(mat, dtype=np.float32, layout="panels",
                        pr=48, xw=64).pr == 48
-    assert isinstance(ops.prepare(mat, dtype=np.float32, tune=False),
-                      ops.SPC5Handle)
+    assert ops.prepare(mat, dtype=np.float32,
+                       tune=False).layout == ops.LAYOUT_WHOLE
     # tuned handle computes the right answer
     x = np.random.default_rng(0).standard_normal(400).astype(np.float32)
     y = np.asarray(ops.spmv(h1, jnp.asarray(x), use_pallas=False))
@@ -179,8 +190,7 @@ def test_env_var_names_default_store(tmp_path, monkeypatch):
     got = S.get_default_store()
     assert got is not None and len(got.records) == len(st.records)
     mat = F.csr_to_spc5(matgen.banded(400, 5, 1.0, seed=1), 2, 8)
-    assert isinstance(ops.prepare(mat, dtype=np.float32),
-                      ops.SPC5PanelHandle)
+    assert ops.prepare(mat, dtype=np.float32).layout == ops.LAYOUT_PANELS
 
 
 def test_tuned_config_clamped_to_tiny_matrix():
@@ -192,7 +202,7 @@ def test_tuned_config_clamped_to_tiny_matrix():
     tiny_csr = matgen.banded(8, 2, 1.0, seed=2)
     tiny = F.csr_to_spc5(tiny_csr, 2, 8)
     h = ops.prepare(tiny, dtype=np.float32, store=st)
-    assert isinstance(h, ops.SPC5PanelHandle)
+    assert h.layout == ops.LAYOUT_PANELS
     assert h.pr <= -(-tiny.nrows // tiny.r) * tiny.r
     assert h.xw <= 2 * 8 + 8               # ncols rounded up + one align
     assert 1 <= h.cb <= max(1, tiny.nblocks)
@@ -211,14 +221,15 @@ def test_shard_matrix_tuned_and_explicit_config():
     st = planted_store(best, WORSE, kernel="1x8")
     # tuned: panel shards with the per-shard-clamped config
     sh = D.shard_matrix(mat, 2, store=st)
-    assert isinstance(sh, D.ShardedSPC5Panels)
+    assert sh.layout == ops.LAYOUT_PANELS
     assert sh.pr == 64
     # explicit config is the escape hatch
-    sh2 = D.shard_matrix(mat, 2, config=S.PanelConfig("whole", 0, 0, 128))
-    assert isinstance(sh2, D.ShardedSPC5) and sh2.cb == 128
+    sh2 = D.shard_matrix(mat, 2,
+                         config=S.PanelConfig("whole_vector", 0, 0, 128))
+    assert sh2.layout == ops.LAYOUT_WHOLE and sh2.cb == 128
     # no store, no config: the flat default layout, as before
-    assert isinstance(D.shard_matrix(mat, 2, tune=False), D.ShardedSPC5)
-    assert isinstance(D.shard_matrix(mat, 2), D.ShardedSPC5)
+    assert D.shard_matrix(mat, 2, tune=False).layout == ops.LAYOUT_WHOLE
+    assert D.shard_matrix(mat, 2).layout == ops.LAYOUT_WHOLE
 
 
 def test_sweep_records_deterministic():
