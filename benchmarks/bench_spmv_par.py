@@ -38,12 +38,17 @@ for name in names:
         sh = D.shard_matrix(mat, 8, cb=512 if pr is None else None,
                             mesh=mesh, pr=pr)
         run = D.make_distributed_spmv(sh, mesh)
+        # warmup-discard + median-of-repeats (benchmarks.timing.time_fn's
+        # scheme, inlined: this code runs in a bare subprocess)
         run(x).block_until_ready()
-        t0 = time.perf_counter()
-        for _ in range(8):
-            y = run(x)
-        y.block_until_ready()
-        t = (time.perf_counter() - t0) / 8
+        samples = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            for _ in range(4):
+                y = run(x)
+            y.block_until_ready()
+            samples.append((time.perf_counter() - t0) / 4)
+        t = sorted(samples)[1]
         gf = 2.0 * csr.nnz / t / 1e9
         tag = "" if pr is None else f"_pr{pr}"
         print(f"spmv_par.{name}.1x8_dev8{tag},{t*1e6:.1f},gflops={gf:.3f}")

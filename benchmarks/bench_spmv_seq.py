@@ -27,7 +27,6 @@ Three record-producing modes:
 from __future__ import annotations
 
 import functools
-import time
 from typing import List, Optional, Sequence, Tuple
 
 import jax
@@ -40,6 +39,8 @@ from repro.core import selector as S
 from repro.core.selector import PanelConfig, RecordStore
 from repro.kernels import ops
 
+from .timing import time_fn
+
 KERNELS = [(1, 8), (2, 4), (2, 8), (4, 4), (4, 8), (8, 4)]
 
 # Row-panel heights for the panel-tiled layout sweep (pr=0 rows, i.e. the
@@ -50,7 +51,10 @@ PANEL_XW = 2048
 
 # Candidate configurations for the sweep mode: the auto-tuner's training
 # grid. Whole-vector chunk sizes bracket the default; panel configs span
-# short/tall panels and narrow/wide x windows.
+# short/tall panels and narrow/wide x windows; the descriptor-lowering
+# variants cover both layouts so ``selector.tune`` learns per-matrix which
+# side of the bytes-vs-decode trade wins (every sweep matrix measures both
+# lowerings -- the v3 record field the tuner keys on).
 SWEEP_CONFIGS: Tuple[PanelConfig, ...] = (
     PanelConfig("whole_vector", 0, 0, 256),
     PanelConfig("whole_vector", 0, 0, 512),
@@ -58,6 +62,9 @@ SWEEP_CONFIGS: Tuple[PanelConfig, ...] = (
     PanelConfig("panels", 512, 2048, 64),
     PanelConfig("panels", 2048, 2048, 64),
     PanelConfig("panels", 512, 512, 32),
+    PanelConfig("whole_vector", 0, 0, 512, lowering="descriptor"),
+    PanelConfig("panels", 512, 2048, 64, lowering="descriptor"),
+    PanelConfig("panels", 512, 512, 32, lowering="descriptor"),
 )
 SWEEP_KERNELS = ((1, 8), (4, 4))
 # Sweep-mode matrix subset: one per structural class keeps the quick run
@@ -92,15 +99,6 @@ def csr_spmv(rowlen_rows, colidx, values, x, *, nrows):
     return jax.ops.segment_sum(prod, rowlen_rows, num_segments=nrows)
 
 
-def time_fn(fn, iters: int = 8) -> float:
-    fn().block_until_ready()
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn()
-    out.block_until_ready()
-    return (time.perf_counter() - t0) / iters
-
-
 def bench_matrix(name: str, csr, store: Optional[RecordStore] = None,
                  workers: int = 1) -> List[str]:
     rng = np.random.default_rng(0)
@@ -129,6 +127,23 @@ def bench_matrix(name: str, csr, store: Optional[RecordStore] = None,
             store.add_measurement(kname, feats,
                                   PanelConfig("whole_vector", 0, 0, 512),
                                   workers, gf, matrix=name)
+        # descriptor lowering at the same geometry: the mask-vs-descriptor
+        # trade per matrix, recorded so the tuner learns it. Small blocks
+        # only (like the _test variants): that is where the decode
+        # dominates, and the r*c-fold descriptor tables stay cheap to build
+        if rc in ((1, 8), (2, 4)):
+            hd = ops.prepare(mat, cb=512, dtype=np.float32,
+                             layout="whole_vector", lowering="descriptor")
+            td = time_fn(lambda: ops.spmv(hd, x, use_pallas=False))
+            gfd = flops / td / 1e9
+            lines.append(f"spmv_seq.{name}.{kname}_desc,{td*1e6:.1f},"
+                         f"gflops={gfd:.3f};vs_mask={gfd/gf:.2f}")
+            if store is not None:
+                store.add_measurement(
+                    kname, feats,
+                    PanelConfig("whole_vector", 0, 0, 512,
+                                lowering="descriptor"),
+                    workers, gfd, matrix=name)
         # row-panel-tiled layout sweep (bounded-VMEM path). Locality stats
         # ride along: nchunks_total counts the REAL (mask != 0) chunks --
         # the layout's DMA-window total, what reordering tries to shrink --
@@ -170,7 +185,7 @@ def bench_matrix(name: str, csr, store: Optional[RecordStore] = None,
 def sweep_matrix(name: str, csr, store: RecordStore,
                  kernels: Sequence[Tuple[int, int]] = SWEEP_KERNELS,
                  configs: Sequence[PanelConfig] = SWEEP_CONFIGS,
-                 workers: int = 1, iters: int = 8) -> List[str]:
+                 workers: int = 1, iters: int = 4) -> List[str]:
     """Candidate-sweep mode: measure every (kernel, config) candidate.
 
     This is the auto-tuner's training loop -- each measurement lands in the
@@ -196,11 +211,13 @@ def sweep_matrix(name: str, csr, store: RecordStore,
             seen.add(cfg)
             h = ops.prepare(mat, layout=cfg.layout, pr=cfg.pr or None,
                             xw=cfg.xw or None, cb=cfg.cb, dtype=np.float32,
-                            tune=False)
+                            tune=False, lowering=cfg.lowering)
             t = time_fn(lambda: ops.spmv(h, x, use_pallas=False), iters=iters)
             gf = flops / t / 1e9
             tag = (f"pr{cfg.pr}_xw{cfg.xw}_cb{cfg.cb}" if cfg.pr
                    else f"whole_cb{cfg.cb}")
+            if cfg.lowering == "descriptor":
+                tag += "_desc"
             lines.append(f"spmv_sweep.{name}.{kname}.{tag},{t*1e6:.1f},"
                          f"gflops={gf:.3f}")
             store.add_measurement(kname, feats, cfg, workers, gf, matrix=name)
@@ -208,7 +225,7 @@ def sweep_matrix(name: str, csr, store: RecordStore,
 
 
 def bench_reorder(name: str, csr, store: Optional[RecordStore] = None,
-                  workers: int = 1, iters: int = 8,
+                  workers: int = 1, iters: int = 4,
                   geoms: Sequence[PanelConfig] = REORDER_GEOMS) -> List[str]:
     """Reordering comparison over a (strategy x geometry) grid.
 

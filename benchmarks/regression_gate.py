@@ -1,0 +1,105 @@
+"""CI perf-regression gate: compare BENCH_spmv.json against the prior run.
+
+    python -m benchmarks.regression_gate --current BENCH_spmv.json \
+        --prior prior-records/BENCH_spmv.json [--threshold 0.25]
+
+Per benchmark SECTION, the geometric mean of every ``gflops=`` value on the
+section's CSV lines is compared between the two artifacts; a section whose
+aggregate dropped by more than ``--threshold`` (default 25%) fails the
+gate. Aggregating per section (tens of lines each, timed with
+warmup-discard + median-of-repeats -- see ``benchmarks.timing``) is what
+makes a 25% bar meaningful on noisy CI runners where any single line can
+swing several-fold run-to-run.
+
+Sections present in only one artifact are skipped (new benches must not
+fail their introducing PR; removed benches must not block removal), as are
+sections with fewer than ``--min-lines`` measured lines (too noisy to
+gate). Exit status: 0 = pass/skip, 1 = regression. Stdlib only, so the CI
+step needs no installed package.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import re
+import sys
+from typing import Dict, List
+
+_GFLOPS = re.compile(r"gflops=([0-9.eE+-]+)")
+
+
+def section_gflops(payload: dict) -> Dict[str, List[float]]:
+    """Per-section gflops values parsed from the artifact's CSV lines."""
+    out: Dict[str, List[float]] = {}
+    for name, lines in payload.get("sections", {}).items():
+        vals = []
+        for line in lines:
+            m = _GFLOPS.search(line)
+            if m:
+                try:
+                    v = float(m.group(1))
+                except ValueError:
+                    continue
+                if v > 0 and math.isfinite(v):
+                    vals.append(v)
+        if vals:
+            out[name] = vals
+    return out
+
+
+def geomean(vals: List[float]) -> float:
+    return math.exp(sum(math.log(v) for v in vals) / len(vals))
+
+
+def compare(current: dict, prior: dict, threshold: float = 0.25,
+            min_lines: int = 5) -> List[str]:
+    """Regression report lines; non-empty means the gate fails."""
+    cur = section_gflops(current)
+    pri = section_gflops(prior)
+    failures = []
+    for name in sorted(cur):
+        if name not in pri:
+            print(f"gate: section {name!r} has no prior -- skipped")
+            continue
+        if len(cur[name]) < min_lines or len(pri[name]) < min_lines:
+            print(f"gate: section {name!r} has <{min_lines} lines -- "
+                  f"skipped")
+            continue
+        g_cur, g_pri = geomean(cur[name]), geomean(pri[name])
+        ratio = g_cur / g_pri
+        verdict = "FAIL" if ratio < 1.0 - threshold else "ok"
+        print(f"gate: {name}: {g_pri:.3f} -> {g_cur:.3f} gflops "
+              f"(x{ratio:.2f}) {verdict}")
+        if verdict == "FAIL":
+            failures.append(
+                f"section {name!r} regressed to {ratio:.2f}x of the prior "
+                f"run ({g_pri:.3f} -> {g_cur:.3f} geomean gflops)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", required=True,
+                    help="this run's BENCH_spmv.json")
+    ap.add_argument("--prior", required=True,
+                    help="the prior run's BENCH_spmv.json artifact")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max tolerated per-section geomean drop (0.25 = "
+                         "fail below 75%% of prior)")
+    ap.add_argument("--min-lines", type=int, default=5,
+                    help="sections with fewer gflops lines are skipped")
+    args = ap.parse_args(argv)
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.prior) as f:
+        prior = json.load(f)
+    failures = compare(current, prior, threshold=args.threshold,
+                       min_lines=args.min_lines)
+    for msg in failures:
+        print(f"gate: REGRESSION: {msg}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

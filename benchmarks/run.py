@@ -18,7 +18,11 @@ Artifacts (both written by default, disable with ``--no-artifacts``):
 Everything runs in CPU-interpret mode (use_pallas=False / interpret=True
 under the hood) with fixed seeds, so record identities -- matrix set,
 kernels, configurations, features -- are deterministic run-to-run; only the
-measured gflops values vary with machine load.
+measured gflops values vary with machine load. Timing is warmup-discard +
+median-of-repeats (``benchmarks.timing.time_fn``) so the per-section
+aggregates are stable enough for the CI perf-regression gate
+(``benchmarks.regression_gate``) to compare against the prior run's
+artifact.
 """
 from __future__ import annotations
 
@@ -102,7 +106,9 @@ def main(argv=None) -> None:
     from . import roofline
     def _roofline():
         rows = roofline.main(csv=False)
-        out = []
+        # SpMV bytes-per-nnz model per lowering (descriptor-table bytes
+        # accounted), next to the dry-run cells
+        out = list(roofline.spmv_lowering_lines())
         for r in rows:
             if "skipped" in r:
                 out.append(

@@ -1,0 +1,33 @@
+"""Shared benchmark timing: warmup-discard + median-of-repeats.
+
+The record-store gflops feed two consumers that need run-to-run stability:
+``selector.tune``'s per-config throughput fits and the CI perf-regression
+gate (``benchmarks/regression_gate.py``). A single timed block is at the
+mercy of one scheduler hiccup on a noisy CI runner; taking the MEDIAN over
+several independently-timed blocks (after one discarded warmup call that
+also absorbs jit compilation) cuts the worst of that tail without growing
+total call count much.
+"""
+from __future__ import annotations
+
+import time
+
+
+def time_fn(fn, iters: int = 4, repeats: int = 3) -> float:
+    """Seconds per call of ``fn``: median over ``repeats`` timed blocks of
+    ``iters`` calls each, after one discarded warmup call.
+
+    ``fn`` must return a jax array (``block_until_ready`` fences each
+    block). Total calls = 1 + iters * repeats, comparable to the previous
+    single-block scheme at the defaults.
+    """
+    fn().block_until_ready()            # warmup (compile) -- discarded
+    samples = []
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        for _ in range(max(1, iters)):
+            out = fn()
+        out.block_until_ready()
+        samples.append((time.perf_counter() - t0) / max(1, iters))
+    samples.sort()
+    return samples[len(samples) // 2]

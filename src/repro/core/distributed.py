@@ -44,7 +44,8 @@ def shard_matrix(mat: F.SPC5Matrix, ndev: int, cb: Optional[int] = None,
                  dtype=None, pr: Optional[int] = None, xw: int = 512,
                  store: Optional[S.RecordStore] = None,
                  config: Optional[S.PanelConfig] = None, tune: bool = True,
-                 reorder=None) -> PL.ShardedPlan:
+                 reorder=None,
+                 lowering: str = PL.LOWERING_MASK) -> PL.ShardedPlan:
     """Partition + build + stack + (optionally) device_put with sharding.
 
     Thin wrapper over the plan pipeline's shard pass
@@ -65,10 +66,14 @@ def shard_matrix(mat: F.SPC5Matrix, ndev: int, cb: Optional[int] = None,
     row partitioning; the permutation rides on the returned plan and
     :func:`make_distributed_spmv` applies it transparently. A tuned config
     carrying ``config.reorder`` applies the same way.
+
+    **Lowering**: the sharded stacking hooks build mask-decode arrays only;
+    a "descriptor" request (explicit or via a tuned config) is demoted to
+    "mask" with the demotion recorded in the shard trace entry.
     """
     return PL.shard_plan(mat, ndev, cb=cb, mesh=mesh, axis=axis, dtype=dtype,
                          pr=pr, xw=xw, store=store, config=config, tune=tune,
-                         reorder=reorder)
+                         reorder=reorder, lowering=lowering)
 
 
 def shard_matrix_panels(mat: F.SPC5Matrix, ndev: int, pr: int = 512,

@@ -166,6 +166,101 @@ def beta_breakeven_avg(r: int, c: int, s_int: int = 4) -> float:
 
 
 # ----------------------------------------------------------------------------
+# Lowering byte models: mask decode vs precomputed descriptors
+# ----------------------------------------------------------------------------
+
+#: int32 words per descriptor lane (valid, vidx, xcol, yrow) -- the storage
+#: the ``descriptor`` lowering trades against the mask decode's FLOPs.
+DESC_WORDS_PER_LANE = 4
+
+
+def descriptor_table_bytes(nblocks: int, r: int, c: int,
+                           s_int: int = 4) -> int:
+    """Extra index bytes of the descriptor lowering: 4 int32 per block LANE
+    (r*c lanes per block) instead of the mask lowering's 4 int32 per BLOCK.
+    """
+    return nblocks * r * c * DESC_WORDS_PER_LANE * s_int
+
+
+def spmv_bytes_per_nnz(r: int, c: int, avg: float, lowering: str = "mask",
+                       s_float: int = 4, s_int: int = 4) -> float:
+    """HBM bytes per nonzero of one SpMV pass, per lowering.
+
+    Shared by the plan registry's lowering-cost arbitration and the roofline
+    bench, so "auto" resolution and the reported arithmetic intensity use
+    the same model. Both lowerings stream the packed values (``s_float``)
+    and one chunk-base int per block; they differ in index traffic:
+
+      * ``mask``: 4 int32 per block (mask, voffset, colidx, row);
+      * ``descriptor``: :data:`DESC_WORDS_PER_LANE` int32 per block *lane*
+        -- the bit expansion and rank cumsum are gone from the hot loop, at
+        an r*c-fold index inflation.
+    """
+    avg = max(avg, 1e-12)
+    per_block = (DESC_WORDS_PER_LANE * r * c * s_int
+                 if lowering == "descriptor" else 4 * s_int)
+    return s_float + (per_block + s_int) / avg
+
+
+@dataclasses.dataclass
+class ChunkDescriptors:
+    """Build-time expansion of the chunk masks into per-lane gather tables.
+
+    One entry per block LANE (bit position): ``valid`` is the mask bit,
+    ``vidx`` the lane's value index inside its chunk's value window,
+    ``xcol`` the x gather index and ``yrow`` the y scatter index -- exactly
+    the quantities the mask lowering recomputes per execution
+    (``bits -> cumsum ranks -> clipped indices``), hoisted to build time
+    because they are fully static per matrix. The descriptor kernels' inner
+    loop is then two gathers + a masked FMA; the trade is
+    :func:`descriptor_table_bytes` of extra HBM index traffic.
+
+    Shapes follow the source arrays: ``(nchunks, cb, r*c)`` for the
+    whole-vector layout, ``(npanels, nchunks, cb, r*c)`` for panels (where
+    ``xcol`` is window-relative and ``yrow`` panel-relative, like the mask
+    arrays they expand).
+    """
+
+    valid: np.ndarray  # int32, mask bit per lane (0 => padding lane)
+    vidx: np.ndarray   # int32, value index within the chunk window
+    xcol: np.ndarray   # int32, x gather index (col_map pre-folded if given)
+    yrow: np.ndarray   # int32, y scatter index
+
+
+def chunk_descriptors(chunk_mask: np.ndarray, chunk_voff: np.ndarray,
+                      chunk_col: np.ndarray, chunk_row: np.ndarray, *,
+                      r: int, c: int, vmax: int, xmax: int, ymax: int,
+                      col_map: Optional[np.ndarray] = None
+                      ) -> ChunkDescriptors:
+    """Expand chunk masks once into :class:`ChunkDescriptors`.
+
+    Works on any leading shape (flat chunks or panel-tiled chunks).
+    ``xmax``/``ymax`` are the gather/scatter clip bounds (ncols/nrows for
+    the whole-vector layout, xw/pr for panels). ``col_map`` folds a column
+    permutation into ``xcol`` at build time -- the descriptor analogue of
+    the mask kernels' fused ``col_map`` decode input, at zero runtime cost.
+    The clipping matches the mask kernels bit for bit; clipped lanes are
+    always ``valid == 0`` so their gathered garbage is zeroed.
+    """
+    rc = r * c
+    k = np.arange(rc, dtype=np.uint32)
+    bits = ((chunk_mask[..., None].astype(np.uint32) >> k)
+            & np.uint32(1)).astype(np.int32)
+    ranks = np.cumsum(bits, axis=-1, dtype=np.int64) - bits
+    vidx = np.clip(chunk_voff[..., None].astype(np.int64) + ranks,
+                   0, vmax - 1)
+    kk = np.arange(rc, dtype=np.int64)
+    xcol = np.clip(chunk_col[..., None].astype(np.int64) + (kk % c),
+                   0, xmax - 1)
+    if col_map is not None:
+        xcol = np.asarray(col_map, dtype=np.int64)[xcol]
+    yrow = np.clip(chunk_row[..., None].astype(np.int64) + (kk // c),
+                   0, ymax - 1)
+    return ChunkDescriptors(bits, vidx.astype(np.int32),
+                            xcol.astype(np.int32), yrow.astype(np.int32))
+
+
+# ----------------------------------------------------------------------------
 # Construction / conversion
 # ----------------------------------------------------------------------------
 

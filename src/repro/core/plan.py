@@ -61,6 +61,25 @@ LAYOUT_WHOLE = "whole_vector"
 LAYOUT_PANELS = "panels"
 LAYOUT_TEST = "test"
 
+# Canonical lowering names: how a layout's kernels consume the chunk
+# metadata. "mask" is the paper's bit-mask decode (bits -> cumsum ranks ->
+# masked gathers, recomputed per execution); "descriptor" hoists that work
+# to build time (repro.core.formats.chunk_descriptors) and trades
+# bytes-per-nnz for the decode FLOPs -- see LayoutSpec.lowerings.
+LOWERING_MASK = "mask"
+LOWERING_DESC = "descriptor"
+
+_LOWERING_NAMES = (LOWERING_MASK, LOWERING_DESC)
+_LOWERING_SENTINELS = ("auto", "")
+
+
+def canonical_lowering(name: str) -> str:
+    """Validate a lowering name ("auto"/"" pass through, like layouts)."""
+    if name in _LOWERING_SENTINELS or name in _LOWERING_NAMES:
+        return name
+    raise ValueError(f"unknown lowering {name!r}; "
+                     f"expected one of {_LOWERING_NAMES} or 'auto'")
+
 #: Legacy spellings accepted by :func:`canonical_layout` (old JSONL stores
 #: and pre-plan call sites used "whole" for the whole-vector layout).
 _LAYOUT_ALIASES: Dict[str, str] = {
@@ -121,6 +140,19 @@ class LayoutSpec:
     shard_build: Optional[Callable] = None
     local_spmv: Optional[Callable] = None
     auto_eligible: bool = True
+    #: Lowering variants this layout registers, "mask" first (the tie-break
+    #: winner of the cost arbitration). A tuned config naming a lowering the
+    #: layout did not register is demoted to "mask" by selector.clamp_config.
+    lowerings: Tuple[str, ...] = (LOWERING_MASK,)
+    #: Device-array names of the "descriptor" lowering's plans (None when
+    #: the layout's arrays are lowering-independent, e.g. the test tail).
+    desc_array_names: Optional[Tuple[str, ...]] = None
+    desc_device_view: Optional[Callable] = None
+
+    def plan_array_names(self, lowering: str) -> Tuple[str, ...]:
+        if lowering == LOWERING_DESC and self.desc_array_names:
+            return self.desc_array_names
+        return self.array_names
 
 
 _REGISTRY: Dict[str, LayoutSpec] = {}
@@ -177,18 +209,55 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+# Machine-balance constants of the closed-form lowering arbitration (the
+# no-store fallback; a record store overrides it through selector.tune).
+# Bandwidth is the v5e HBM figure used by benchmarks/roofline.py; the decode
+# throughput and per-lane op counts are deliberately coarse -- they only
+# need to rank the two lowerings, and the rank flips with fill exactly as
+# the SPC5 follow-up (arXiv:2307.14774) reports: at low fill the mask
+# decode's per-lane bit/cumsum work dominates and descriptors win, at high
+# fill the descriptor tables' r*c-fold index bytes dominate and masks win.
+LOWERING_HBM_BW = 819e9      # bytes/s
+LOWERING_DECODE_FLOPS = 2e11  # effective decode op throughput, ops/s
+_MASK_LANE_OPS = 8.0          # shift+and+cumsum+rank+3 idx ops+mask mul
+_DESC_LANE_OPS = 2.0          # gather-index add + mask mul
+
+
+def lowering_cost(r: int, c: int, avg: float, itemsize: int,
+                  lowering: str) -> float:
+    """Estimated seconds/nnz of one SpMV pass under ``lowering``: the
+    roofline max of HBM bytes (``formats.spmv_bytes_per_nnz`` -- which is
+    where the descriptor tables' inflation enters) and decode ops."""
+    rc = r * c
+    avg = max(avg, 1e-12)
+    bytes_nnz = F.spmv_bytes_per_nnz(r, c, avg, lowering, s_float=itemsize)
+    lane_ops = _DESC_LANE_OPS if lowering == LOWERING_DESC else _MASK_LANE_OPS
+    flops_nnz = 2.0 + lane_ops * rc / avg
+    return max(bytes_nnz / LOWERING_HBM_BW,
+               flops_nnz / LOWERING_DECODE_FLOPS)
+
+
+def _meta_lowering(meta) -> str:
+    for k, v in meta:
+        if k == "lowering":
+            return v
+    return LOWERING_MASK
+
+
 def _resolve_attr(obj, name):
     """Shared attribute resolution for plan containers: geometry meta keys
-    first, then the layout's named device arrays."""
+    first, then the layout's named device arrays (per-lowering name set)."""
     meta = object.__getattribute__(obj, "meta")
     for k, v in meta:
         if k == name:
             return v
     layout = object.__getattribute__(obj, "layout")
     spec = _REGISTRY.get(layout)
-    if spec is not None and name in spec.array_names:
-        arrays = object.__getattribute__(obj, "arrays")
-        return arrays[spec.array_names.index(name)]
+    if spec is not None:
+        names = spec.plan_array_names(_meta_lowering(meta))
+        if name in names:
+            arrays = object.__getattribute__(obj, "arrays")
+            return arrays[names.index(name)]
     raise AttributeError(
         f"{type(obj).__name__} ({layout!r}) has no attribute {name!r}")
 
@@ -231,11 +300,15 @@ class SPC5Plan:
 
     @property
     def dev(self):
-        """The layout's device-array view (legacy ``handle.dev`` API)."""
+        """The layout's device-array view (legacy ``handle.dev`` API),
+        lowering-aware: descriptor plans get the descriptor view."""
         spec = get_layout(self.layout)
-        if spec.device_view is None:
+        view = (spec.desc_device_view
+                if _meta_lowering(self.meta) == LOWERING_DESC
+                else spec.device_view)
+        if view is None:
             raise AttributeError(f"layout {self.layout!r} has no dev view")
-        return spec.device_view(self.arrays)
+        return view(self.arrays)
 
     @property
     def multi(self) -> "SPC5Plan":
@@ -301,6 +374,7 @@ class PlanState:
     mat: F.SPC5Matrix
     layout: str = "auto"            # requested (canonical or "auto")
     multi_layout: str = "auto"      # the test split's inner-layout request
+    lowering: str = "auto"          # requested lowering (canonical or "auto")
     pr: Optional[int] = None
     xw: Optional[int] = None
     cb: Optional[int] = None
@@ -338,11 +412,15 @@ def _tune_pass(st: PlanState) -> None:
             entry["source"] = "no-store"
         else:
             mat = st.mat
-            cfg = S.tune(S.spc5_features(mat), store=tstore,
-                         kernel=f"{mat.r}x{mat.c}")
-            cfg = S.clamp_config(cfg, nrows=mat.nrows, ncols=mat.ncols,
+            tuned = S.tune(S.spc5_features(mat), store=tstore,
+                           kernel=f"{mat.r}x{mat.c}")
+            cfg = S.clamp_config(tuned, nrows=mat.nrows, ncols=mat.ncols,
                                  r=mat.r, c=mat.c, nblocks=mat.nblocks,
                                  align=st.align)
+            # clamp_config validates the tuned lowering against the layout's
+            # registered variants (falls back to "mask"); the demotion is
+            # recorded here so plan.trace carries the evidence
+            lowering_demoted = (tuned.lowering != cfg.lowering)
             demoted = False
             if (cfg.layout == LAYOUT_WHOLE
                     and not fits_whole_vector(*mat.shape, st.itemsize,
@@ -356,12 +434,16 @@ def _tune_pass(st: PlanState) -> None:
             st.pr = cfg.pr or None
             st.xw = cfg.xw or None
             st.cb = cfg.cb
+            if st.lowering == "auto" and cfg.lowering:
+                st.lowering = cfg.lowering
             if st.reorder is None and cfg.reorder:
                 st.reorder = cfg.reorder
             entry.update(source="store", layout=cfg.layout,
                          pr=int(cfg.pr or 0), xw=int(cfg.xw or 0),
                          cb=int(cfg.cb or 0), reorder=cfg.reorder,
-                         demoted=demoted)
+                         lowering=cfg.lowering, demoted=demoted)
+            if lowering_demoted:
+                entry["lowering_demoted"] = True
     st.trace.append(entry)
 
 
@@ -403,7 +485,11 @@ def _reorder_pass(st: PlanState) -> None:
 
 def _layout_pass(st: PlanState) -> None:
     """Resolve "auto" through the registry's cost entries: the first
-    auto-eligible layout whose VMEM cost fits the budget wins."""
+    auto-eligible layout whose VMEM cost fits the budget wins. Then resolve
+    the lowering: explicit/tuned requests are validated against the
+    layout's registered variants (demoted to "mask" otherwise, with the
+    demotion traced); "auto" is arbitrated by :func:`lowering_cost` --
+    descriptor-table bytes vs mask-decode ops."""
     entry: dict = {"pass": "layout"}
     if st.layout == "auto":
         entry["reason"] = "vmem-fit"
@@ -418,18 +504,44 @@ def _layout_pass(st: PlanState) -> None:
     else:
         entry["reason"] = "requested"
     entry["layout"] = st.layout
+    if st.layout == LAYOUT_TEST:
+        # the split's multi sub-plan resolves its own lowering (its trace
+        # and this plan's geometry carry the resolved value); the tail
+        # arrays are lowering-independent
+        entry["lowering"] = st.lowering
+        entry["lowering_reason"] = "delegated"
+    else:
+        spec = _REGISTRY[st.layout]
+        if (st.lowering not in _LOWERING_SENTINELS
+                and st.lowering not in spec.lowerings):
+            st.lowering = LOWERING_MASK
+            entry["lowering_demoted"] = True
+        if st.lowering in _LOWERING_SENTINELS:
+            st.lowering = min(
+                spec.lowerings,
+                key=lambda n: lowering_cost(st.mat.r, st.mat.c,
+                                            st.mat.avg_nnz_per_block,
+                                            st.itemsize, n))
+            entry["lowering_reason"] = "cost-model"
+        entry["lowering"] = st.lowering
     st.trace.append(entry)
 
 
 def _build_pass(st: PlanState) -> SPC5Plan:
-    """Registry build + permutation attachment -> the finished plan."""
+    """Registry build + permutation attachment -> the finished plan.
+
+    ``extra["cols_fused"]`` means the build folded the column permutation
+    into its static gather indices (the descriptor builds do), so no
+    ``col_perm`` rides on the plan at all; ``extra["rows_fused"]`` likewise
+    drops the inverse row permutation."""
     spec = get_layout(st.layout)
     arrays, geom, extra = spec.build(st)
     rows_fused = bool(extra.get("rows_fused", False))
+    cols_fused = bool(extra.get("cols_fused", False))
     col_perm = row_iperm = None
     if st.reo is not None:
         reo = st.reo
-        col_perm = (None if reo.identity_cols
+        col_perm = (None if (cols_fused or reo.identity_cols)
                     else jnp.asarray(reo.col_perm.astype(np.int32)))
         row_iperm = (None if (rows_fused or reo.identity_rows)
                      else jnp.asarray(reo.row_iperm.astype(np.int32)))
@@ -451,7 +563,8 @@ def make_plan(mat: F.SPC5Matrix, *, layout: str = "auto",
               dtype=None, store: Optional[S.RecordStore] = None,
               tune: bool = True,
               reorder: Union[None, str, RE.Reordering] = None,
-              multi_layout: str = "auto") -> SPC5Plan:
+              multi_layout: str = "auto",
+              lowering: str = "auto") -> SPC5Plan:
     """The plan pipeline: tune -> reorder -> layout -> build.
 
     This is the single entry point behind ``ops.prepare`` /
@@ -459,10 +572,14 @@ def make_plan(mat: F.SPC5Matrix, *, layout: str = "auto",
     ``SparseLinear.from_dense``; every pass records its decision in the
     returned plan's ``trace``. ``layout`` accepts a registry key, a legacy
     alias, or "auto"; ``multi_layout`` is the beta_test split's inner-layout
-    request (only meaningful with ``layout="test"``).
+    request (only meaningful with ``layout="test"``). ``lowering`` selects
+    the kernel variant ("mask" | "descriptor" | "auto"): "auto" takes the
+    tuner's pick when a store is present, else the :func:`lowering_cost`
+    arbitration.
     """
     st = PlanState(mat=mat, layout=canonical_layout(layout),
                    multi_layout=canonical_layout(multi_layout),
+                   lowering=canonical_lowering(lowering),
                    pr=pr, xw=xw, cb=cb, nvec=nvec, align=align, dtype=dtype,
                    store=store, tune=tune, reorder=reorder)
     _tune_pass(st)
@@ -543,15 +660,44 @@ def _build_whole(st: PlanState):
         ch = dataclasses.replace(
             ch, chunk_row=st.reo.row_perm[ch.chunk_row].astype(np.int32))
         rows_fused = True
-    dev = R.device_put(ch, dtype=st.dtype)
     geom = dict(r=ch.r, c=ch.c, cb=ch.cb, vmax=ch.vmax, nrows=ch.nrows,
-                ncols=ch.ncols, nnz=ch.nnz)
+                ncols=ch.ncols, nnz=ch.nnz, lowering=st.lowering)
+    if st.lowering == LOWERING_DESC:
+        # descriptor lowering: expand the masks once; a column permutation
+        # folds into the static xcol table outright, so the plan carries no
+        # col_perm and the kernels need no col_map input
+        cmap = None
+        cols_fused = False
+        if st.reo is not None and not st.reo.identity_cols:
+            cmap = st.reo.col_perm
+            cols_fused = True
+        desc = F.chunk_descriptors(ch.chunk_mask, ch.chunk_voff,
+                                   ch.chunk_col, ch.chunk_row, r=ch.r,
+                                   c=ch.c, vmax=ch.vmax, xmax=ch.ncols,
+                                   ymax=ch.nrows, col_map=cmap)
+        values = (ch.values if st.dtype is None
+                  else ch.values.astype(st.dtype))
+        arrays = (jnp.asarray(values), jnp.asarray(desc.valid),
+                  jnp.asarray(desc.vidx), jnp.asarray(desc.xcol),
+                  jnp.asarray(desc.yrow), jnp.asarray(ch.chunk_vbase))
+        return arrays, geom, {"rows_fused": rows_fused,
+                              "cols_fused": cols_fused}
+    dev = R.device_put(ch, dtype=st.dtype)
     return tuple(dev), geom, {"rows_fused": rows_fused}
 
 
 def _lower_spmv_whole(plan: SPC5Plan, x, *, use_pallas, double_buffer,
                       interpret):
     dev = plan.dev
+    if plan.lowering == LOWERING_DESC:
+        if not use_pallas:
+            return R.spmv_desc(dev, x, nrows=plan.nrows)
+        fn = (spc5_spmv.spmv_pallas_desc_db if double_buffer
+              else spc5_spmv.spmv_pallas_desc)
+        return fn(dev.chunk_vbase, dev.desc_valid, dev.desc_vidx,
+                  dev.desc_xcol, dev.desc_yrow, dev.values, x,
+                  r=plan.r, c=plan.c, cb=plan.cb, vmax=plan.vmax,
+                  nrows=plan.nrows, ncols=plan.ncols, interpret=interpret)
     if not use_pallas:
         return R.spmv(dev, _gathered_x(plan, x), r=plan.r, c=plan.c,
                       nrows=plan.nrows, ncols=plan.ncols)
@@ -568,6 +714,14 @@ def _lower_spmv_whole(plan: SPC5Plan, x, *, use_pallas, double_buffer,
 def _lower_spmm_whole(plan: SPC5Plan, x, *, use_pallas, nvt, double_buffer,
                       interpret):
     dev = plan.dev
+    if plan.lowering == LOWERING_DESC:
+        if not use_pallas:
+            return R.spmm_desc(dev, x, nrows=plan.nrows)
+        return spc5_spmm.spmm_pallas_desc(
+            dev.chunk_vbase, dev.desc_valid, dev.desc_vidx, dev.desc_xcol,
+            dev.desc_yrow, dev.values, x, r=plan.r, c=plan.c, cb=plan.cb,
+            vmax=plan.vmax, nrows=plan.nrows, ncols=plan.ncols,
+            nvt=min(nvt, x.shape[1]), interpret=interpret)
     if not use_pallas:
         return R.spmm(dev, _gathered_x(plan, x), r=plan.r, c=plan.c,
                       nrows=plan.nrows, ncols=plan.ncols)
@@ -632,6 +786,9 @@ register_layout(LayoutSpec(
     device_view=lambda arrays: R.SPC5Device(*arrays),
     shard_build=_shard_build_whole,
     local_spmv=_local_spmv_whole,
+    lowerings=(LOWERING_MASK, LOWERING_DESC),
+    desc_array_names=tuple(R.SPC5DescDevice._fields),
+    desc_device_view=lambda arrays: R.SPC5DescDevice(*arrays),
 ))
 
 
@@ -648,29 +805,131 @@ def _cost_panels(nrows: int, ncols: int, itemsize: int, nvec: int) -> int:
     return 0
 
 
+def _panel_row_permutation(reo: RE.Reordering, pr: int, nrows: int,
+                           npanels: int) -> Optional[np.ndarray]:
+    """The panel layout's row-fusion condition: when every pr-row panel of
+    the *permuted* matrix maps to one pr-aligned ascending slab of original
+    rows, the row permutation is a pure PANEL permutation -- the build can
+    reorder the stacked panel axis outright and the executor's inverse row
+    gather disappears (the panel analogue of the whole-vector layout's
+    ``chunk_row`` fold). Returns ``pperm`` with ``pperm[p]`` the original
+    panel index of permuted panel ``p``, or None when not fusible."""
+    if reo.identity_rows:
+        return None
+    rp = reo.row_perm
+    pperm = np.empty(npanels, dtype=np.int64)
+    for p in range(npanels):
+        lo, hi = p * pr, min((p + 1) * pr, nrows)
+        if lo >= hi:
+            pperm[p] = p
+            continue
+        s = int(rp[lo])
+        if s % pr:
+            return None
+        if not np.array_equal(rp[lo:hi], np.arange(s, s + hi - lo)):
+            return None
+        if hi - lo < pr and s != (npanels - 1) * pr:
+            return None                 # a partial panel must stay last
+        pperm[p] = s // pr
+    return pperm
+
+
 def _build_panels(st: PlanState):
     pan = F.to_panels(st.mat, pr=512 if st.pr is None else st.pr,
                       cb=64 if st.cb is None else st.cb,
                       xw=512 if st.xw is None else st.xw, align=st.align)
-    dev = R.device_put_panels(pan, dtype=st.dtype)
+    rows_fused = False
+    if st.reo is not None:
+        pperm = _panel_row_permutation(st.reo, pan.pr, pan.nrows,
+                                       pan.npanels)
+        if pperm is not None:
+            # interval-fused row scatter: put permuted panel p's arrays at
+            # grid position pperm[p], so panel q of the output IS original
+            # rows [q*pr, (q+1)*pr) and no inverse row gather remains
+            # (chunk_vbase stays valid -- it indexes the values array
+            # absolutely)
+            inv = np.empty_like(pperm)
+            inv[pperm] = np.arange(pperm.shape[0])
+            pan = dataclasses.replace(
+                pan, chunk_col=pan.chunk_col[inv],
+                chunk_mask=pan.chunk_mask[inv],
+                chunk_voff=pan.chunk_voff[inv],
+                chunk_row=pan.chunk_row[inv],
+                chunk_vbase=pan.chunk_vbase[inv],
+                chunk_xbase=pan.chunk_xbase[inv])
+            rows_fused = True
     geom = dict(r=pan.r, c=pan.c, pr=pan.pr, cb=pan.cb, xw=pan.xw,
                 vmax=pan.vmax, npanels=pan.npanels, nchunks=pan.nchunks,
                 nrows=pan.nrows, ncols=pan.ncols, ncols_pad=pan.ncols_pad,
-                nnz=pan.nnz)
-    return tuple(dev), geom, {}
+                nnz=pan.nnz, lowering=st.lowering)
+    if st.lowering == LOWERING_DESC:
+        # window-relative xcol / panel-relative yrow tables; a column
+        # permutation cannot fold in (windows live in permuted column
+        # space), so the plan keeps col_perm and the kernels fuse it
+        desc = F.chunk_descriptors(pan.chunk_mask, pan.chunk_voff,
+                                   pan.chunk_col, pan.chunk_row, r=pan.r,
+                                   c=pan.c, vmax=pan.vmax, xmax=pan.xw,
+                                   ymax=pan.pr)
+        values = (pan.values if st.dtype is None
+                  else pan.values.astype(st.dtype))
+        arrays = (jnp.asarray(values), jnp.asarray(desc.valid),
+                  jnp.asarray(desc.vidx), jnp.asarray(desc.xcol),
+                  jnp.asarray(desc.yrow), jnp.asarray(pan.chunk_vbase),
+                  jnp.asarray(pan.chunk_xbase))
+        return arrays, geom, {"rows_fused": rows_fused}
+    dev = R.device_put_panels(pan, dtype=st.dtype)
+    return tuple(dev), geom, {"rows_fused": rows_fused}
+
+
+def _panel_fused_x(plan: SPC5Plan, x, nvec: int = 1):
+    """VMEM guard of the fused-column-map panel kernels.
+
+    The fused kernels hold x (and the map) fully VMEM-resident -- fine for
+    every matrix the whole-vector layout would also take, but a panels
+    plan exists precisely because x can outgrow VMEM. Past the same
+    budget, fall back to materialising the permuted x once + windowed DMA
+    (the pre-fusion behaviour), which keeps the kernel footprint bounded.
+    Only the pallas lowerings consult this; the jnp reference decode has
+    no VMEM ceiling and stays fused unconditionally."""
+    cmap = plan.col_perm
+    if cmap is None:
+        return x, None
+    itemsize = np.dtype(x.dtype).itemsize
+    xbytes = plan.ncols_pad * (itemsize * min(max(nvec, 1), 128) + 4)
+    if xbytes <= VMEM_WHOLE_VECTOR_BUDGET:
+        return x, cmap
+    return jnp.take(x, cmap, axis=0), None
 
 
 def _lower_spmv_panels(plan: SPC5Plan, x, *, use_pallas, double_buffer,
                        interpret):
-    xg = _gathered_x(plan, x)
+    # the column permutation is fused into every panel path (reference
+    # decode and kernels route the x gather through col_perm); x is never
+    # materialised in permuted order here, except past the fused kernels'
+    # VMEM budget (_panel_fused_x)
     dev = plan.dev
+    if plan.lowering == LOWERING_DESC:
+        if not use_pallas:
+            return R.spmv_panels_desc(dev, x, plan.col_perm, pr=plan.pr,
+                                      nrows=plan.nrows,
+                                      ncols_pad=plan.ncols_pad)
+        xk, cmap = _panel_fused_x(plan, x)
+        fn = (spc5_spmv.spmv_pallas_panels_desc_db if double_buffer
+              else spc5_spmv.spmv_pallas_panels_desc)
+        return fn(dev.chunk_vbase, dev.chunk_xbase, dev.desc_valid,
+                  dev.desc_vidx, dev.desc_xcol, dev.desc_yrow, dev.values,
+                  xk, cmap, r=plan.r, c=plan.c, cb=plan.cb, vmax=plan.vmax,
+                  xw=plan.xw, pr=plan.pr, nrows=plan.nrows,
+                  ncols_pad=plan.ncols_pad, interpret=interpret)
     if not use_pallas:
-        return R.spmv_panels(dev, xg, r=plan.r, c=plan.c, pr=plan.pr,
-                             nrows=plan.nrows, ncols_pad=plan.ncols_pad)
+        return R.spmv_panels(dev, x, plan.col_perm, r=plan.r, c=plan.c,
+                             pr=plan.pr, nrows=plan.nrows,
+                             ncols_pad=plan.ncols_pad)
+    xk, cmap = _panel_fused_x(plan, x)
     fn = (spc5_spmv.spmv_pallas_panels_db if double_buffer
           else spc5_spmv.spmv_pallas_panels)
     return fn(dev.chunk_vbase, dev.chunk_xbase, dev.chunk_col, dev.chunk_mask,
-              dev.chunk_voff, dev.chunk_row, dev.values, xg,
+              dev.chunk_voff, dev.chunk_row, dev.values, xk, cmap,
               r=plan.r, c=plan.c, cb=plan.cb, vmax=plan.vmax, xw=plan.xw,
               pr=plan.pr, nrows=plan.nrows, ncols_pad=plan.ncols_pad,
               interpret=interpret)
@@ -678,15 +937,30 @@ def _lower_spmv_panels(plan: SPC5Plan, x, *, use_pallas, double_buffer,
 
 def _lower_spmm_panels(plan: SPC5Plan, x, *, use_pallas, nvt, double_buffer,
                        interpret):
-    xg = _gathered_x(plan, x)
     dev = plan.dev
+    if plan.lowering == LOWERING_DESC:
+        if not use_pallas:
+            return R.spmm_panels_desc(dev, x, plan.col_perm, pr=plan.pr,
+                                      nrows=plan.nrows,
+                                      ncols_pad=plan.ncols_pad)
+        xk, cmap = _panel_fused_x(plan, x, nvec=x.shape[1])
+        fn = (spc5_spmm.spmm_pallas_panels_desc_db if double_buffer
+              else spc5_spmm.spmm_pallas_panels_desc)
+        return fn(dev.chunk_vbase, dev.chunk_xbase, dev.desc_valid,
+                  dev.desc_vidx, dev.desc_xcol, dev.desc_yrow, dev.values,
+                  xk, cmap, r=plan.r, c=plan.c, cb=plan.cb, vmax=plan.vmax,
+                  xw=plan.xw, pr=plan.pr, nrows=plan.nrows,
+                  ncols_pad=plan.ncols_pad, nvt=min(nvt, x.shape[1]),
+                  interpret=interpret)
     if not use_pallas:
-        return R.spmm_panels(dev, xg, r=plan.r, c=plan.c, pr=plan.pr,
-                             nrows=plan.nrows, ncols_pad=plan.ncols_pad)
+        return R.spmm_panels(dev, x, plan.col_perm, r=plan.r, c=plan.c,
+                             pr=plan.pr, nrows=plan.nrows,
+                             ncols_pad=plan.ncols_pad)
+    xk, cmap = _panel_fused_x(plan, x, nvec=x.shape[1])
     fn = (spc5_spmm.spmm_pallas_panels_db if double_buffer
           else spc5_spmm.spmm_pallas_panels)
     return fn(dev.chunk_vbase, dev.chunk_xbase, dev.chunk_col, dev.chunk_mask,
-              dev.chunk_voff, dev.chunk_row, dev.values, xg,
+              dev.chunk_voff, dev.chunk_row, dev.values, xk, cmap,
               r=plan.r, c=plan.c, cb=plan.cb, vmax=plan.vmax, xw=plan.xw,
               pr=plan.pr, nrows=plan.nrows, ncols_pad=plan.ncols_pad,
               nvt=min(nvt, x.shape[1]), interpret=interpret)
@@ -749,6 +1023,9 @@ register_layout(LayoutSpec(
     device_view=lambda arrays: R.SPC5PanelDevice(*arrays),
     shard_build=_shard_build_panels,
     local_spmv=_local_spmv_panels,
+    lowerings=(LOWERING_MASK, LOWERING_DESC),
+    desc_array_names=tuple(R.SPC5PanelDescDevice._fields),
+    desc_device_view=lambda arrays: R.SPC5PanelDescDevice(*arrays),
 ))
 
 
@@ -803,7 +1080,7 @@ def _build_test(st: PlanState):
     multi = make_plan(split.multi, layout=st.multi_layout, pr=st.pr,
                       xw=st.xw, cb=st.cb, nvec=st.nvec, align=st.align,
                       dtype=st.dtype, store=st.store, tune=st.tune,
-                      reorder=None)
+                      reorder=None, lowering=st.lowering)
     n_single = int(split.single_values.shape[0])
     if multi.layout == LAYOUT_PANELS and n_single:
         brows, bcols, bvals, xbase, tail_xw, tail_pad = \
@@ -821,7 +1098,7 @@ def _build_test(st: PlanState):
         tail_pr, tail_xw, tail_pad = 0, 0, 0
     geom = dict(nrows=st.mat.nrows, ncols=st.mat.ncols, nnz=st.mat.nnz,
                 tail_pr=tail_pr, tail_xw=tail_xw, tail_ncols_pad=tail_pad,
-                n_single=n_single)
+                n_single=n_single, lowering=multi.lowering)
     return arrays, geom, {"children": (multi,)}
 
 
@@ -881,6 +1158,9 @@ register_layout(LayoutSpec(
     clamp=_clamp_whole,
     default_cb=256,
     auto_eligible=False,
+    # the lowering applies to the multi-block SUB-plan (the tail arrays are
+    # lowering-independent), so the split accepts both variants
+    lowerings=(LOWERING_MASK, LOWERING_DESC),
 ))
 
 
@@ -939,8 +1219,13 @@ def shard_plan(mat: F.SPC5Matrix, ndev: int, *, cb: Optional[int] = None,
                pr: Optional[int] = None, xw: int = 512,
                store: Optional[S.RecordStore] = None,
                config: Optional[S.PanelConfig] = None, tune: bool = True,
-               reorder=None) -> ShardedPlan:
+               reorder=None, lowering: str = LOWERING_MASK) -> ShardedPlan:
     """The shard pass: tune -> reorder -> partition -> per-layout stacking.
+
+    ``lowering`` accepts the registry names for symmetry with
+    :func:`make_plan`, but the sharded stacking hooks build mask-decode
+    arrays only -- a "descriptor" request (explicit or tuned) is demoted to
+    "mask" and the demotion recorded in the shard trace entry.
 
     Mirrors :func:`make_plan` for the distributed path: the global matrix is
     (optionally) tuned at ``workers=ndev`` and reordered, then row-
@@ -955,6 +1240,7 @@ def shard_plan(mat: F.SPC5Matrix, ndev: int, *, cb: Optional[int] = None,
     from .partition import partition_matrix, partition_row_starts
     from jax.sharding import NamedSharding, PartitionSpec
 
+    lowering = canonical_lowering(lowering)     # fail fast on typos
     trace: List[dict] = []
     # The tune/reorder passes here intentionally differ from make_plan's:
     # tuning runs at workers=ndev and clamps against the PER-SHARD slab (not
@@ -1026,9 +1312,14 @@ def shard_plan(mat: F.SPC5Matrix, ndev: int, *, cb: Optional[int] = None,
     sstate = ShardState(mat=mat, parts=parts, pr=spr, xw=sxw, cb=scb,
                         dtype=dtype)
     arrays, geom = spec.shard_build(sstate)
-    trace.append({"pass": "shard", "layout": layout, "ndev": int(ndev),
-                  **{k: v for k, v in sorted(geom.items())
-                     if isinstance(v, (int, float, str, bool))}})
+    sentry = {"pass": "shard", "layout": layout, "ndev": int(ndev),
+              "lowering": LOWERING_MASK,
+              **{k: v for k, v in sorted(geom.items())
+                 if isinstance(v, (int, float, str, bool))}}
+    if (lowering == LOWERING_DESC
+            or (config is not None and config.lowering == LOWERING_DESC)):
+        sentry["lowering_demoted"] = True
+    trace.append(sentry)
     row_start = jnp.asarray(row_starts)
     if mesh is not None:
         put = lambda a: jax.device_put(

@@ -114,12 +114,16 @@ def device_put_panels(panels: SPC5Panels, dtype=None) -> SPC5PanelDevice:
 
 
 def _decode_panels(dev: SPC5PanelDevice, r: int, c: int, pr: int,
-                   ncols_pad: int):
+                   ncols_pad: int, cmap=None):
     """Panel decode with global index reconstruction.
 
     Returns (vals, xcol, yrow), each (npanels, nchunks, cb, r*c); xcol is a
     global column into x padded to ncols_pad, yrow a global row into y
-    padded to npanels*pr.
+    padded to npanels*pr. ``cmap`` is the reordering subsystem's fused
+    column map (padded to ncols_pad): block columns are contiguous in
+    *permuted* column space, so the decode routes its x gather through
+    ``cmap`` and x stays in ORIGINAL order -- no materialised permuted
+    copy (the panel analogue of the whole-vector kernels' ``col_map``).
     """
     npanels = dev.chunk_mask.shape[0]
     rc = r * c
@@ -135,20 +139,33 @@ def _decode_panels(dev: SPC5PanelDevice, r: int, c: int, pr: int,
     xcol = (dev.chunk_xbase[..., None, None] + dev.chunk_col[..., None]
             + (kk % c)[None, None, None, :])
     xcol = jnp.clip(xcol, 0, ncols_pad - 1)
+    if cmap is not None:
+        xcol = jnp.take(cmap, xcol, axis=0)
     panel_row0 = (jnp.arange(npanels, dtype=jnp.int32) * pr)[:, None, None, None]
     yrow = panel_row0 + dev.chunk_row[..., None] + (kk // c)[None, None, None, :]
     yrow = jnp.clip(yrow, 0, npanels * pr - 1)
     return vals, xcol, yrow
 
 
+def pad_cmap(cmap: jax.Array, ncols_pad: int) -> jax.Array:
+    """Pad a column map to the layout's padded width (pad entries gather
+    x[0]; they are only ever hit by mask-0 lanes, whose products are
+    zeroed)."""
+    return jnp.pad(cmap, (0, max(0, ncols_pad - cmap.shape[0])))
+
+
 @functools.partial(jax.jit,
                    static_argnames=("r", "c", "pr", "nrows", "ncols_pad"))
-def spmv_panels(dev: SPC5PanelDevice, x: jax.Array, *, r: int, c: int,
-                pr: int, nrows: int, ncols_pad: int) -> jax.Array:
-    """y = A @ x with A in the row-panel-tiled layout; x (ncols,)."""
+def spmv_panels(dev: SPC5PanelDevice, x: jax.Array, cmap=None, *, r: int,
+                c: int, pr: int, nrows: int, ncols_pad: int) -> jax.Array:
+    """y = A @ x with A in the row-panel-tiled layout; x (ncols,).
+
+    ``cmap`` (optional, (ncols,) int32) fuses a column permutation into the
+    decode -- x stays in original order (see :func:`_decode_panels`)."""
     npanels = dev.chunk_mask.shape[0]
     xp = jnp.pad(x, (0, max(0, ncols_pad - x.shape[0])))
-    vals, xcol, yrow = _decode_panels(dev, r, c, pr, ncols_pad)
+    cm = None if cmap is None else pad_cmap(cmap, ncols_pad)
+    vals, xcol, yrow = _decode_panels(dev, r, c, pr, ncols_pad, cmap=cm)
     contrib = vals * xp[xcol]
     y = jnp.zeros((npanels * pr,), dtype=vals.dtype)
     y = y.at[yrow.reshape(-1)].add(contrib.reshape(-1))
@@ -157,12 +174,121 @@ def spmv_panels(dev: SPC5PanelDevice, x: jax.Array, *, r: int, c: int,
 
 @functools.partial(jax.jit,
                    static_argnames=("r", "c", "pr", "nrows", "ncols_pad"))
-def spmm_panels(dev: SPC5PanelDevice, x: jax.Array, *, r: int, c: int,
-                pr: int, nrows: int, ncols_pad: int) -> jax.Array:
-    """Y = A @ X with A panel-tiled; X (ncols, nvec)."""
+def spmm_panels(dev: SPC5PanelDevice, x: jax.Array, cmap=None, *, r: int,
+                c: int, pr: int, nrows: int, ncols_pad: int) -> jax.Array:
+    """Y = A @ X with A panel-tiled; X (ncols, nvec). ``cmap`` as in
+    :func:`spmv_panels`."""
     npanels = dev.chunk_mask.shape[0]
     xp = jnp.pad(x, ((0, max(0, ncols_pad - x.shape[0])), (0, 0)))
-    vals, xcol, yrow = _decode_panels(dev, r, c, pr, ncols_pad)
+    cm = None if cmap is None else pad_cmap(cmap, ncols_pad)
+    vals, xcol, yrow = _decode_panels(dev, r, c, pr, ncols_pad, cmap=cm)
+    contrib = vals[..., None] * xp[xcol]
+    y = jnp.zeros((npanels * pr, x.shape[1]), dtype=vals.dtype)
+    y = y.at[yrow.reshape(-1)].add(contrib.reshape(-1, x.shape[1]))
+    return y[:nrows]
+
+
+# ----------------------------------------------------------------------------
+# Descriptor-lowering oracles (precomputed gather tables, no mask decode)
+# ----------------------------------------------------------------------------
+
+class SPC5DescDevice(NamedTuple):
+    """jnp view of the whole-vector descriptor lowering: the chunk masks are
+    expanded at build time (:func:`repro.core.formats.chunk_descriptors`)
+    so the execution is two gathers + a masked FMA -- no bit expansion, no
+    rank cumsum. A fused column permutation is folded into ``desc_xcol`` at
+    build time (zero runtime cost)."""
+
+    values: jax.Array      # (nvals_padded,)
+    desc_valid: jax.Array  # (nchunks, cb, r*c) int32, 0 => padding lane
+    desc_vidx: jax.Array   # (nchunks, cb, r*c) int32, window-relative
+    desc_xcol: jax.Array   # (nchunks, cb, r*c) int32, global x index
+    desc_yrow: jax.Array   # (nchunks, cb, r*c) int32, global y index
+    chunk_vbase: jax.Array  # (nchunks,) int32
+
+
+class SPC5PanelDescDevice(NamedTuple):
+    """jnp view of the panel descriptor lowering (``desc_xcol``
+    window-relative, ``desc_yrow`` panel-relative, like the mask arrays)."""
+
+    values: jax.Array       # (nvals_padded,)
+    desc_valid: jax.Array   # (npanels, nchunks, cb, r*c) int32
+    desc_vidx: jax.Array    # (npanels, nchunks, cb, r*c) int32
+    desc_xcol: jax.Array    # (npanels, nchunks, cb, r*c) int32, window-rel
+    desc_yrow: jax.Array    # (npanels, nchunks, cb, r*c) int32, panel-rel
+    chunk_vbase: jax.Array  # (npanels, nchunks) int32
+    chunk_xbase: jax.Array  # (npanels, nchunks) int32
+
+
+def _desc_vals(values: jax.Array, valid: jax.Array, vidx: jax.Array,
+               vbase: jax.Array) -> jax.Array:
+    """The descriptor expand: one gather + mask multiply."""
+    gidx = vbase[..., None, None].astype(jnp.int32) + vidx
+    gidx = jnp.clip(gidx, 0, values.shape[0] - 1)
+    return values[gidx] * valid.astype(values.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("nrows",))
+def spmv_desc(dev: SPC5DescDevice, x: jax.Array, *, nrows: int) -> jax.Array:
+    """y = A @ x through the precomputed descriptors (whole-vector)."""
+    vals = _desc_vals(dev.values, dev.desc_valid, dev.desc_vidx,
+                      dev.chunk_vbase)
+    contrib = vals * x[dev.desc_xcol]
+    y = jnp.zeros((nrows,), dtype=vals.dtype)
+    return y.at[dev.desc_yrow.reshape(-1)].add(contrib.reshape(-1))
+
+
+@functools.partial(jax.jit, static_argnames=("nrows",))
+def spmm_desc(dev: SPC5DescDevice, x: jax.Array, *, nrows: int) -> jax.Array:
+    """Y = A @ X through the precomputed descriptors; X (ncols, nvec)."""
+    vals = _desc_vals(dev.values, dev.desc_valid, dev.desc_vidx,
+                      dev.chunk_vbase)
+    contrib = vals[..., None] * x[dev.desc_xcol]
+    y = jnp.zeros((nrows, x.shape[1]), dtype=vals.dtype)
+    return y.at[dev.desc_yrow.reshape(-1)].add(
+        contrib.reshape(-1, x.shape[1]))
+
+
+def _decode_panels_desc(dev: SPC5PanelDescDevice, pr: int, ncols_pad: int,
+                        cmap=None):
+    """Descriptor panel decode: globalise the window/panel-relative indices
+    (a broadcast add -- the cumsum/bit work is gone)."""
+    npanels = dev.desc_valid.shape[0]
+    vals = _desc_vals(dev.values, dev.desc_valid, dev.desc_vidx,
+                      dev.chunk_vbase)
+    xcol = jnp.clip(dev.chunk_xbase[..., None, None] + dev.desc_xcol,
+                    0, ncols_pad - 1)
+    if cmap is not None:
+        xcol = jnp.take(cmap, xcol, axis=0)
+    panel_row0 = (jnp.arange(npanels, dtype=jnp.int32)
+                  * pr)[:, None, None, None]
+    yrow = panel_row0 + dev.desc_yrow
+    return vals, xcol, yrow
+
+
+@functools.partial(jax.jit, static_argnames=("pr", "nrows", "ncols_pad"))
+def spmv_panels_desc(dev: SPC5PanelDescDevice, x: jax.Array, cmap=None, *,
+                     pr: int, nrows: int, ncols_pad: int) -> jax.Array:
+    """y = A @ x through panel descriptors; ``cmap`` fuses a column
+    permutation exactly as in :func:`spmv_panels`."""
+    npanels = dev.desc_valid.shape[0]
+    xp = jnp.pad(x, (0, max(0, ncols_pad - x.shape[0])))
+    cm = None if cmap is None else pad_cmap(cmap, ncols_pad)
+    vals, xcol, yrow = _decode_panels_desc(dev, pr, ncols_pad, cmap=cm)
+    contrib = vals * xp[xcol]
+    y = jnp.zeros((npanels * pr,), dtype=vals.dtype)
+    y = y.at[yrow.reshape(-1)].add(contrib.reshape(-1))
+    return y[:nrows]
+
+
+@functools.partial(jax.jit, static_argnames=("pr", "nrows", "ncols_pad"))
+def spmm_panels_desc(dev: SPC5PanelDescDevice, x: jax.Array, cmap=None, *,
+                     pr: int, nrows: int, ncols_pad: int) -> jax.Array:
+    """Y = A @ X through panel descriptors; X (ncols, nvec)."""
+    npanels = dev.desc_valid.shape[0]
+    xp = jnp.pad(x, ((0, max(0, ncols_pad - x.shape[0])), (0, 0)))
+    cm = None if cmap is None else pad_cmap(cmap, ncols_pad)
+    vals, xcol, yrow = _decode_panels_desc(dev, pr, ncols_pad, cmap=cm)
     contrib = vals[..., None] * xp[xcol]
     y = jnp.zeros((npanels * pr, x.shape[1]), dtype=vals.dtype)
     y = y.at[yrow.reshape(-1)].add(contrib.reshape(-1, x.shape[1]))

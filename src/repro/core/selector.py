@@ -39,8 +39,10 @@ DEFAULT_KERNELS: Tuple[str, ...] = tuple(
 
 #: JSONL record-store schema version (bumped on incompatible field changes).
 #: v2 adds the reorder fields (``reorder``/``bandwidth_post``/``nchunks``);
-#: v1 stores load with those defaulted.
-RECORDS_VERSION = 2
+#: v3 adds the kernel-lowering field (``lowering``: "mask" | "descriptor");
+#: v1/v2 stores load with the missing fields defaulted ("" == legacy record,
+#: treated as the mask lowering -- the only variant that existed).
+RECORDS_VERSION = 3
 
 #: Env var naming a record store (JSON/JSONL file or a directory of stores)
 #: that ``ops.prepare`` consults for auto-tuning when the caller passes none.
@@ -68,6 +70,19 @@ def _canon_layout(name: str) -> str:
     return plan.canonical_layout(name)
 
 
+def _canon_lowering(name: str, legacy_as_mask: bool = False) -> str:
+    """Validate a lowering name against the plan registry's variant names.
+
+    ``""`` marks a legacy (pre-v3) record; ``legacy_as_mask`` maps it to
+    "mask" (what those measurements actually ran), which is how a config's
+    identity is normalised so v1/v2 records pool with v3 mask records.
+    """
+    if name == "":
+        return "mask" if legacy_as_mask else name
+    from . import plan
+    return plan.canonical_lowering(name)
+
+
 @dataclasses.dataclass(frozen=True)
 class PanelConfig:
     """A device-layout configuration for ``ops.prepare``.
@@ -80,7 +95,11 @@ class PanelConfig:
     ``repro.core.reorder`` strategy the measurement ran under ("" = no
     reordering); it is part of the configuration identity, so the tuner
     learns when reordering pays and ``ops.prepare`` applies the winning
-    strategy along with the tuned geometry.
+    strategy along with the tuned geometry. ``lowering`` names the kernel
+    variant ("mask" = the bit-mask decode, "descriptor" = build-time gather
+    tables); it completes the configuration identity so the tuner learns
+    per-matrix which side of the bytes-vs-decode trade wins (legacy ""
+    normalises to "mask", the only variant that existed pre-v3).
     """
 
     layout: str = "auto"
@@ -88,9 +107,12 @@ class PanelConfig:
     xw: int = 512
     cb: Optional[int] = None
     reorder: str = ""
+    lowering: str = "mask"
 
     def __post_init__(self):
         object.__setattr__(self, "layout", _canon_layout(self.layout))
+        object.__setattr__(self, "lowering",
+                           _canon_lowering(self.lowering, legacy_as_mask=True))
 
 
 #: What ``tune`` returns when no record is usable -- matches the fixed
@@ -178,18 +200,24 @@ class Record:
     reorder: str = ""
     bandwidth_post: float = 0.0
     nchunks: int = 0  # total panel chunks of the measured layout (DMA proxy)
+    # Kernel lowering the measurement ran under (schema v3): "mask" |
+    # "descriptor"; "" == legacy v1/v2 record (ran the mask decode, the
+    # only variant that existed -- config() normalises it so legacy records
+    # pool with v3 mask measurements).
+    lowering: str = ""
 
     def __post_init__(self):
         # loader shim: legacy layout spellings in old stores normalise to
         # the plan registry's key set ("" stays "", inferred in config())
         self.layout = _canon_layout(self.layout)
+        self.lowering = _canon_lowering(self.lowering)
 
     def config(self) -> PanelConfig:
         """Normalised layout configuration this record measured."""
         layout = self.layout or ("panels" if self.pr else "whole_vector")
         return PanelConfig(layout=layout, pr=int(self.pr), xw=int(self.xw),
                            cb=int(self.cb) if self.cb else None,
-                           reorder=self.reorder)
+                           reorder=self.reorder, lowering=self.lowering)
 
     def features(self) -> MatrixFeatures:
         rc = kernel_block(self.kernel)
@@ -224,12 +252,14 @@ class RecordStore:
             matrix: str = "", pr: int = 0, xw: int = 0, cb: int = 0,
             layout: str = "", nnz_row: float = 0.0, bandwidth: float = 0.0,
             fill: float = 0.0, reorder: str = "",
-            bandwidth_post: float = 0.0, nchunks: int = 0) -> None:
+            bandwidth_post: float = 0.0, nchunks: int = 0,
+            lowering: str = "") -> None:
         self.records.append(Record(kernel, float(avg), int(workers),
                                    float(gflops), matrix, int(pr), int(xw),
                                    int(cb), layout, float(nnz_row),
                                    float(bandwidth), float(fill), reorder,
-                                   float(bandwidth_post), int(nchunks)))
+                                   float(bandwidth_post), int(nchunks),
+                                   lowering))
 
     def add_measurement(self, kernel: str, feats: MatrixFeatures,
                         config: PanelConfig, workers: int, gflops: float,
@@ -239,8 +269,9 @@ class RecordStore:
 
         ``feats`` are the matrix's PRE-reorder features (the tune-time
         coordinates); ``config.reorder`` names the strategy the measurement
-        ran under and ``bandwidth_post``/``nchunks`` record what it
-        achieved (see :class:`Record`).
+        ran under, ``config.lowering`` the kernel variant, and
+        ``bandwidth_post``/``nchunks`` record what the reordering achieved
+        (see :class:`Record`).
         """
         self.add(kernel, feats.avg, workers, gflops, matrix=matrix,
                  pr=config.pr if config.layout == "panels" else 0,
@@ -248,7 +279,8 @@ class RecordStore:
                  cb=config.cb or 0, layout=config.layout,
                  nnz_row=feats.nnz_row, bandwidth=feats.bandwidth,
                  fill=feats.fill, reorder=config.reorder,
-                 bandwidth_post=bandwidth_post, nchunks=nchunks)
+                 bandwidth_post=bandwidth_post, nchunks=nchunks,
+                 lowering=config.lowering)
 
     def extend(self, other: "RecordStore") -> "RecordStore":
         self.records.extend(other.records)
@@ -625,6 +657,12 @@ def clamp_config(cfg: PanelConfig, *, nrows: int, ncols: int, r: int, c: int,
     alignment invariants: pr a multiple of r, xw a multiple of ``align``
     with room for one block, cb >= 1). Only set fields are touched --
     zeros/None keep meaning "layout default".
+
+    The ``lowering`` field is validated against the layout's registered
+    variants: a config naming a lowering its layout did not register (a
+    store fitted before a layout dropped its descriptor variant, or a
+    future layout without one) falls back to "mask" -- the plan pipeline's
+    tune pass records that demotion in ``plan.trace``.
     """
     pr, xw, cb = cfg.pr, cfg.xw, cfg.cb
     if pr:
@@ -635,5 +673,11 @@ def clamp_config(cfg: PanelConfig, *, nrows: int, ncols: int, r: int, c: int,
         xw = -(-xw // align) * align
     if cb:
         cb = max(1, min(cb, max(1, nblocks)))
+    lowering = cfg.lowering
+    if cfg.layout not in ("", "auto") and lowering not in ("", "auto"):
+        from . import plan
+        spec = plan._REGISTRY.get(plan.canonical_layout(cfg.layout))
+        if spec is not None and lowering not in spec.lowerings:
+            lowering = "mask"
     return PanelConfig(layout=cfg.layout, pr=pr, xw=xw, cb=cb,
-                       reorder=cfg.reorder)
+                       reorder=cfg.reorder, lowering=lowering)

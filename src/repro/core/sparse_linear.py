@@ -75,7 +75,7 @@ class SparseLinear:
                    cb: Optional[int] = None, dtype=None, layout: str = "auto",
                    pr: Optional[int] = None, xw: Optional[int] = None,
                    nvec: int = 128, tune: bool = True,
-                   reorder=None) -> "SparseLinear":
+                   reorder=None, lowering: str = "auto") -> "SparseLinear":
         """``nvec``: widest activation batch this layer will see -- feeds
         the auto layout's VMEM budget (SpMM tiles are nvt=min(nvec,128)
         wide). Defaults to 128 (one full lane tile) since batch size is
@@ -89,14 +89,18 @@ class SparseLinear:
         ``reorder`` (strategy name or ``repro.core.reorder.Reordering``)
         permutes the pruned weight before the layout is built; the layer's
         ``__call__`` is unchanged -- activations go in and come out in
-        original feature order (the handle gathers/scatters internally)."""
+        original feature order (the handle gathers/scatters internally).
+
+        ``lowering`` ("mask" | "descriptor" | "auto") selects the kernel
+        variant, exactly as on ``ops.prepare``."""
         w = prune_by_magnitude(np.asarray(w), density)
         csr = F.csr_from_dense(w)
         if block is None:
             block = choose_block(csr, store)
         mat = F.csr_to_spc5(csr, *block)
         h = ops.prepare(mat, cb=cb, dtype=dtype, layout=layout, pr=pr, xw=xw,
-                        nvec=nvec, store=store, tune=tune, reorder=reorder)
+                        nvec=nvec, store=store, tune=tune, reorder=reorder,
+                        lowering=lowering)
         b = None if bias is None else jnp.asarray(bias)
         return cls(handle=h, bias=b)
 

@@ -53,7 +53,8 @@ def prepare(mat: F.SPC5Matrix, cb: Optional[int] = None, align: int = 8,
             dtype=None, layout: str = "auto", pr: Optional[int] = None,
             xw: Optional[int] = None, nvec: int = 1,
             store: Optional[S.RecordStore] = None, tune: bool = True,
-            reorder: Union[None, str, RE.Reordering] = None) -> P.SPC5Plan:
+            reorder: Union[None, str, RE.Reordering] = None,
+            lowering: str = "auto") -> P.SPC5Plan:
     """Build an execution plan for ``mat`` (see ``repro.core.plan``).
 
     ``layout``: a registry key ("whole_vector", "panels", "test"), a legacy
@@ -80,36 +81,47 @@ def prepare(mat: F.SPC5Matrix, cb: Optional[int] = None, align: int = 8,
 
     ``pr``/``xw`` default to 512; ``cb=None`` uses the layout's default
     chunk size (256 whole-vector, 64 panels).
+
+    **Lowering**: ``lowering`` selects the kernel variant -- "mask" (the
+    paper's bit-mask decode, recomputed per execution) or "descriptor"
+    (build-time gather tables; bytes-per-nnz traded for the decode FLOPs).
+    "auto" (default) takes the tuner's pick when a store is present, else
+    the registry's closed-form cost arbitration (``plan.lowering_cost``).
     """
     return P.make_plan(mat, layout=layout, pr=pr, xw=xw, cb=cb, nvec=nvec,
                        align=align, dtype=dtype, store=store, tune=tune,
-                       reorder=reorder)
+                       reorder=reorder, lowering=lowering)
 
 
 def prepare_panels(mat: F.SPC5Matrix, pr: int = 512, cb: int = 64,
-                   xw: int = 512, align: int = 8, dtype=None) -> P.SPC5Plan:
-    """Row-panel-tiled plan with explicit geometry (no tuning)."""
+                   xw: int = 512, align: int = 8, dtype=None,
+                   lowering: str = "mask") -> P.SPC5Plan:
+    """Row-panel-tiled plan with explicit geometry (no tuning; the mask
+    lowering unless requested otherwise, matching this helper's
+    fixed-everything contract)."""
     return P.make_plan(mat, layout=P.LAYOUT_PANELS, pr=pr, cb=cb, xw=xw,
-                       align=align, dtype=dtype, tune=False)
+                       align=align, dtype=dtype, tune=False,
+                       lowering=lowering)
 
 
 def prepare_test(mat: F.SPC5Matrix, cb: Optional[int] = None, align: int = 8,
                  dtype=None, layout: str = "auto", pr: Optional[int] = None,
                  xw: Optional[int] = None, nvec: int = 1,
                  store: Optional[S.RecordStore] = None, tune: bool = True,
-                 reorder: Union[None, str, RE.Reordering] = None
-                 ) -> P.SPC5Plan:
+                 reorder: Union[None, str, RE.Reordering] = None,
+                 lowering: str = "auto") -> P.SPC5Plan:
     """Build the beta(r,c)_test split plan: multi-nnz blocks in the block
     layout + the singleton COO tail (panel-bucketed, with a Pallas tail
     kernel, when the multi part resolves to panels).
 
-    ``layout``/``pr``/``xw``/``store``/``tune`` configure the multi-block
-    sub-plan; ``reorder`` permutes the WHOLE matrix (blocks and singletons
-    see the same permutation) before the split.
+    ``layout``/``pr``/``xw``/``store``/``tune``/``lowering`` configure the
+    multi-block sub-plan; ``reorder`` permutes the WHOLE matrix (blocks and
+    singletons see the same permutation) before the split.
     """
     return P.make_plan(mat, layout=P.LAYOUT_TEST, multi_layout=layout,
                        pr=pr, xw=xw, cb=cb, nvec=nvec, align=align,
-                       dtype=dtype, store=store, tune=tune, reorder=reorder)
+                       dtype=dtype, store=store, tune=tune, reorder=reorder,
+                       lowering=lowering)
 
 
 def spmv(h: P.SPC5Plan, x: jax.Array, *, use_pallas: Optional[bool] = None,

@@ -30,6 +30,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro._compat.pallas import CompilerParams as _CompilerParams
+from repro.kernels.spc5_spmv import _panel_scratch
 
 
 def _spmm_kernel(vbase_ref, col_ref, mask_ref, voff_ref, row_ref, values_hbm,
@@ -70,14 +71,9 @@ def _spmm_kernel(vbase_ref, col_ref, mask_ref, voff_ref, row_ref, values_hbm,
         xcol = jnp.take(cmap_ref[...], xcol, axis=0)
     xg = jnp.take(x_ref[...], xcol, axis=0)                          # (cb,c,nvt)
 
-    y = y_ref[...]
-    for lr in range(r):                      # static unroll over block rows
-        acc = jnp.zeros((cb, y.shape[1]), dtype=y.dtype)
-        for lc in range(c):                  # static unroll over block cols
-            acc = acc + vals[:, lr * c + lc, None] * xg[:, lc, :]
-        yrow = jnp.clip(row + lr, 0, nrows - 1)
-        y = y.at[yrow].add(acc)
-    y_ref[...] = y
+    y_ref[...] = _spmm_block_accumulate(
+        y_ref[...], vals, xg, lambda lr: jnp.clip(row + lr, 0, nrows - 1),
+        r, c, cb)
 
 
 @functools.partial(
@@ -136,17 +132,53 @@ def spmm_pallas(chunk_vbase, chunk_col, chunk_mask, chunk_voff, chunk_row,
     )(*operands)
 
 
+def _spmm_block_accumulate(y, vals, xg, row_of_lr, r, c, cb):
+    """Shared (r, c)-unrolled block FMA + row scatter of the SpMM kernels.
+
+    ``row_of_lr(lr)`` supplies the per-block scatter rows for block row
+    ``lr`` -- clipped ``row + lr`` for the mask kernels, the precomputed
+    ``desc_yrow[:, lr*c]`` lane for the descriptor kernels."""
+    for lr in range(r):                      # static unroll over block rows
+        acc = jnp.zeros((cb, y.shape[1]), dtype=y.dtype)
+        for lc in range(c):                  # static unroll over block cols
+            acc = acc + vals[:, lr * c + lc, None] * xg[:, lc, :]
+        y = y.at[row_of_lr(lr)].add(acc)
+    return y
+
+
+def _panel_fused_operands_mm(x, col_map, ncols_pad, nvt):
+    """SpMM analogue of the SpMV panel kernels' fused-cols plumbing: with a
+    column map, the (ncols_pad, nvt) x tile and the map are VMEM-resident
+    and the window DMA is skipped (x never materialises permuted)."""
+    fused = col_map is not None
+    if fused:
+        cm = jnp.pad(col_map.astype(jnp.int32),
+                     (0, max(0, ncols_pad - col_map.shape[0])))
+        specs = [pl.BlockSpec((ncols_pad, nvt),
+                              lambda j, p, i, vb, xb: (0, j)),   # x (VMEM)
+                 pl.BlockSpec((ncols_pad,),
+                              lambda j, p, i, vb, xb: (0,))]     # cmap
+        return specs, [x, cm], fused
+    return [pl.BlockSpec(memory_space=pl.ANY)], [x], fused
+
+
 def _spmm_panel_kernel(vbase_ref, xbase_ref, col_ref, mask_ref, voff_ref,
-                       row_ref, values_hbm, x_hbm, y_ref, vwin, xwin, vsem,
-                       xsem, *, r: int, c: int, cb: int, vmax: int, xw: int,
-                       pr: int, nvt: int):
+                       row_ref, values_hbm, x_ref, *rest, r: int, c: int,
+                       cb: int, vmax: int, xw: int, pr: int, nvt: int,
+                       ncols_pad: int, fused_cols: bool = False):
     """One (vec-tile, panel, chunk) grid step of the row-panel-tiled SpMM.
 
     The value window DMA is identical to the SpMV panel kernel; the x window
-    is the 2-D slab ``x[xbase : xbase+xw, j*nvt : (j+1)*nvt]``. The output
-    tile is the panel's (pr, nvt) slab, revisited across the inner chunk
-    dimension and written back once per (panel, vec-tile).
+    is the 2-D slab ``x[xbase : xbase+xw, j*nvt : (j+1)*nvt]`` -- unless the
+    fused column map keeps the whole (ncols_pad, nvt) x tile VMEM-resident
+    and routes the gather through the map. The output tile is the panel's
+    (pr, nvt) slab, revisited across the inner chunk dimension and written
+    back once per (panel, vec-tile).
     """
+    if fused_cols:              # extra input ref: the column map (VMEM)
+        cmap_ref, y_ref, vwin, vsem = rest
+    else:
+        y_ref, vwin, xwin, vsem, xsem = rest
     j = pl.program_id(0)
     i = pl.program_id(2)
     p = pl.program_id(1)
@@ -157,12 +189,15 @@ def _spmm_panel_kernel(vbase_ref, xbase_ref, col_ref, mask_ref, voff_ref,
 
     vcopy = pltpu.make_async_copy(
         values_hbm.at[pl.ds(vbase_ref[p, i], vmax)], vwin, vsem)
-    xcopy = pltpu.make_async_copy(
-        x_hbm.at[pl.ds(xbase_ref[p, i], xw), pl.ds(j * nvt, nvt)], xwin, xsem)
     vcopy.start()
-    xcopy.start()
+    if not fused_cols:
+        xcopy = pltpu.make_async_copy(
+            x_ref.at[pl.ds(xbase_ref[p, i], xw), pl.ds(j * nvt, nvt)],
+            xwin, xsem)
+        xcopy.start()
     vcopy.wait()
-    xcopy.wait()
+    if not fused_cols:
+        xcopy.wait()
 
     rc = r * c
     mask = mask_ref[0, 0]
@@ -172,20 +207,22 @@ def _spmm_panel_kernel(vbase_ref, xbase_ref, col_ref, mask_ref, voff_ref,
     vidx = jnp.clip(voff_ref[0, 0][:, None] + ranks, 0, vmax - 1)
     vals = jnp.take(vwin[...], vidx, axis=0) * bits.astype(vwin.dtype)
 
-    # gather the c window-relative columns of the x slab: (cb, c, nvt)
-    xcol = jnp.clip(col_ref[0, 0][:, None]
-                    + jnp.arange(c, dtype=jnp.int32)[None, :], 0, xw - 1)
-    xg = jnp.take(xwin[...], xcol, axis=0)
+    # gather the c columns of the x slab: (cb, c, nvt)
+    if fused_cols:
+        xcol = jnp.clip(col_ref[0, 0][:, None] + xbase_ref[p, i]
+                        + jnp.arange(c, dtype=jnp.int32)[None, :],
+                        0, ncols_pad - 1)
+        xcol = jnp.take(cmap_ref[...], xcol, axis=0)
+        xg = jnp.take(x_ref[...], xcol, axis=0)
+    else:
+        xcol = jnp.clip(col_ref[0, 0][:, None]
+                        + jnp.arange(c, dtype=jnp.int32)[None, :], 0, xw - 1)
+        xg = jnp.take(xwin[...], xcol, axis=0)
 
-    y = y_ref[...]
     row = row_ref[0, 0]
-    for lr in range(r):                      # static unroll over block rows
-        acc = jnp.zeros((cb, y.shape[1]), dtype=y.dtype)
-        for lc in range(c):                  # static unroll over block cols
-            acc = acc + vals[:, lr * c + lc, None] * xg[:, lc, :]
-        yrow = jnp.clip(row + lr, 0, pr - 1)
-        y = y.at[yrow].add(acc)
-    y_ref[...] = y
+    y_ref[...] = _spmm_block_accumulate(
+        y_ref[...], vals, xg, lambda lr: jnp.clip(row + lr, 0, pr - 1),
+        r, c, cb)
 
 
 @functools.partial(
@@ -193,19 +230,27 @@ def _spmm_panel_kernel(vbase_ref, xbase_ref, col_ref, mask_ref, voff_ref,
     static_argnames=("r", "c", "cb", "vmax", "xw", "pr", "nrows", "ncols_pad",
                      "nvt", "interpret"))
 def spmm_pallas_panels(chunk_vbase, chunk_xbase, chunk_col, chunk_mask,
-                       chunk_voff, chunk_row, values, x, *, r: int, c: int,
-                       cb: int, vmax: int, xw: int, pr: int, nrows: int,
-                       ncols_pad: int, nvt: int = 128,
+                       chunk_voff, chunk_row, values, x, col_map=None, *,
+                       r: int, c: int, cb: int, vmax: int, xw: int, pr: int,
+                       nrows: int, ncols_pad: int, nvt: int = 128,
                        interpret: bool = False):
-    """Row-panel-tiled Y = A @ X; X (ncols, nvec), padded to ncols_pad rows."""
+    """Row-panel-tiled Y = A @ X; X (ncols, nvec), padded to ncols_pad rows.
+
+    ``col_map`` fuses a column permutation into the decode (x stays in
+    original order; see :func:`_panel_fused_operands_mm`)."""
     npanels, nchunks = chunk_vbase.shape
     nvec = x.shape[1]
     nvt = min(nvt, nvec)
     if nvec % nvt:
         raise ValueError(f"nvec={nvec} not divisible by tile {nvt}")
     xp = jnp.pad(x, ((0, max(0, ncols_pad - x.shape[0])), (0, 0)))
+    xspecs, xops, fused = _panel_fused_operands_mm(xp, col_map, ncols_pad,
+                                                   nvt)
     kernel = functools.partial(_spmm_panel_kernel, r=r, c=c, cb=cb, vmax=vmax,
-                               xw=xw, pr=pr, nvt=nvt)
+                               xw=xw, pr=pr, nvt=nvt, ncols_pad=ncols_pad,
+                               fused_cols=fused)
+    scratch = _panel_scratch(fused, 1, vmax, values.dtype, (xw, nvt),
+                             x.dtype)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                  # chunk_vbase, chunk_xbase
         grid=(nvec // nvt, npanels, nchunks),
@@ -215,15 +260,9 @@ def spmm_pallas_panels(chunk_vbase, chunk_xbase, chunk_col, chunk_mask,
             pl.BlockSpec((1, 1, cb), lambda j, p, i, vb, xb: (p, i, 0)),
             pl.BlockSpec((1, 1, cb), lambda j, p, i, vb, xb: (p, i, 0)),
             pl.BlockSpec(memory_space=pl.ANY),  # values (HBM)
-            pl.BlockSpec(memory_space=pl.ANY),  # x (HBM, windowed DMA)
-        ],
+        ] + xspecs,
         out_specs=pl.BlockSpec((pr, nvt), lambda j, p, i, vb, xb: (p, j)),
-        scratch_shapes=[
-            pltpu.VMEM((vmax,), values.dtype),
-            pltpu.VMEM((xw, nvt), x.dtype),
-            pltpu.SemaphoreType.DMA,
-            pltpu.SemaphoreType.DMA,
-        ],
+        scratch_shapes=scratch,
     )
     y = pl.pallas_call(
         kernel,
@@ -233,20 +272,26 @@ def spmm_pallas_panels(chunk_vbase, chunk_xbase, chunk_col, chunk_mask,
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
     )(chunk_vbase, chunk_xbase, chunk_col, chunk_mask.astype(jnp.int32),
-      chunk_voff, chunk_row, values, xp)
+      chunk_voff, chunk_row, values, *xops)
     return y[:nrows]
 
 
 def _spmm_panel_db_kernel(vbase_ref, xbase_ref, col_ref, mask_ref, voff_ref,
-                          row_ref, values_hbm, x_hbm, y_ref, vwin, xwin, vsem,
-                          xsem, *, r: int, c: int, cb: int, vmax: int,
-                          xw: int, pr: int, nvt: int, npanels: int,
-                          nchunks: int, nsteps: int):
+                          row_ref, values_hbm, x_ref, *rest, r: int, c: int,
+                          cb: int, vmax: int, xw: int, pr: int, nvt: int,
+                          ncols_pad: int, npanels: int, nchunks: int,
+                          nsteps: int, fused_cols: bool = False):
     """Double-buffered panel SpMM: overlap the NEXT (vec-tile, panel, chunk)
     step's value/x-slab DMAs with this step's decode (the SpMM analogue of
     ``_spmv_panel_db_kernel``). Buffers are indexed by the linearised step
     t = (j * npanels + p) * nchunks + i, matching the grid's iteration
-    order, so the prefetch target is always the step that runs next."""
+    order, so the prefetch target is always the step that runs next. With
+    the fused column map the x tile is VMEM-resident and only the value
+    window double-buffers."""
+    if fused_cols:              # extra input ref: the column map (VMEM)
+        cmap_ref, y_ref, vwin, vsem = rest
+    else:
+        y_ref, vwin, xwin, vsem, xsem = rest
     j = pl.program_id(0)
     p = pl.program_id(1)
     i = pl.program_id(2)
@@ -261,9 +306,10 @@ def _spmm_panel_db_kernel(vbase_ref, xbase_ref, col_ref, mask_ref, voff_ref,
     def _first():
         pltpu.make_async_copy(values_hbm.at[pl.ds(vbase_ref[0, 0], vmax)],
                               vwin.at[0], vsem.at[0]).start()
-        pltpu.make_async_copy(
-            x_hbm.at[pl.ds(xbase_ref[0, 0], xw), pl.ds(0, nvt)],
-            xwin.at[0], xsem.at[0]).start()
+        if not fused_cols:
+            pltpu.make_async_copy(
+                x_ref.at[pl.ds(xbase_ref[0, 0], xw), pl.ds(0, nvt)],
+                xwin.at[0], xsem.at[0]).start()
 
     @pl.when(t + 1 < nsteps)
     def _prefetch_next():
@@ -274,15 +320,17 @@ def _spmm_panel_db_kernel(vbase_ref, xbase_ref, col_ref, mask_ref, voff_ref,
         jn = jp // jnp.int32(npanels)
         pltpu.make_async_copy(values_hbm.at[pl.ds(vbase_ref[pn, inn], vmax)],
                               vwin.at[nxt], vsem.at[nxt]).start()
-        pltpu.make_async_copy(
-            x_hbm.at[pl.ds(xbase_ref[pn, inn], xw), pl.ds(jn * nvt, nvt)],
-            xwin.at[nxt], xsem.at[nxt]).start()
+        if not fused_cols:
+            pltpu.make_async_copy(
+                x_ref.at[pl.ds(xbase_ref[pn, inn], xw), pl.ds(jn * nvt, nvt)],
+                xwin.at[nxt], xsem.at[nxt]).start()
 
     pltpu.make_async_copy(values_hbm.at[pl.ds(vbase_ref[p, i], vmax)],
                           vwin.at[slot], vsem.at[slot]).wait()
-    pltpu.make_async_copy(
-        x_hbm.at[pl.ds(xbase_ref[p, i], xw), pl.ds(j * nvt, nvt)],
-        xwin.at[slot], xsem.at[slot]).wait()
+    if not fused_cols:
+        pltpu.make_async_copy(
+            x_ref.at[pl.ds(xbase_ref[p, i], xw), pl.ds(j * nvt, nvt)],
+            xwin.at[slot], xsem.at[slot]).wait()
 
     rc = r * c
     mask = mask_ref[0, 0]
@@ -292,19 +340,21 @@ def _spmm_panel_db_kernel(vbase_ref, xbase_ref, col_ref, mask_ref, voff_ref,
     vidx = jnp.clip(voff_ref[0, 0][:, None] + ranks, 0, vmax - 1)
     vals = jnp.take(vwin[slot], vidx, axis=0) * bits.astype(vwin.dtype)
 
-    xcol = jnp.clip(col_ref[0, 0][:, None]
-                    + jnp.arange(c, dtype=jnp.int32)[None, :], 0, xw - 1)
-    xg = jnp.take(xwin[slot], xcol, axis=0)
+    if fused_cols:
+        xcol = jnp.clip(col_ref[0, 0][:, None] + xbase_ref[p, i]
+                        + jnp.arange(c, dtype=jnp.int32)[None, :],
+                        0, ncols_pad - 1)
+        xcol = jnp.take(cmap_ref[...], xcol, axis=0)
+        xg = jnp.take(x_ref[...], xcol, axis=0)
+    else:
+        xcol = jnp.clip(col_ref[0, 0][:, None]
+                        + jnp.arange(c, dtype=jnp.int32)[None, :], 0, xw - 1)
+        xg = jnp.take(xwin[slot], xcol, axis=0)
 
-    y = y_ref[...]
     row = row_ref[0, 0]
-    for lr in range(r):                      # static unroll over block rows
-        acc = jnp.zeros((cb, y.shape[1]), dtype=y.dtype)
-        for lc in range(c):                  # static unroll over block cols
-            acc = acc + vals[:, lr * c + lc, None] * xg[:, lc, :]
-        yrow = jnp.clip(row + lr, 0, pr - 1)
-        y = y.at[yrow].add(acc)
-    y_ref[...] = y
+    y_ref[...] = _spmm_block_accumulate(
+        y_ref[...], vals, xg, lambda lr: jnp.clip(row + lr, 0, pr - 1),
+        r, c, cb)
 
 
 @functools.partial(
@@ -312,21 +362,28 @@ def _spmm_panel_db_kernel(vbase_ref, xbase_ref, col_ref, mask_ref, voff_ref,
     static_argnames=("r", "c", "cb", "vmax", "xw", "pr", "nrows", "ncols_pad",
                      "nvt", "interpret"))
 def spmm_pallas_panels_db(chunk_vbase, chunk_xbase, chunk_col, chunk_mask,
-                          chunk_voff, chunk_row, values, x, *, r: int, c: int,
-                          cb: int, vmax: int, xw: int, pr: int, nrows: int,
-                          ncols_pad: int, nvt: int = 128,
+                          chunk_voff, chunk_row, values, x, col_map=None, *,
+                          r: int, c: int, cb: int, vmax: int, xw: int,
+                          pr: int, nrows: int, ncols_pad: int, nvt: int = 128,
                           interpret: bool = False):
-    """Double-buffered row-panel-tiled Y = A @ X (see _spmm_panel_db_kernel)."""
+    """Double-buffered row-panel-tiled Y = A @ X (see _spmm_panel_db_kernel).
+
+    ``col_map`` fuses a column permutation, as in :func:`spmm_pallas_panels`.
+    """
     npanels, nchunks = chunk_vbase.shape
     nvec = x.shape[1]
     nvt = min(nvt, nvec)
     if nvec % nvt:
         raise ValueError(f"nvec={nvec} not divisible by tile {nvt}")
     xp = jnp.pad(x, ((0, max(0, ncols_pad - x.shape[0])), (0, 0)))
+    xspecs, xops, fused = _panel_fused_operands_mm(xp, col_map, ncols_pad,
+                                                   nvt)
     kernel = functools.partial(
         _spmm_panel_db_kernel, r=r, c=c, cb=cb, vmax=vmax, xw=xw, pr=pr,
-        nvt=nvt, npanels=npanels, nchunks=nchunks,
-        nsteps=(nvec // nvt) * npanels * nchunks)
+        nvt=nvt, ncols_pad=ncols_pad, npanels=npanels, nchunks=nchunks,
+        nsteps=(nvec // nvt) * npanels * nchunks, fused_cols=fused)
+    scratch = _panel_scratch(fused, 2, vmax, values.dtype, (xw, nvt),
+                             x.dtype)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                  # chunk_vbase, chunk_xbase
         grid=(nvec // nvt, npanels, nchunks),
@@ -336,15 +393,9 @@ def spmm_pallas_panels_db(chunk_vbase, chunk_xbase, chunk_col, chunk_mask,
             pl.BlockSpec((1, 1, cb), lambda j, p, i, vb, xb: (p, i, 0)),
             pl.BlockSpec((1, 1, cb), lambda j, p, i, vb, xb: (p, i, 0)),
             pl.BlockSpec(memory_space=pl.ANY),  # values (HBM)
-            pl.BlockSpec(memory_space=pl.ANY),  # x (HBM, windowed DMA)
-        ],
+        ] + xspecs,
         out_specs=pl.BlockSpec((pr, nvt), lambda j, p, i, vb, xb: (p, j)),
-        scratch_shapes=[
-            pltpu.VMEM((2, vmax), values.dtype),
-            pltpu.VMEM((2, xw, nvt), x.dtype),
-            pltpu.SemaphoreType.DMA((2,)),
-            pltpu.SemaphoreType.DMA((2,)),
-        ],
+        scratch_shapes=scratch,
     )
     y = pl.pallas_call(
         kernel,
@@ -354,5 +405,287 @@ def spmm_pallas_panels_db(chunk_vbase, chunk_xbase, chunk_col, chunk_mask,
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
     )(chunk_vbase, chunk_xbase, chunk_col, chunk_mask.astype(jnp.int32),
-      chunk_voff, chunk_row, values, xp)
+      chunk_voff, chunk_row, values, *xops)
+    return y[:nrows]
+
+
+# ----------------------------------------------------------------------------
+# Descriptor lowering: precomputed gather tables, no in-kernel mask decode
+# ----------------------------------------------------------------------------
+#
+# The per-lane descriptor tables (repro.core.formats.chunk_descriptors)
+# carry validity, value index, x column and y row. SpMM consumes them at
+# block granularity: lanes k and k+c share a column, so ``desc_xcol[:, :c]``
+# is exactly the mask kernel's per-block column gather (with any fused
+# column permutation already folded in) and ``desc_yrow[:, ::c]`` the
+# per-block-row scatter targets -- the expand is one gather + mask multiply.
+
+def _spmm_desc_vals(vwin, valid, vidx):
+    return jnp.take(vwin, vidx, axis=0) * valid.astype(vwin.dtype)
+
+
+def _spmm_desc_kernel(vbase_ref, valid_ref, vidx_ref, xcol_ref, yrow_ref,
+                      values_hbm, x_ref, y_ref, vwin, sem, *, r: int, c: int,
+                      cb: int, vmax: int):
+    """Whole-vector descriptor SpMM step (grid: vec-tiles x chunks)."""
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    copy = pltpu.make_async_copy(values_hbm.at[pl.ds(vbase_ref[i], vmax)],
+                                 vwin, sem)
+    copy.start()
+    copy.wait()
+
+    vals = _spmm_desc_vals(vwin[...], valid_ref[0], vidx_ref[0])
+    xg = jnp.take(x_ref[...], xcol_ref[0][:, :c], axis=0)       # (cb, c, nvt)
+    y_ref[...] = _spmm_block_accumulate(
+        y_ref[...], vals, xg, lambda lr: yrow_ref[0][:, lr * c], r, c, cb)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("r", "c", "cb", "vmax", "nrows", "ncols", "nvt",
+                     "interpret"))
+def spmm_pallas_desc(chunk_vbase, desc_valid, desc_vidx, desc_xcol,
+                     desc_yrow, values, x, *, r: int, c: int, cb: int,
+                     vmax: int, nrows: int, ncols: int, nvt: int = 128,
+                     interpret: bool = False):
+    """Whole-vector Y = A @ X over build-time descriptors
+    (lowering="descriptor"; column permutations are folded into
+    ``desc_xcol`` at build time, so there is no ``col_map`` input)."""
+    nchunks = desc_valid.shape[0]
+    nvec = x.shape[1]
+    nvt = min(nvt, nvec)
+    if nvec % nvt:
+        raise ValueError(f"nvec={nvec} not divisible by tile {nvt}")
+    rc = r * c
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nvec // nvt, nchunks),
+        in_specs=[
+            pl.BlockSpec((1, cb, rc), lambda j, i, vb: (i, 0, 0)),
+            pl.BlockSpec((1, cb, rc), lambda j, i, vb: (i, 0, 0)),
+            pl.BlockSpec((1, cb, rc), lambda j, i, vb: (i, 0, 0)),
+            pl.BlockSpec((1, cb, rc), lambda j, i, vb: (i, 0, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),                  # values
+            pl.BlockSpec((ncols, nvt), lambda j, i, vb: (0, j)),  # x tile
+        ],
+        out_specs=pl.BlockSpec((nrows, nvt), lambda j, i, vb: (0, j)),
+        scratch_shapes=[
+            pltpu.VMEM((vmax,), values.dtype),
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_spmm_desc_kernel, r=r, c=c, cb=cb, vmax=vmax),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nrows, nvec), values.dtype),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+    )(chunk_vbase, desc_valid, desc_vidx, desc_xcol, desc_yrow, values, x)
+
+
+def _spmm_panel_desc_kernel(vbase_ref, xbase_ref, valid_ref, vidx_ref,
+                            xcol_ref, yrow_ref, values_hbm, x_ref, *rest,
+                            r: int, c: int, cb: int, vmax: int, xw: int,
+                            pr: int, nvt: int, ncols_pad: int,
+                            fused_cols: bool = False):
+    """Panel descriptor SpMM step (grid: vec-tiles x panels x chunks)."""
+    if fused_cols:
+        cmap_ref, y_ref, vwin, vsem = rest
+    else:
+        y_ref, vwin, xwin, vsem, xsem = rest
+    j = pl.program_id(0)
+    p = pl.program_id(1)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    vcopy = pltpu.make_async_copy(
+        values_hbm.at[pl.ds(vbase_ref[p, i], vmax)], vwin, vsem)
+    vcopy.start()
+    if not fused_cols:
+        xcopy = pltpu.make_async_copy(
+            x_ref.at[pl.ds(xbase_ref[p, i], xw), pl.ds(j * nvt, nvt)],
+            xwin, xsem)
+        xcopy.start()
+    vcopy.wait()
+    if not fused_cols:
+        xcopy.wait()
+
+    vals = _spmm_desc_vals(vwin[...], valid_ref[0, 0], vidx_ref[0, 0])
+    if fused_cols:
+        xcol = jnp.clip(xcol_ref[0, 0][:, :c] + xbase_ref[p, i],
+                        0, ncols_pad - 1)
+        xcol = jnp.take(cmap_ref[...], xcol, axis=0)
+        xg = jnp.take(x_ref[...], xcol, axis=0)
+    else:
+        xg = jnp.take(xwin[...], xcol_ref[0, 0][:, :c], axis=0)
+    y_ref[...] = _spmm_block_accumulate(
+        y_ref[...], vals, xg, lambda lr: yrow_ref[0, 0][:, lr * c], r, c, cb)
+
+
+def _spmm_desc_panel_specs(cb, rc, xspecs):
+    return [
+        pl.BlockSpec((1, 1, cb, rc), lambda j, p, i, vb, xb: (p, i, 0, 0)),
+        pl.BlockSpec((1, 1, cb, rc), lambda j, p, i, vb, xb: (p, i, 0, 0)),
+        pl.BlockSpec((1, 1, cb, rc), lambda j, p, i, vb, xb: (p, i, 0, 0)),
+        pl.BlockSpec((1, 1, cb, rc), lambda j, p, i, vb, xb: (p, i, 0, 0)),
+        pl.BlockSpec(memory_space=pl.ANY),                    # values (HBM)
+    ] + xspecs
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("r", "c", "cb", "vmax", "xw", "pr", "nrows", "ncols_pad",
+                     "nvt", "interpret"))
+def spmm_pallas_panels_desc(chunk_vbase, chunk_xbase, desc_valid, desc_vidx,
+                            desc_xcol, desc_yrow, values, x, col_map=None, *,
+                            r: int, c: int, cb: int, vmax: int, xw: int,
+                            pr: int, nrows: int, ncols_pad: int,
+                            nvt: int = 128, interpret: bool = False):
+    """Row-panel-tiled descriptor Y = A @ X (lowering="descriptor")."""
+    npanels, nchunks = chunk_vbase.shape
+    nvec = x.shape[1]
+    nvt = min(nvt, nvec)
+    if nvec % nvt:
+        raise ValueError(f"nvec={nvec} not divisible by tile {nvt}")
+    xp = jnp.pad(x, ((0, max(0, ncols_pad - x.shape[0])), (0, 0)))
+    xspecs, xops, fused = _panel_fused_operands_mm(xp, col_map, ncols_pad,
+                                                   nvt)
+    scratch = _panel_scratch(fused, 1, vmax, values.dtype, (xw, nvt),
+                             x.dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                  # chunk_vbase, chunk_xbase
+        grid=(nvec // nvt, npanels, nchunks),
+        in_specs=_spmm_desc_panel_specs(cb, r * c, xspecs),
+        out_specs=pl.BlockSpec((pr, nvt), lambda j, p, i, vb, xb: (p, j)),
+        scratch_shapes=scratch,
+    )
+    y = pl.pallas_call(
+        functools.partial(_spmm_panel_desc_kernel, r=r, c=c, cb=cb,
+                          vmax=vmax, xw=xw, pr=pr, nvt=nvt,
+                          ncols_pad=ncols_pad, fused_cols=fused),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((npanels * pr, nvec), values.dtype),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
+    )(chunk_vbase, chunk_xbase, desc_valid, desc_vidx, desc_xcol, desc_yrow,
+      values, *xops)
+    return y[:nrows]
+
+
+def _spmm_panel_desc_db_kernel(vbase_ref, xbase_ref, valid_ref, vidx_ref,
+                               xcol_ref, yrow_ref, values_hbm, x_ref, *rest,
+                               r: int, c: int, cb: int, vmax: int, xw: int,
+                               pr: int, nvt: int, ncols_pad: int,
+                               npanels: int, nchunks: int, nsteps: int,
+                               fused_cols: bool = False):
+    """Double-buffered panel descriptor SpMM (same linearised-step
+    pipelining as ``_spmm_panel_db_kernel``)."""
+    if fused_cols:
+        cmap_ref, y_ref, vwin, vsem = rest
+    else:
+        y_ref, vwin, xwin, vsem, xsem = rest
+    j = pl.program_id(0)
+    p = pl.program_id(1)
+    i = pl.program_id(2)
+    t = (j * npanels + p) * nchunks + i
+    slot = jax.lax.rem(t, jnp.int32(2))
+
+    @pl.when(i == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    @pl.when(t == 0)
+    def _first():
+        pltpu.make_async_copy(values_hbm.at[pl.ds(vbase_ref[0, 0], vmax)],
+                              vwin.at[0], vsem.at[0]).start()
+        if not fused_cols:
+            pltpu.make_async_copy(
+                x_ref.at[pl.ds(xbase_ref[0, 0], xw), pl.ds(0, nvt)],
+                xwin.at[0], xsem.at[0]).start()
+
+    @pl.when(t + 1 < nsteps)
+    def _prefetch_next():
+        nxt = jax.lax.rem(t + jnp.int32(1), jnp.int32(2))
+        inn = jax.lax.rem(t + jnp.int32(1), jnp.int32(nchunks))
+        jp = (t + jnp.int32(1)) // jnp.int32(nchunks)   # j * npanels + p
+        pn = jax.lax.rem(jp, jnp.int32(npanels))
+        jn = jp // jnp.int32(npanels)
+        pltpu.make_async_copy(values_hbm.at[pl.ds(vbase_ref[pn, inn], vmax)],
+                              vwin.at[nxt], vsem.at[nxt]).start()
+        if not fused_cols:
+            pltpu.make_async_copy(
+                x_ref.at[pl.ds(xbase_ref[pn, inn], xw), pl.ds(jn * nvt, nvt)],
+                xwin.at[nxt], xsem.at[nxt]).start()
+
+    pltpu.make_async_copy(values_hbm.at[pl.ds(vbase_ref[p, i], vmax)],
+                          vwin.at[slot], vsem.at[slot]).wait()
+    if not fused_cols:
+        pltpu.make_async_copy(
+            x_ref.at[pl.ds(xbase_ref[p, i], xw), pl.ds(j * nvt, nvt)],
+            xwin.at[slot], xsem.at[slot]).wait()
+
+    vals = _spmm_desc_vals(vwin[slot], valid_ref[0, 0], vidx_ref[0, 0])
+    if fused_cols:
+        xcol = jnp.clip(xcol_ref[0, 0][:, :c] + xbase_ref[p, i],
+                        0, ncols_pad - 1)
+        xcol = jnp.take(cmap_ref[...], xcol, axis=0)
+        xg = jnp.take(x_ref[...], xcol, axis=0)
+    else:
+        xg = jnp.take(xwin[slot], xcol_ref[0, 0][:, :c], axis=0)
+    y_ref[...] = _spmm_block_accumulate(
+        y_ref[...], vals, xg, lambda lr: yrow_ref[0, 0][:, lr * c], r, c, cb)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("r", "c", "cb", "vmax", "xw", "pr", "nrows", "ncols_pad",
+                     "nvt", "interpret"))
+def spmm_pallas_panels_desc_db(chunk_vbase, chunk_xbase, desc_valid,
+                               desc_vidx, desc_xcol, desc_yrow, values, x,
+                               col_map=None, *, r: int, c: int, cb: int,
+                               vmax: int, xw: int, pr: int, nrows: int,
+                               ncols_pad: int, nvt: int = 128,
+                               interpret: bool = False):
+    """Double-buffered :func:`spmm_pallas_panels_desc`."""
+    npanels, nchunks = chunk_vbase.shape
+    nvec = x.shape[1]
+    nvt = min(nvt, nvec)
+    if nvec % nvt:
+        raise ValueError(f"nvec={nvec} not divisible by tile {nvt}")
+    xp = jnp.pad(x, ((0, max(0, ncols_pad - x.shape[0])), (0, 0)))
+    xspecs, xops, fused = _panel_fused_operands_mm(xp, col_map, ncols_pad,
+                                                   nvt)
+    scratch = _panel_scratch(fused, 2, vmax, values.dtype, (xw, nvt),
+                             x.dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                  # chunk_vbase, chunk_xbase
+        grid=(nvec // nvt, npanels, nchunks),
+        in_specs=_spmm_desc_panel_specs(cb, r * c, xspecs),
+        out_specs=pl.BlockSpec((pr, nvt), lambda j, p, i, vb, xb: (p, j)),
+        scratch_shapes=scratch,
+    )
+    y = pl.pallas_call(
+        functools.partial(_spmm_panel_desc_db_kernel, r=r, c=c, cb=cb,
+                          vmax=vmax, xw=xw, pr=pr, nvt=nvt,
+                          ncols_pad=ncols_pad, npanels=npanels,
+                          nchunks=nchunks,
+                          nsteps=(nvec // nvt) * npanels * nchunks,
+                          fused_cols=fused),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((npanels * pr, nvec), values.dtype),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
+    )(chunk_vbase, chunk_xbase, desc_valid, desc_vidx, desc_xcol, desc_yrow,
+      values, *xops)
     return y[:nrows]

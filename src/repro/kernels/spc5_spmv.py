@@ -32,6 +32,16 @@ columns are window-relative by construction). VMEM per step is
 ``pr + xw + vmax`` elements, independent of matrix size -- this is what
 lifts the VMEM-resident ceiling. ``ops.prepare`` picks the layout
 automatically (whole-vector when the vectors fit, panels otherwise).
+
+Each family also has a **descriptor** variant (``spmv_pallas_desc[_db]``,
+``spmv_pallas_panels_desc[_db]``): the mask decode is hoisted to build time
+(``repro.core.formats.chunk_descriptors``) into per-lane gather tables, so
+the inner loop is two gathers + a masked FMA -- no bit expansion, no rank
+cumsum -- at an r*c-fold index-bytes inflation. ``lowering="descriptor"``
+on the plan pipeline selects them; the tuner learns per matrix which side
+of that trade wins. The panel kernels (both lowerings) accept a fused
+``col_map`` so the reordering subsystem never materialises a permuted x
+(see ``_panel_fused_operands`` for the VMEM trade).
 """
 from __future__ import annotations
 
@@ -147,12 +157,55 @@ def spmv_pallas(chunk_vbase, chunk_col, chunk_mask, chunk_voff, chunk_row,
     )(*operands)
 
 
+def _panel_fused_operands(x, col_map, ncols_pad):
+    """Shared wrapper plumbing for the panel kernels' two x paths.
+
+    Non-fused: x (padded to ncols_pad) stays in HBM and each chunk DMAs its
+    ``xw``-wide window. Fused (``col_map`` given, the reordering
+    subsystem's zero-copy path): the window DMA cannot follow a
+    permutation, so x and the map live fully VMEM-resident like the
+    whole-vector kernels (the bounded-VMEM property is kept for y; the x
+    budget reverts to whole-vector -- the plan pipeline only picks this
+    path when a permutation is attached). Returns (in_specs tail, operands
+    tail, fused flag)."""
+    fused = col_map is not None
+    if fused:
+        cm = jnp.pad(col_map.astype(jnp.int32),
+                     (0, max(0, ncols_pad - col_map.shape[0])))
+        specs = [pl.BlockSpec((ncols_pad,), lambda *a: (0,)),   # x (VMEM)
+                 pl.BlockSpec((ncols_pad,), lambda *a: (0,))]   # cmap (VMEM)
+        return specs, [x, cm], fused
+    return [pl.BlockSpec(memory_space=pl.ANY)], [x], fused
+
+
+def _panel_scratch(fused, nbuf, vmax, vdtype, xshape, xdtype):
+    """Scratch shapes of the panel kernels (shared by the mask/descriptor x
+    SpMV/SpMM x single/double-buffered wrappers): ``nbuf`` value windows +
+    DMA semaphore(s), plus the x window pair only when the x DMA path is
+    live (non-fused). Order matches the kernels' ``*rest`` unpacking."""
+    def sem():
+        return (pltpu.SemaphoreType.DMA if nbuf == 1
+                else pltpu.SemaphoreType.DMA((nbuf,)))
+
+    vshape = (vmax,) if nbuf == 1 else (nbuf, vmax)
+    if fused:
+        return [pltpu.VMEM(vshape, vdtype), sem()]
+    xs = xshape if nbuf == 1 else (nbuf,) + tuple(xshape)
+    return [pltpu.VMEM(vshape, vdtype), pltpu.VMEM(xs, xdtype),
+            sem(), sem()]
+
+
 def _spmv_panel_kernel(vbase_ref, xbase_ref, col_ref, mask_ref, voff_ref,
-                       row_ref, values_hbm, x_hbm, y_ref, vwin, xwin, vsem,
-                       xsem, *, r: int, c: int, cb: int, vmax: int, xw: int,
-                       pr: int):
-    """One (panel, chunk) grid step: DMA the chunk's value + x windows, decode,
-    accumulate into the panel's (pr,) y tile."""
+                       row_ref, values_hbm, x_ref, *rest, r: int, c: int,
+                       cb: int, vmax: int, xw: int, pr: int, ncols_pad: int,
+                       fused_cols: bool = False):
+    """One (panel, chunk) grid step: DMA the chunk's value window (and x
+    window, unless the fused column map keeps x fully VMEM-resident),
+    decode, accumulate into the panel's (pr,) y tile."""
+    if fused_cols:              # extra input ref: the column map (VMEM)
+        cmap_ref, y_ref, vwin, vsem = rest
+    else:
+        y_ref, vwin, xwin, vsem, xsem = rest
     p = pl.program_id(0)
     i = pl.program_id(1)
 
@@ -162,17 +215,28 @@ def _spmv_panel_kernel(vbase_ref, xbase_ref, col_ref, mask_ref, voff_ref,
 
     vcopy = pltpu.make_async_copy(
         values_hbm.at[pl.ds(vbase_ref[p, i], vmax)], vwin, vsem)
-    xcopy = pltpu.make_async_copy(
-        x_hbm.at[pl.ds(xbase_ref[p, i], xw)], xwin, xsem)
     vcopy.start()
-    xcopy.start()
+    if not fused_cols:
+        xcopy = pltpu.make_async_copy(
+            x_ref.at[pl.ds(xbase_ref[p, i], xw)], xwin, xsem)
+        xcopy.start()
     vcopy.wait()
-    xcopy.wait()
+    if not fused_cols:
+        xcopy.wait()
 
-    # chunk_col is window-relative: decode against the x window directly
-    contrib = _decode_chunk(mask_ref[0, 0], voff_ref[0, 0], col_ref[0, 0],
-                            vwin[...], xwin[...], r=r, c=c, ncols=xw,
-                            vmax=vmax)
+    if fused_cols:
+        # globalise the window-relative columns and route the gather
+        # through the fused map: x is ORIGINAL-order, never materialised
+        # permuted (the panel analogue of the whole-vector col_map path)
+        contrib = _decode_chunk(mask_ref[0, 0], voff_ref[0, 0],
+                                col_ref[0, 0] + xbase_ref[p, i], vwin[...],
+                                x_ref[...], r=r, c=c, ncols=ncols_pad,
+                                vmax=vmax, cmap=cmap_ref[...])
+    else:
+        # chunk_col is window-relative: decode against the x window directly
+        contrib = _decode_chunk(mask_ref[0, 0], voff_ref[0, 0], col_ref[0, 0],
+                                vwin[...], xwin[...], r=r, c=c, ncols=xw,
+                                vmax=vmax)
     k = jnp.arange(r * c, dtype=jnp.int32)
     yrow = jnp.clip(row_ref[0, 0][:, None] + (k // c)[None, :], 0, pr - 1)
     y = y_ref[...]
@@ -184,14 +248,22 @@ def _spmv_panel_kernel(vbase_ref, xbase_ref, col_ref, mask_ref, voff_ref,
     static_argnames=("r", "c", "cb", "vmax", "xw", "pr", "nrows",
                      "ncols_pad", "interpret"))
 def spmv_pallas_panels(chunk_vbase, chunk_xbase, chunk_col, chunk_mask,
-                       chunk_voff, chunk_row, values, x, *, r: int, c: int,
-                       cb: int, vmax: int, xw: int, pr: int, nrows: int,
-                       ncols_pad: int, interpret: bool = False) -> jax.Array:
-    """Row-panel-tiled SpMV. x is padded to ncols_pad; returns y[:nrows]."""
+                       chunk_voff, chunk_row, values, x, col_map=None, *,
+                       r: int, c: int, cb: int, vmax: int, xw: int, pr: int,
+                       nrows: int, ncols_pad: int,
+                       interpret: bool = False) -> jax.Array:
+    """Row-panel-tiled SpMV. x is padded to ncols_pad; returns y[:nrows].
+
+    ``col_map`` (optional, (ncols,) int32) fuses a column permutation into
+    the decode -- x stays in original order (see
+    :func:`_panel_fused_operands` for the VMEM trade)."""
     npanels, nchunks = chunk_vbase.shape
     xp = jnp.pad(x, (0, max(0, ncols_pad - x.shape[0])))
+    xspecs, xops, fused = _panel_fused_operands(xp, col_map, ncols_pad)
     kernel = functools.partial(_spmv_panel_kernel, r=r, c=c, cb=cb, vmax=vmax,
-                               xw=xw, pr=pr)
+                               xw=xw, pr=pr, ncols_pad=ncols_pad,
+                               fused_cols=fused)
+    scratch = _panel_scratch(fused, 1, vmax, values.dtype, (xw,), x.dtype)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                  # chunk_vbase, chunk_xbase
         grid=(npanels, nchunks),
@@ -201,15 +273,9 @@ def spmv_pallas_panels(chunk_vbase, chunk_xbase, chunk_col, chunk_mask,
             pl.BlockSpec((1, 1, cb), lambda p, i, vb, xb: (p, i, 0)),
             pl.BlockSpec((1, 1, cb), lambda p, i, vb, xb: (p, i, 0)),
             pl.BlockSpec(memory_space=pl.ANY),  # values (HBM)
-            pl.BlockSpec(memory_space=pl.ANY),  # x (HBM, windowed DMA)
-        ],
+        ] + xspecs,
         out_specs=pl.BlockSpec((pr,), lambda p, i, vb, xb: (p,)),
-        scratch_shapes=[
-            pltpu.VMEM((vmax,), values.dtype),
-            pltpu.VMEM((xw,), x.dtype),
-            pltpu.SemaphoreType.DMA,
-            pltpu.SemaphoreType.DMA,
-        ],
+        scratch_shapes=scratch,
     )
     y = pl.pallas_call(
         kernel,
@@ -219,18 +285,24 @@ def spmv_pallas_panels(chunk_vbase, chunk_xbase, chunk_col, chunk_mask,
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary")),
     )(chunk_vbase, chunk_xbase, chunk_col, chunk_mask.astype(jnp.int32),
-      chunk_voff, chunk_row, values, xp)
+      chunk_voff, chunk_row, values, *xops)
     return y[:nrows]
 
 
 def _spmv_panel_db_kernel(vbase_ref, xbase_ref, col_ref, mask_ref, voff_ref,
-                          row_ref, values_hbm, x_hbm, y_ref, vwin, xwin, vsem,
-                          xsem, *, r: int, c: int, cb: int, vmax: int,
-                          xw: int, pr: int, nchunks: int, nsteps: int):
+                          row_ref, values_hbm, x_ref, *rest, r: int, c: int,
+                          cb: int, vmax: int, xw: int, pr: int,
+                          ncols_pad: int, nchunks: int, nsteps: int,
+                          fused_cols: bool = False):
     """Double-buffered panel variant: overlap the NEXT (panel, chunk) step's
     value/x-window DMAs with this step's decode (the 2-D-grid analogue of
     the asm kernel's software pipelining). Buffers are indexed by the
-    linearised step t = p * nchunks + i."""
+    linearised step t = p * nchunks + i. With the fused column map x is
+    fully VMEM-resident, so only the value window double-buffers."""
+    if fused_cols:              # extra input ref: the column map (VMEM)
+        cmap_ref, y_ref, vwin, vsem = rest
+    else:
+        y_ref, vwin, xwin, vsem, xsem = rest
     p = pl.program_id(0)
     i = pl.program_id(1)
     t = p * nchunks + i
@@ -244,8 +316,9 @@ def _spmv_panel_db_kernel(vbase_ref, xbase_ref, col_ref, mask_ref, voff_ref,
     def _first():
         pltpu.make_async_copy(values_hbm.at[pl.ds(vbase_ref[0, 0], vmax)],
                               vwin.at[0], vsem.at[0]).start()
-        pltpu.make_async_copy(x_hbm.at[pl.ds(xbase_ref[0, 0], xw)],
-                              xwin.at[0], xsem.at[0]).start()
+        if not fused_cols:
+            pltpu.make_async_copy(x_ref.at[pl.ds(xbase_ref[0, 0], xw)],
+                                  xwin.at[0], xsem.at[0]).start()
 
     @pl.when(t + 1 < nsteps)
     def _prefetch_next():
@@ -254,17 +327,25 @@ def _spmv_panel_db_kernel(vbase_ref, xbase_ref, col_ref, mask_ref, voff_ref,
         inn = jax.lax.rem(t + jnp.int32(1), jnp.int32(nchunks))
         pltpu.make_async_copy(values_hbm.at[pl.ds(vbase_ref[pn, inn], vmax)],
                               vwin.at[nxt], vsem.at[nxt]).start()
-        pltpu.make_async_copy(x_hbm.at[pl.ds(xbase_ref[pn, inn], xw)],
-                              xwin.at[nxt], xsem.at[nxt]).start()
+        if not fused_cols:
+            pltpu.make_async_copy(x_ref.at[pl.ds(xbase_ref[pn, inn], xw)],
+                                  xwin.at[nxt], xsem.at[nxt]).start()
 
     pltpu.make_async_copy(values_hbm.at[pl.ds(vbase_ref[p, i], vmax)],
                           vwin.at[slot], vsem.at[slot]).wait()
-    pltpu.make_async_copy(x_hbm.at[pl.ds(xbase_ref[p, i], xw)],
-                          xwin.at[slot], xsem.at[slot]).wait()
+    if not fused_cols:
+        pltpu.make_async_copy(x_ref.at[pl.ds(xbase_ref[p, i], xw)],
+                              xwin.at[slot], xsem.at[slot]).wait()
 
-    contrib = _decode_chunk(mask_ref[0, 0], voff_ref[0, 0], col_ref[0, 0],
-                            vwin[slot], xwin[slot], r=r, c=c, ncols=xw,
-                            vmax=vmax)
+    if fused_cols:
+        contrib = _decode_chunk(mask_ref[0, 0], voff_ref[0, 0],
+                                col_ref[0, 0] + xbase_ref[p, i], vwin[slot],
+                                x_ref[...], r=r, c=c, ncols=ncols_pad,
+                                vmax=vmax, cmap=cmap_ref[...])
+    else:
+        contrib = _decode_chunk(mask_ref[0, 0], voff_ref[0, 0], col_ref[0, 0],
+                                vwin[slot], xwin[slot], r=r, c=c, ncols=xw,
+                                vmax=vmax)
     k = jnp.arange(r * c, dtype=jnp.int32)
     yrow = jnp.clip(row_ref[0, 0][:, None] + (k // c)[None, :], 0, pr - 1)
     y = y_ref[...]
@@ -276,14 +357,20 @@ def _spmv_panel_db_kernel(vbase_ref, xbase_ref, col_ref, mask_ref, voff_ref,
     static_argnames=("r", "c", "cb", "vmax", "xw", "pr", "nrows",
                      "ncols_pad", "interpret"))
 def spmv_pallas_panels_db(chunk_vbase, chunk_xbase, chunk_col, chunk_mask,
-                          chunk_voff, chunk_row, values, x, *, r: int, c: int,
-                          cb: int, vmax: int, xw: int, pr: int, nrows: int,
-                          ncols_pad: int, interpret: bool = False):
+                          chunk_voff, chunk_row, values, x, col_map=None, *,
+                          r: int, c: int, cb: int, vmax: int, xw: int,
+                          pr: int, nrows: int, ncols_pad: int,
+                          interpret: bool = False):
+    """``col_map`` fuses a column permutation into the decode, exactly as in
+    :func:`spmv_pallas_panels`."""
     npanels, nchunks = chunk_vbase.shape
     xp = jnp.pad(x, (0, max(0, ncols_pad - x.shape[0])))
+    xspecs, xops, fused = _panel_fused_operands(xp, col_map, ncols_pad)
     kernel = functools.partial(_spmv_panel_db_kernel, r=r, c=c, cb=cb,
-                               vmax=vmax, xw=xw, pr=pr, nchunks=nchunks,
-                               nsteps=npanels * nchunks)
+                               vmax=vmax, xw=xw, pr=pr, ncols_pad=ncols_pad,
+                               nchunks=nchunks, nsteps=npanels * nchunks,
+                               fused_cols=fused)
+    scratch = _panel_scratch(fused, 2, vmax, values.dtype, (xw,), x.dtype)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(npanels, nchunks),
@@ -293,15 +380,9 @@ def spmv_pallas_panels_db(chunk_vbase, chunk_xbase, chunk_col, chunk_mask,
             pl.BlockSpec((1, 1, cb), lambda p, i, vb, xb: (p, i, 0)),
             pl.BlockSpec((1, 1, cb), lambda p, i, vb, xb: (p, i, 0)),
             pl.BlockSpec(memory_space=pl.ANY),
-            pl.BlockSpec(memory_space=pl.ANY),
-        ],
+        ] + xspecs,
         out_specs=pl.BlockSpec((pr,), lambda p, i, vb, xb: (p,)),
-        scratch_shapes=[
-            pltpu.VMEM((2, vmax), values.dtype),
-            pltpu.VMEM((2, xw), x.dtype),
-            pltpu.SemaphoreType.DMA((2,)),
-            pltpu.SemaphoreType.DMA((2,)),
-        ],
+        scratch_shapes=scratch,
     )
     y = pl.pallas_call(
         kernel,
@@ -311,7 +392,7 @@ def spmv_pallas_panels_db(chunk_vbase, chunk_xbase, chunk_col, chunk_mask,
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary")),
     )(chunk_vbase, chunk_xbase, chunk_col, chunk_mask.astype(jnp.int32),
-      chunk_voff, chunk_row, values, xp)
+      chunk_voff, chunk_row, values, *xops)
     return y[:nrows]
 
 
@@ -373,6 +454,321 @@ def spmv_tail_pallas(tail_xbase, rows, cols, vals, x, *, pr: int, xw: int,
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",)),
     )(tail_xbase.astype(jnp.int32), rows, cols, vals, xp)
+    return y[:nrows]
+
+
+# ----------------------------------------------------------------------------
+# Descriptor lowering: precomputed gather tables, no in-kernel mask decode
+# ----------------------------------------------------------------------------
+
+def _desc_contrib(valid, vidx, xcol, vwin, x):
+    """The descriptor inner loop: two gathers + a masked FMA. The bit
+    expansion and rank cumsum of ``_decode_chunk`` were hoisted to build
+    time (``repro.core.formats.chunk_descriptors``); a fused column
+    permutation is already folded into ``xcol``."""
+    vals = jnp.take(vwin, vidx, axis=0) * valid.astype(vwin.dtype)
+    return vals * jnp.take(x, xcol, axis=0)
+
+
+def _spmv_desc_kernel(vbase_ref, valid_ref, vidx_ref, xcol_ref, yrow_ref,
+                      values_hbm, x_ref, y_ref, vwin, sem, *, vmax: int):
+    """Whole-vector descriptor SpMV: one chunk per grid step, value window
+    DMA'd exactly like the mask kernel, but the decode is gone."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    copy = pltpu.make_async_copy(values_hbm.at[pl.ds(vbase_ref[i], vmax)],
+                                 vwin, sem)
+    copy.start()
+    copy.wait()
+
+    contrib = _desc_contrib(valid_ref[0], vidx_ref[0], xcol_ref[0],
+                            vwin[...], x_ref[...])
+    y = y_ref[...]
+    y_ref[...] = y.at[yrow_ref[0].reshape(-1)].add(contrib.reshape(-1))
+
+
+def _desc_whole_specs(cb, rc, ncols):
+    return [
+        pl.BlockSpec((1, cb, rc), lambda i, vb: (i, 0, 0)),   # desc_valid
+        pl.BlockSpec((1, cb, rc), lambda i, vb: (i, 0, 0)),   # desc_vidx
+        pl.BlockSpec((1, cb, rc), lambda i, vb: (i, 0, 0)),   # desc_xcol
+        pl.BlockSpec((1, cb, rc), lambda i, vb: (i, 0, 0)),   # desc_yrow
+        pl.BlockSpec(memory_space=pl.ANY),                    # values (HBM)
+        pl.BlockSpec((ncols,), lambda i, vb: (0,)),           # x (VMEM)
+    ]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("r", "c", "cb", "vmax", "nrows", "ncols", "interpret"))
+def spmv_pallas_desc(chunk_vbase, desc_valid, desc_vidx, desc_xcol,
+                     desc_yrow, values, x, *, r: int, c: int, cb: int,
+                     vmax: int, nrows: int, ncols: int,
+                     interpret: bool = False) -> jax.Array:
+    """Whole-vector SpMV over build-time descriptors (lowering="descriptor").
+
+    The per-chunk tables carry everything the mask kernel recomputes
+    (validity, value index, x column, y row -- column permutations already
+    folded in), so there is no ``col_map`` input and no bit/cumsum work."""
+    nchunks = desc_valid.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nchunks,),
+        in_specs=_desc_whole_specs(cb, r * c, ncols),
+        out_specs=pl.BlockSpec((nrows,), lambda i, vb: (0,)),
+        scratch_shapes=[
+            pltpu.VMEM((vmax,), values.dtype),
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_spmv_desc_kernel, vmax=vmax),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nrows,), values.dtype),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",)),
+    )(chunk_vbase, desc_valid, desc_vidx, desc_xcol, desc_yrow, values, x)
+
+
+def _spmv_desc_db_kernel(vbase_ref, valid_ref, vidx_ref, xcol_ref, yrow_ref,
+                         values_hbm, x_ref, y_ref, vwin, sem, *, vmax: int,
+                         nchunks: int):
+    """Double-buffered whole-vector descriptor SpMV (same pipelining as
+    ``_spmv_db_kernel``)."""
+    i = pl.program_id(0)
+    slot = jax.lax.rem(i, jnp.int32(2))
+
+    @pl.when(i == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+        pltpu.make_async_copy(values_hbm.at[pl.ds(vbase_ref[0], vmax)],
+                              vwin.at[0], sem.at[0]).start()
+
+    @pl.when(i + 1 < nchunks)
+    def _prefetch_next():
+        nxt = jax.lax.rem(i + jnp.int32(1), jnp.int32(2))
+        pltpu.make_async_copy(values_hbm.at[pl.ds(vbase_ref[i + 1], vmax)],
+                              vwin.at[nxt], sem.at[nxt]).start()
+
+    pltpu.make_async_copy(values_hbm.at[pl.ds(vbase_ref[i], vmax)],
+                          vwin.at[slot], sem.at[slot]).wait()
+
+    contrib = _desc_contrib(valid_ref[0], vidx_ref[0], xcol_ref[0],
+                            vwin[slot], x_ref[...])
+    y = y_ref[...]
+    y_ref[...] = y.at[yrow_ref[0].reshape(-1)].add(contrib.reshape(-1))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("r", "c", "cb", "vmax", "nrows", "ncols", "interpret"))
+def spmv_pallas_desc_db(chunk_vbase, desc_valid, desc_vidx, desc_xcol,
+                        desc_yrow, values, x, *, r: int, c: int, cb: int,
+                        vmax: int, nrows: int, ncols: int,
+                        interpret: bool = False) -> jax.Array:
+    """Double-buffered :func:`spmv_pallas_desc`."""
+    nchunks = desc_valid.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nchunks,),
+        in_specs=_desc_whole_specs(cb, r * c, ncols),
+        out_specs=pl.BlockSpec((nrows,), lambda i, vb: (0,)),
+        scratch_shapes=[
+            pltpu.VMEM((2, vmax), values.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_spmv_desc_db_kernel, vmax=vmax, nchunks=nchunks),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nrows,), values.dtype),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",)),
+    )(chunk_vbase, desc_valid, desc_vidx, desc_xcol, desc_yrow, values, x)
+
+
+def _spmv_panel_desc_kernel(vbase_ref, xbase_ref, valid_ref, vidx_ref,
+                            xcol_ref, yrow_ref, values_hbm, x_ref, *rest,
+                            vmax: int, xw: int, ncols_pad: int,
+                            fused_cols: bool = False):
+    """Panel descriptor SpMV step: value window DMA + two gathers + masked
+    FMA into the panel's (pr,) tile. ``desc_xcol`` is window-relative; the
+    fused variant globalises it with ``xbase`` and routes through the
+    column map against fully-VMEM-resident original-order x."""
+    if fused_cols:
+        cmap_ref, y_ref, vwin, vsem = rest
+    else:
+        y_ref, vwin, xwin, vsem, xsem = rest
+    p = pl.program_id(0)
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    vcopy = pltpu.make_async_copy(
+        values_hbm.at[pl.ds(vbase_ref[p, i], vmax)], vwin, vsem)
+    vcopy.start()
+    if not fused_cols:
+        xcopy = pltpu.make_async_copy(
+            x_ref.at[pl.ds(xbase_ref[p, i], xw)], xwin, xsem)
+        xcopy.start()
+    vcopy.wait()
+    if not fused_cols:
+        xcopy.wait()
+
+    if fused_cols:
+        xcol = jnp.clip(xcol_ref[0, 0] + xbase_ref[p, i], 0, ncols_pad - 1)
+        xcol = jnp.take(cmap_ref[...], xcol, axis=0)
+        contrib = _desc_contrib(valid_ref[0, 0], vidx_ref[0, 0], xcol,
+                                vwin[...], x_ref[...])
+    else:
+        contrib = _desc_contrib(valid_ref[0, 0], vidx_ref[0, 0],
+                                xcol_ref[0, 0], vwin[...], xwin[...])
+    y = y_ref[...]
+    y_ref[...] = y.at[yrow_ref[0, 0].reshape(-1)].add(contrib.reshape(-1))
+
+
+def _desc_panel_specs(cb, rc, xspecs):
+    return [
+        pl.BlockSpec((1, 1, cb, rc), lambda p, i, vb, xb: (p, i, 0, 0)),
+        pl.BlockSpec((1, 1, cb, rc), lambda p, i, vb, xb: (p, i, 0, 0)),
+        pl.BlockSpec((1, 1, cb, rc), lambda p, i, vb, xb: (p, i, 0, 0)),
+        pl.BlockSpec((1, 1, cb, rc), lambda p, i, vb, xb: (p, i, 0, 0)),
+        pl.BlockSpec(memory_space=pl.ANY),                    # values (HBM)
+    ] + xspecs
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("r", "c", "cb", "vmax", "xw", "pr", "nrows",
+                     "ncols_pad", "interpret"))
+def spmv_pallas_panels_desc(chunk_vbase, chunk_xbase, desc_valid, desc_vidx,
+                            desc_xcol, desc_yrow, values, x, col_map=None, *,
+                            r: int, c: int, cb: int, vmax: int, xw: int,
+                            pr: int, nrows: int, ncols_pad: int,
+                            interpret: bool = False) -> jax.Array:
+    """Row-panel-tiled descriptor SpMV (lowering="descriptor")."""
+    npanels, nchunks = chunk_vbase.shape
+    xp = jnp.pad(x, (0, max(0, ncols_pad - x.shape[0])))
+    xspecs, xops, fused = _panel_fused_operands(xp, col_map, ncols_pad)
+    scratch = _panel_scratch(fused, 1, vmax, values.dtype, (xw,), x.dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                  # chunk_vbase, chunk_xbase
+        grid=(npanels, nchunks),
+        in_specs=_desc_panel_specs(cb, r * c, xspecs),
+        out_specs=pl.BlockSpec((pr,), lambda p, i, vb, xb: (p,)),
+        scratch_shapes=scratch,
+    )
+    y = pl.pallas_call(
+        functools.partial(_spmv_panel_desc_kernel, vmax=vmax, xw=xw,
+                          ncols_pad=ncols_pad, fused_cols=fused),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((npanels * pr,), values.dtype),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+    )(chunk_vbase, chunk_xbase, desc_valid, desc_vidx, desc_xcol, desc_yrow,
+      values, *xops)
+    return y[:nrows]
+
+
+def _spmv_panel_desc_db_kernel(vbase_ref, xbase_ref, valid_ref, vidx_ref,
+                               xcol_ref, yrow_ref, values_hbm, x_ref, *rest,
+                               vmax: int, xw: int, ncols_pad: int,
+                               nchunks: int, nsteps: int,
+                               fused_cols: bool = False):
+    """Double-buffered panel descriptor SpMV (pipelining as the mask db
+    kernel; with fused cols only the value window double-buffers)."""
+    if fused_cols:
+        cmap_ref, y_ref, vwin, vsem = rest
+    else:
+        y_ref, vwin, xwin, vsem, xsem = rest
+    p = pl.program_id(0)
+    i = pl.program_id(1)
+    t = p * nchunks + i
+    slot = jax.lax.rem(t, jnp.int32(2))
+
+    @pl.when(i == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    @pl.when(t == 0)
+    def _first():
+        pltpu.make_async_copy(values_hbm.at[pl.ds(vbase_ref[0, 0], vmax)],
+                              vwin.at[0], vsem.at[0]).start()
+        if not fused_cols:
+            pltpu.make_async_copy(x_ref.at[pl.ds(xbase_ref[0, 0], xw)],
+                                  xwin.at[0], xsem.at[0]).start()
+
+    @pl.when(t + 1 < nsteps)
+    def _prefetch_next():
+        nxt = jax.lax.rem(t + jnp.int32(1), jnp.int32(2))
+        pn = (t + jnp.int32(1)) // jnp.int32(nchunks)
+        inn = jax.lax.rem(t + jnp.int32(1), jnp.int32(nchunks))
+        pltpu.make_async_copy(values_hbm.at[pl.ds(vbase_ref[pn, inn], vmax)],
+                              vwin.at[nxt], vsem.at[nxt]).start()
+        if not fused_cols:
+            pltpu.make_async_copy(x_ref.at[pl.ds(xbase_ref[pn, inn], xw)],
+                                  xwin.at[nxt], xsem.at[nxt]).start()
+
+    pltpu.make_async_copy(values_hbm.at[pl.ds(vbase_ref[p, i], vmax)],
+                          vwin.at[slot], vsem.at[slot]).wait()
+    if not fused_cols:
+        pltpu.make_async_copy(x_ref.at[pl.ds(xbase_ref[p, i], xw)],
+                              xwin.at[slot], xsem.at[slot]).wait()
+
+    if fused_cols:
+        xcol = jnp.clip(xcol_ref[0, 0] + xbase_ref[p, i], 0, ncols_pad - 1)
+        xcol = jnp.take(cmap_ref[...], xcol, axis=0)
+        contrib = _desc_contrib(valid_ref[0, 0], vidx_ref[0, 0], xcol,
+                                vwin[slot], x_ref[...])
+    else:
+        contrib = _desc_contrib(valid_ref[0, 0], vidx_ref[0, 0],
+                                xcol_ref[0, 0], vwin[slot], xwin[slot])
+    y = y_ref[...]
+    y_ref[...] = y.at[yrow_ref[0, 0].reshape(-1)].add(contrib.reshape(-1))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("r", "c", "cb", "vmax", "xw", "pr", "nrows",
+                     "ncols_pad", "interpret"))
+def spmv_pallas_panels_desc_db(chunk_vbase, chunk_xbase, desc_valid,
+                               desc_vidx, desc_xcol, desc_yrow, values, x,
+                               col_map=None, *, r: int, c: int, cb: int,
+                               vmax: int, xw: int, pr: int, nrows: int,
+                               ncols_pad: int,
+                               interpret: bool = False) -> jax.Array:
+    """Double-buffered :func:`spmv_pallas_panels_desc`."""
+    npanels, nchunks = chunk_vbase.shape
+    xp = jnp.pad(x, (0, max(0, ncols_pad - x.shape[0])))
+    xspecs, xops, fused = _panel_fused_operands(xp, col_map, ncols_pad)
+    scratch = _panel_scratch(fused, 2, vmax, values.dtype, (xw,), x.dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(npanels, nchunks),
+        in_specs=_desc_panel_specs(cb, r * c, xspecs),
+        out_specs=pl.BlockSpec((pr,), lambda p, i, vb, xb: (p,)),
+        scratch_shapes=scratch,
+    )
+    y = pl.pallas_call(
+        functools.partial(_spmv_panel_desc_db_kernel, vmax=vmax, xw=xw,
+                          ncols_pad=ncols_pad, nchunks=nchunks,
+                          nsteps=npanels * nchunks, fused_cols=fused),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((npanels * pr,), values.dtype),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+    )(chunk_vbase, chunk_xbase, desc_valid, desc_vidx, desc_xcol, desc_yrow,
+      values, *xops)
     return y[:nrows]
 
 

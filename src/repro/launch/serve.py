@@ -10,10 +10,13 @@ layer built in-process gets an auto-tuned (layout, pr, xw, cb).
 ``--vocab-spmv DENSITY`` additionally benches a magnitude-pruned
 SparseLinear vocab projection at decode shape (batch 1-vector SpMV) using
 the tuned configuration; ``--panel pr,xw,cb`` is the explicit escape hatch
-that overrides the tuner for that bench, and ``--reorder STRATEGY``
+that overrides the tuner for that bench, ``--reorder STRATEGY``
 (sigma / rcm / colwindow / auto) permutes the pruned weight through the
 reordering subsystem (repro.core.reorder) before the layout is built --
-the layer's call signature is unchanged, the permutation is internal.
+the layer's call signature is unchanged, the permutation is internal --
+and ``--lowering mask|descriptor|auto`` selects the kernel variant (the
+bit-mask decode vs build-time descriptors; auto lets the tuner/cost model
+arbitrate).
 """
 from __future__ import annotations
 
@@ -45,6 +48,11 @@ def main(argv=None):
     ap.add_argument("--reorder", default="",
                     help="reordering strategy for --vocab-spmv (sigma, rcm, "
                          "colwindow, auto; empty = none)")
+    ap.add_argument("--lowering", default="auto",
+                    choices=["auto", "mask", "descriptor"],
+                    help="kernel lowering for --vocab-spmv: the bit-mask "
+                         "decode, build-time descriptors, or the "
+                         "tuner/cost-model pick (default)")
     args = ap.parse_args(argv)
 
     from repro.core import selector as S
@@ -97,6 +105,7 @@ def main(argv=None):
             kw = dict(layout="panels", pr=pr, xw=xw, cb=cb)
         if args.reorder:
             kw["reorder"] = args.reorder
+        kw["lowering"] = args.lowering
         rng = np.random.default_rng(0)
         w = rng.standard_normal((cfg.vocab, cfg.d_model)).astype(np.float32)
         lin = SparseLinear.from_dense(w, density=args.vocab_spmv,
@@ -120,7 +129,7 @@ def main(argv=None):
         else:
             reo_str = ""
         cfg_str = ",".join(f"{k}={v}" for k, v in h.meta
-                           if k in ("pr", "xw", "cb"))
+                           if k in ("pr", "xw", "cb", "lowering"))
         src = ("explicit --panel" if args.panel
                else ("tuned" if args.records else "defaults"))
         print(f"vocab_spmv[{cfg.vocab}x{cfg.d_model}@{args.vocab_spmv}]: "

@@ -393,8 +393,12 @@ def test_plan_trace_golden():
     tune, reo, lay, build = h.trace
     assert tune == {"pass": "tune", "source": "no-store"}
     assert reo == {"pass": "reorder", "strategy": "", "applied": False}
-    assert lay == {"pass": "layout", "layout": "whole_vector",
-                   "reason": "vmem-fit"}
+    assert lay["pass"] == "layout" and lay["layout"] == "whole_vector"
+    assert lay["reason"] == "vmem-fit"
+    # no store: the lowering comes from the registry's cost arbitration
+    assert lay["lowering_reason"] == "cost-model"
+    assert lay["lowering"] in ("mask", "descriptor")
+    assert lay["lowering"] == h.lowering == build["lowering"]
     assert build["layout"] == "whole_vector" and build["cb"] == 256
     assert build["rows_fused"] is False and build["nnz"] == mat.nnz
     # the trace is stable JSON in the static aux -> jit-cache friendly
@@ -414,8 +418,11 @@ def test_plan_trace_golden():
         == ("panels", 16, 32, 8)
     assert t2[1]["pass"] == "reorder" and t2[1]["applied"] is True
     assert t2[1]["strategy"] == "rcm" and t2[1]["stats"]["applied"] == 1.0
+    # the tuned config carries the lowering it measured under (v3 records
+    # default to "mask"), so no cost-model arbitration runs
+    assert t2[0]["lowering"] == "mask"
     assert t2[2] == {"pass": "layout", "layout": "panels",
-                     "reason": "requested"}
+                     "reason": "requested", "lowering": "mask"}
     assert h2.strategy == "rcm" and h2.is_reordered
     # the test split delegates tuning to its multi sub-plan
     ht = ops.prepare_test(F.csr_to_spc5(scr, 1, 8), dtype=np.float32,

@@ -173,14 +173,17 @@ def test_roundtrip_all_strategies_and_layouts(strategy, layout):
 
 def test_fused_pallas_paths_match_oracle():
     """Whole-vector Pallas kernels with fused col_map + fused chunk_row
-    scatter vs the (already-verified) jnp path and the dense oracle."""
+    scatter vs the (already-verified) jnp path and the dense oracle.
+    Pinned to the mask lowering: the descriptor lowering folds the column
+    permutation into its static tables instead (col_perm is None there --
+    covered by tests/test_descriptor.py)."""
     csr = scrambled(160, band=6, seed=13)
     d = csr.to_dense()
     x = np.random.default_rng(3).standard_normal(160).astype(np.float32)
     tgt = d.astype(np.float64) @ x.astype(np.float64)
     mat = F.csr_to_spc5(csr, 2, 4)
     h = ops.prepare(mat, layout="whole_vector", dtype=np.float32,
-                    reorder="rcm")
+                    reorder="rcm", lowering="mask")
     assert h.is_reordered
     assert h.rows_fused and h.row_iperm is None     # scatter fused away
     assert h.col_perm is not None
@@ -192,7 +195,7 @@ def test_fused_pallas_paths_match_oracle():
     Y = np.asarray(ops.spmm(h, jnp.asarray(X), use_pallas=True,
                             interpret=True, nvt=4))
     np.testing.assert_allclose(Y, d @ X, atol=5e-3)
-    # panel layout: explicit gathers (pallas panel kernels untouched)
+    # panel layout: fused col_map decode (PR 5; no materialised x gather)
     hp = ops.prepare(mat, layout="panels", dtype=np.float32, reorder="rcm",
                      **GEOM)
     if hp.is_reordered:
