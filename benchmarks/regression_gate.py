@@ -75,6 +75,10 @@ def compare(current: dict, prior: dict, threshold: float = 0.25,
             failures.append(
                 f"section {name!r} regressed to {ratio:.2f}x of the prior "
                 f"run ({g_pri:.3f} -> {g_cur:.3f} geomean gflops)")
+    for name in sorted(set(pri) - set(cur)):
+        # removed benches must not block the PR that removes them; a note
+        # in the log is enough to catch accidental drops
+        print(f"gate: section {name!r} missing in current -- skipped")
     return failures
 
 

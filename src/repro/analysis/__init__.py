@@ -1,1 +1,4 @@
 from .hlo import analyze_hlo, HloCost  # noqa: F401
+from .verify import (  # noqa: F401
+    PlanVerificationError, VerifyReport, Violation, plan_rule_names,
+    verify_plan, verify_records)

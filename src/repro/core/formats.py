@@ -353,8 +353,8 @@ def csr_to_spc5(csr: CSRMatrix, r: int, c: int) -> SPC5Matrix:
     colidx = (np.concatenate(all_colidx) if all_colidx else np.zeros(0, np.int32))
     masks = (np.concatenate(all_masks) if all_masks else np.zeros(0, np.uint32))
     values = (np.concatenate(all_values) if all_values else np.zeros(0, csr.values.dtype))
-    pop = popcount_u32(masks).astype(np.int64)
-    voffset = np.concatenate([[0], np.cumsum(pop)[:-1]]) if masks.shape[0] else np.zeros(0, np.int64)
+    voffset = (exclusive_prefix_popcount(masks) if masks.shape[0]
+               else np.zeros(0, np.int64))
     return SPC5Matrix((nrows, ncols), r, c, rowptr, colidx.astype(np.int32),
                       masks, voffset.astype(np.int64), values)
 
@@ -403,6 +403,16 @@ def popcount_u32(x: np.ndarray) -> np.ndarray:
     for k in range(32):
         out += ((x >> np.uint32(k)) & np.uint32(1)).astype(np.int32)
     return out
+
+
+def exclusive_prefix_popcount(masks: np.ndarray, axis: int = -1) -> np.ndarray:
+    """Exclusive prefix sum of mask popcounts along ``axis``: the offset
+    each block's packed values start at (the paper's voffset). The single
+    definition shared by the builders and the static verifier
+    (``repro.analysis.verify``), so "voff is the exclusive prefix popcount"
+    is an invariant with one implementation to agree with."""
+    pop = popcount_u32(np.asarray(masks)).astype(np.int64)
+    return np.cumsum(pop, axis=axis) - pop
 
 
 def block_stats(csr: CSRMatrix, r: int, c: int) -> Tuple[int, float]:

@@ -39,6 +39,7 @@ Adding a layout is one :func:`register_layout` call -- see
 from __future__ import annotations
 
 import dataclasses
+import difflib
 import json
 from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
@@ -73,12 +74,20 @@ _LOWERING_NAMES = (LOWERING_MASK, LOWERING_DESC)
 _LOWERING_SENTINELS = ("auto", "")
 
 
+def _did_you_mean(name: str, candidates) -> str:
+    """Typo hint for the canonicalizers' errors ('' when nothing is close)."""
+    close = difflib.get_close_matches(str(name), list(candidates), n=1,
+                                      cutoff=0.6)
+    return f" -- did you mean {close[0]!r}?" if close else ""
+
+
 def canonical_lowering(name: str) -> str:
     """Validate a lowering name ("auto"/"" pass through, like layouts)."""
     if name in _LOWERING_SENTINELS or name in _LOWERING_NAMES:
         return name
-    raise ValueError(f"unknown lowering {name!r}; "
-                     f"expected one of {_LOWERING_NAMES} or 'auto'")
+    raise ValueError(
+        f"unknown lowering {name!r}; expected one of {_LOWERING_NAMES} or "
+        f"'auto'{_did_you_mean(name, _LOWERING_NAMES)}")
 
 #: Legacy spellings accepted by :func:`canonical_layout` (old JSONL stores
 #: and pre-plan call sites used "whole" for the whole-vector layout).
@@ -104,7 +113,8 @@ def canonical_layout(name: str) -> str:
         return _LAYOUT_ALIASES[name]
     raise ValueError(
         f"unknown layout {name!r}; expected one of {layout_names()} "
-        f"(or a legacy alias {sorted(_LAYOUT_ALIASES)})")
+        f"(or a legacy alias {sorted(_LAYOUT_ALIASES)})"
+        f"{_did_you_mean(name, list(_REGISTRY) + sorted(_LAYOUT_ALIASES))}")
 
 
 # ----------------------------------------------------------------------------
@@ -193,16 +203,29 @@ def layout_names() -> Tuple[str, ...]:
 VMEM_WHOLE_VECTOR_BUDGET = 2 * 2**20
 
 
-def fits_whole_vector(nrows: int, ncols: int, itemsize: int = 4,
+def _itemsize(itemsize) -> int:
+    """Normalise an itemsize-or-dtype-like to bytes, so every budget check
+    runs on the plan's ACTUAL value dtype (np.float64 weights must not be
+    budgeted as 4-byte -- the prep for the ROADMAP dtype axis)."""
+    if isinstance(itemsize, (int, np.integer)):
+        return int(itemsize)
+    return int(np.dtype(itemsize).itemsize)
+
+
+def fits_whole_vector(nrows: int, ncols: int, itemsize=4,
                       budget_bytes: int = VMEM_WHOLE_VECTOR_BUDGET,
                       nvec: int = 1) -> bool:
     """Layout selection rule: whole-vector only when x AND y fit the budget.
 
+    ``itemsize`` is the value size in bytes, or anything ``np.dtype``
+    accepts (a dtype, "float64", np.float32, ...) -- callers that know the
+    plan dtype should pass it directly rather than assuming 4 bytes.
     ``nvec`` is the widest multi-vector batch the handle will see: the
     whole-vector SpMM kernel holds (ncols, nvt) and (nrows, nvt) tiles with
     nvt = min(nvec, 128), so the footprint scales by that factor.
     """
-    return _cost_whole(nrows, ncols, itemsize, nvec) <= budget_bytes
+    return _cost_whole(nrows, ncols, _itemsize(itemsize),
+                       nvec) <= budget_bytes
 
 
 def _on_tpu() -> bool:
@@ -442,8 +465,11 @@ def _tune_pass(st: PlanState) -> None:
                          pr=int(cfg.pr or 0), xw=int(cfg.xw or 0),
                          cb=int(cfg.cb or 0), reorder=cfg.reorder,
                          lowering=cfg.lowering, demoted=demoted)
+            if demoted:
+                entry["demoted_reason"] = "vmem-budget"
             if lowering_demoted:
                 entry["lowering_demoted"] = True
+                entry["lowering_demoted_reason"] = "unregistered-lowering"
     st.trace.append(entry)
 
 
@@ -516,6 +542,7 @@ def _layout_pass(st: PlanState) -> None:
                 and st.lowering not in spec.lowerings):
             st.lowering = LOWERING_MASK
             entry["lowering_demoted"] = True
+            entry["lowering_demoted_reason"] = "unregistered-lowering"
         if st.lowering in _LOWERING_SENTINELS:
             st.lowering = min(
                 spec.lowerings,
@@ -564,7 +591,8 @@ def make_plan(mat: F.SPC5Matrix, *, layout: str = "auto",
               tune: bool = True,
               reorder: Union[None, str, RE.Reordering] = None,
               multi_layout: str = "auto",
-              lowering: str = "auto") -> SPC5Plan:
+              lowering: str = "auto",
+              verify: Union[bool, Callable] = False) -> SPC5Plan:
     """The plan pipeline: tune -> reorder -> layout -> build.
 
     This is the single entry point behind ``ops.prepare`` /
@@ -576,6 +604,12 @@ def make_plan(mat: F.SPC5Matrix, *, layout: str = "auto",
     the kernel variant ("mask" | "descriptor" | "auto"): "auto" takes the
     tuner's pick when a store is present, else the :func:`lowering_cost`
     arbitration.
+
+    ``verify`` is the opt-in static-analysis hook: ``True`` runs
+    ``repro.analysis.verify.verify_plan`` on the finished plan and raises
+    :class:`~repro.analysis.verify.PlanVerificationError` on any invariant
+    violation; a callable receives the :class:`VerifyReport` instead (for
+    cache-admission policies that want to log rather than raise).
     """
     st = PlanState(mat=mat, layout=canonical_layout(layout),
                    multi_layout=canonical_layout(multi_layout),
@@ -585,7 +619,15 @@ def make_plan(mat: F.SPC5Matrix, *, layout: str = "auto",
     _tune_pass(st)
     _reorder_pass(st)
     _layout_pass(st)
-    return _build_pass(st)
+    plan = _build_pass(st)
+    if verify:
+        from repro.analysis.verify import verify_plan
+        report = verify_plan(plan, nvec=nvec)
+        if callable(verify):
+            verify(report)
+        else:
+            report.raise_if_failed()
+    return plan
 
 
 # ----------------------------------------------------------------------------
@@ -1319,6 +1361,7 @@ def shard_plan(mat: F.SPC5Matrix, ndev: int, *, cb: Optional[int] = None,
     if (lowering == LOWERING_DESC
             or (config is not None and config.lowering == LOWERING_DESC)):
         sentry["lowering_demoted"] = True
+        sentry["lowering_demoted_reason"] = "mask-only-shard-stacking"
     trace.append(sentry)
     row_start = jnp.asarray(row_starts)
     if mesh is not None:

@@ -27,6 +27,7 @@ import dataclasses
 import glob
 import json
 import os
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -245,8 +246,11 @@ class RecordStore:
     def __init__(self, path: Optional[str] = None):
         self.path = path
         self.records: List[Record] = []
+        #: malformed entries skipped while loading (store metadata; the
+        #: verifier's ``store-load`` rule flags a nonzero count)
+        self.skipped: int = 0
         if path and os.path.exists(path):
-            self.records = _load_any(path)
+            self.records, self.skipped = _load_any(path)
 
     def add(self, kernel: str, avg: float, workers: int, gflops: float,
             matrix: str = "", pr: int = 0, xw: int = 0, cb: int = 0,
@@ -330,50 +334,96 @@ class RecordStore:
         return seen
 
 
-def _load_jsonl(path: str) -> List[Record]:
+def _record_from(obj, path: str, where: str) -> Optional[Record]:
+    """One record from a decoded JSON object, or None when malformed (the
+    caller counts the skip). CI artifact stores accumulate across runs;
+    one truncated or hand-edited line must not poison the whole merge."""
+    try:
+        if not isinstance(obj, dict):
+            raise TypeError(f"expected an object, got {type(obj).__name__}")
+        return Record(**obj)
+    except (TypeError, ValueError) as e:
+        warnings.warn(f"{path}: skipping malformed record {where}: {e}",
+                      stacklevel=2)
+        return None
+
+
+def _load_jsonl(path: str) -> Tuple[List[Record], int]:
+    """(records, skipped-line count) of one JSONL store file."""
     records: List[Record] = []
+    skipped = 0
     with open(path) as f:
         first = f.readline()
         if not first.strip():
-            return records
-        head = json.loads(first)
+            return records, skipped
+        try:
+            head = json.loads(first)
+        except json.JSONDecodeError as e:
+            warnings.warn(f"{path}: skipping malformed line 1: {e}",
+                          stacklevel=2)
+            head, skipped = None, skipped + 1
         if isinstance(head, dict) and "spc5_records_version" in head:
             ver = head["spc5_records_version"]
             if ver > RECORDS_VERSION:
                 raise ValueError(
                     f"{path}: records version {ver} is newer than supported "
                     f"{RECORDS_VERSION}")
-        else:                       # headerless JSONL: first line is a record
-            records.append(Record(**head))
-        for line in f:
-            if line.strip():
-                records.append(Record(**json.loads(line)))
-    return records
+        elif head is not None:      # headerless JSONL: first line is a record
+            rec = _record_from(head, path, "line 1")
+            if rec is None:
+                skipped += 1
+            else:
+                records.append(rec)
+        for lineno, line in enumerate(f, start=2):
+            if not line.strip():
+                continue
+            try:
+                obj = json.loads(line)
+            except json.JSONDecodeError as e:
+                warnings.warn(f"{path}: skipping malformed line {lineno}: "
+                              f"{e}", stacklevel=2)
+                skipped += 1
+                continue
+            rec = _record_from(obj, path, f"line {lineno}")
+            if rec is None:
+                skipped += 1
+            else:
+                records.append(rec)
+    return records, skipped
 
 
-def _load_any(path: str) -> List[Record]:
+def _load_any(path: str) -> Tuple[List[Record], int]:
     """Load one store file: legacy JSON array, versioned JSONL, or a
     ``BENCH_spmv.json`` payload (whose ``records`` list uses the same
     schema) -- so pointing at a downloaded CI artifact directory Just Works.
+    Returns ``(records, skipped)``; malformed entries are skipped with a
+    warning, not fatal (see :func:`load_records`).
     """
     try:                                    # whole-file JSON first: array or
         with open(path) as f:               # a BENCH payload (indented dict)
             payload = json.load(f)
     except json.JSONDecodeError:
         return _load_jsonl(path)            # line-delimited store
+
+    def from_list(objs):
+        recs = [_record_from(o, path, f"entry {i}")
+                for i, o in enumerate(objs)]
+        kept = [r for r in recs if r is not None]
+        return kept, len(recs) - len(kept)
+
     if isinstance(payload, list):
-        return [Record(**r) for r in payload]
+        return from_list(payload)
     if isinstance(payload, dict):
         if isinstance(payload.get("records"), list):
             ver = payload.get("version", RECORDS_VERSION)
             if ver > RECORDS_VERSION:
                 raise ValueError(f"{path}: records version {ver} is newer "
                                  f"than supported {RECORDS_VERSION}")
-            return [Record(**r) for r in payload["records"]]
+            return from_list(payload["records"])
         if "spc5_records_version" in payload:
-            return []                       # header-only (empty) JSONL store
+            return [], 0                    # header-only (empty) JSONL store
         if "kernel" in payload:
-            return [Record(**payload)]      # single-line headerless JSONL
+            return from_list([payload])     # single-line headerless JSONL
     raise ValueError(f"{path}: not a recognisable record store")
 
 
@@ -382,7 +432,11 @@ def load_records(path: str) -> RecordStore:
 
     Directories merge every ``*.jsonl``/``*.json`` inside (sorted, so the
     merge is deterministic); exact duplicate records (e.g. the same CI
-    artifact downloaded twice) are dropped.
+    artifact downloaded twice) are dropped. Malformed lines/entries are
+    skipped with a warning each and counted in the returned store's
+    ``skipped`` metadata (``repro.analysis.verify.verify_records`` surfaces
+    a nonzero count) -- one bad line in an accumulated CI artifact must not
+    abort the whole merge.
     """
     store = RecordStore()
     if os.path.isdir(path):
@@ -392,7 +446,9 @@ def load_records(path: str) -> RecordStore:
         files = [path]
     seen = set()
     for fp in files:
-        for r in _load_any(fp):
+        recs, skipped = _load_any(fp)
+        store.skipped += skipped
+        for r in recs:
             key = tuple(dataclasses.asdict(r).items())
             if key not in seen:
                 seen.add(key)

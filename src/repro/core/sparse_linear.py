@@ -75,7 +75,8 @@ class SparseLinear:
                    cb: Optional[int] = None, dtype=None, layout: str = "auto",
                    pr: Optional[int] = None, xw: Optional[int] = None,
                    nvec: int = 128, tune: bool = True,
-                   reorder=None, lowering: str = "auto") -> "SparseLinear":
+                   reorder=None, lowering: str = "auto",
+                   verify=False) -> "SparseLinear":
         """``nvec``: widest activation batch this layer will see -- feeds
         the auto layout's VMEM budget (SpMM tiles are nvt=min(nvec,128)
         wide). Defaults to 128 (one full lane tile) since batch size is
@@ -92,7 +93,9 @@ class SparseLinear:
         original feature order (the handle gathers/scatters internally).
 
         ``lowering`` ("mask" | "descriptor" | "auto") selects the kernel
-        variant, exactly as on ``ops.prepare``."""
+        variant, exactly as on ``ops.prepare``; ``verify`` is the static
+        plan checker hook (``repro.analysis.verify``), also as on
+        ``ops.prepare``."""
         w = prune_by_magnitude(np.asarray(w), density)
         csr = F.csr_from_dense(w)
         if block is None:
@@ -100,7 +103,7 @@ class SparseLinear:
         mat = F.csr_to_spc5(csr, *block)
         h = ops.prepare(mat, cb=cb, dtype=dtype, layout=layout, pr=pr, xw=xw,
                         nvec=nvec, store=store, tune=tune, reorder=reorder,
-                        lowering=lowering)
+                        lowering=lowering, verify=verify)
         b = None if bias is None else jnp.asarray(bias)
         return cls(handle=h, bias=b)
 

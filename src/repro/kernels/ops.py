@@ -54,7 +54,7 @@ def prepare(mat: F.SPC5Matrix, cb: Optional[int] = None, align: int = 8,
             xw: Optional[int] = None, nvec: int = 1,
             store: Optional[S.RecordStore] = None, tune: bool = True,
             reorder: Union[None, str, RE.Reordering] = None,
-            lowering: str = "auto") -> P.SPC5Plan:
+            lowering: str = "auto", verify=False) -> P.SPC5Plan:
     """Build an execution plan for ``mat`` (see ``repro.core.plan``).
 
     ``layout``: a registry key ("whole_vector", "panels", "test"), a legacy
@@ -87,21 +87,25 @@ def prepare(mat: F.SPC5Matrix, cb: Optional[int] = None, align: int = 8,
     (build-time gather tables; bytes-per-nnz traded for the decode FLOPs).
     "auto" (default) takes the tuner's pick when a store is present, else
     the registry's closed-form cost arbitration (``plan.lowering_cost``).
+
+    **Verification**: ``verify=True`` statically proves the finished plan's
+    format/plan invariants (``repro.analysis.verify``) and raises on any
+    violation; a callable receives the ``VerifyReport`` instead.
     """
     return P.make_plan(mat, layout=layout, pr=pr, xw=xw, cb=cb, nvec=nvec,
                        align=align, dtype=dtype, store=store, tune=tune,
-                       reorder=reorder, lowering=lowering)
+                       reorder=reorder, lowering=lowering, verify=verify)
 
 
 def prepare_panels(mat: F.SPC5Matrix, pr: int = 512, cb: int = 64,
                    xw: int = 512, align: int = 8, dtype=None,
-                   lowering: str = "mask") -> P.SPC5Plan:
+                   lowering: str = "mask", verify=False) -> P.SPC5Plan:
     """Row-panel-tiled plan with explicit geometry (no tuning; the mask
     lowering unless requested otherwise, matching this helper's
     fixed-everything contract)."""
     return P.make_plan(mat, layout=P.LAYOUT_PANELS, pr=pr, cb=cb, xw=xw,
                        align=align, dtype=dtype, tune=False,
-                       lowering=lowering)
+                       lowering=lowering, verify=verify)
 
 
 def prepare_test(mat: F.SPC5Matrix, cb: Optional[int] = None, align: int = 8,
@@ -109,7 +113,7 @@ def prepare_test(mat: F.SPC5Matrix, cb: Optional[int] = None, align: int = 8,
                  xw: Optional[int] = None, nvec: int = 1,
                  store: Optional[S.RecordStore] = None, tune: bool = True,
                  reorder: Union[None, str, RE.Reordering] = None,
-                 lowering: str = "auto") -> P.SPC5Plan:
+                 lowering: str = "auto", verify=False) -> P.SPC5Plan:
     """Build the beta(r,c)_test split plan: multi-nnz blocks in the block
     layout + the singleton COO tail (panel-bucketed, with a Pallas tail
     kernel, when the multi part resolves to panels).
@@ -121,7 +125,7 @@ def prepare_test(mat: F.SPC5Matrix, cb: Optional[int] = None, align: int = 8,
     return P.make_plan(mat, layout=P.LAYOUT_TEST, multi_layout=layout,
                        pr=pr, xw=xw, cb=cb, nvec=nvec, align=align,
                        dtype=dtype, store=store, tune=tune, reorder=reorder,
-                       lowering=lowering)
+                       lowering=lowering, verify=verify)
 
 
 def spmv(h: P.SPC5Plan, x: jax.Array, *, use_pallas: Optional[bool] = None,

@@ -32,6 +32,52 @@ from jax.experimental.pallas import tpu as pltpu
 from repro._compat.pallas import CompilerParams as _CompilerParams
 from repro.kernels.spc5_spmv import _panel_scratch
 
+# ----------------------------------------------------------------------------
+# VMEM contracts (read by repro.analysis.verify's "vmem-budget" rule)
+# ----------------------------------------------------------------------------
+
+
+def _nvt(nvec: int) -> int:
+    return min(max(int(nvec), 1), 128)
+
+
+def _vmem_whole_mask(geom, itemsize, nvec=1):
+    # (ncols, nvt) x tile + (nrows, nvt) y tile + double-buffered value
+    # window + chunk metadata + a potential fused col_map
+    return ((geom["nrows"] + geom["ncols"]) * itemsize * _nvt(nvec)
+            + 2 * geom["vmax"] * itemsize + 4 * 4 * geom["cb"]
+            + 4 * geom["ncols"])
+
+
+def _vmem_whole_desc(geom, itemsize, nvec=1):
+    rc = geom["r"] * geom["c"]
+    return ((geom["nrows"] + geom["ncols"]) * itemsize * _nvt(nvec)
+            + 2 * geom["vmax"] * itemsize + 4 * 4 * geom["cb"] * rc)
+
+
+def _vmem_panels_mask(geom, itemsize, nvec=1):
+    # (pr, nvt) y tile + double-buffered (xw, nvt) x slab + value window
+    return ((geom["pr"] + 2 * geom["xw"]) * itemsize * _nvt(nvec)
+            + 2 * geom["vmax"] * itemsize + 4 * 4 * geom["cb"])
+
+
+def _vmem_panels_desc(geom, itemsize, nvec=1):
+    rc = geom["r"] * geom["c"]
+    return ((geom["pr"] + 2 * geom["xw"]) * itemsize * _nvt(nvec)
+            + 2 * geom["vmax"] * itemsize + 4 * 4 * geom["cb"] * rc)
+
+
+#: (layout, lowering) -> fn(geom_dict, itemsize, nvec=1) -> resident bytes
+#: per grid step; the SpMM side of the contracts in
+#: ``spc5_spmv.SPMV_VMEM_CONTRACTS`` (``nvec`` scales the x/y tiles by
+#: nvt = min(nvec, 128), exactly as ``plan.fits_whole_vector`` budgets).
+SPMM_VMEM_CONTRACTS = {
+    ("whole_vector", "mask"): _vmem_whole_mask,
+    ("whole_vector", "descriptor"): _vmem_whole_desc,
+    ("panels", "mask"): _vmem_panels_mask,
+    ("panels", "descriptor"): _vmem_panels_desc,
+}
+
 
 def _spmm_kernel(vbase_ref, col_ref, mask_ref, voff_ref, row_ref, values_hbm,
                  x_ref, *rest, r: int, c: int, cb: int,

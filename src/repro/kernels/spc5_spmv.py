@@ -54,6 +54,56 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro._compat.pallas import CompilerParams as _CompilerParams
 
+# ----------------------------------------------------------------------------
+# VMEM contracts (read by repro.analysis.verify's "vmem-budget" rule)
+# ----------------------------------------------------------------------------
+
+#: Per-core VMEM ceiling the kernels budget against (v5e: 16 MiB minus
+#: compiler headroom; the contracts below must stay safely under it).
+VMEM_LIMIT_BYTES = 16 * 2**20
+
+#: int32 descriptor words per block lane (valid/vidx/xcol/yrow tiles).
+_DESC_TILE_BYTES = 4 * 4
+
+
+def _vmem_whole_mask(geom, itemsize, nvec=1):
+    # x (ncols) + y (nrows) + double-buffered value window + chunk metadata
+    # (4 int32 tables of cb) + a potential fused col_map (ncols int32)
+    return ((geom["nrows"] + geom["ncols"] + 2 * geom["vmax"]) * itemsize
+            + 4 * 4 * geom["cb"] + 4 * geom["ncols"])
+
+
+def _vmem_whole_desc(geom, itemsize, nvec=1):
+    rc = geom["r"] * geom["c"]
+    return ((geom["nrows"] + geom["ncols"] + 2 * geom["vmax"]) * itemsize
+            + _DESC_TILE_BYTES * geom["cb"] * rc)
+
+
+def _vmem_panels_mask(geom, itemsize, nvec=1):
+    # one (pr,) y slice + one (xw,) x window (double-buffered) + the value
+    # window (double-buffered) + chunk metadata -- matrix-size independent
+    return ((geom["pr"] + 2 * geom["xw"] + 2 * geom["vmax"]) * itemsize
+            + 4 * 4 * geom["cb"])
+
+
+def _vmem_panels_desc(geom, itemsize, nvec=1):
+    rc = geom["r"] * geom["c"]
+    return ((geom["pr"] + 2 * geom["xw"] + 2 * geom["vmax"]) * itemsize
+            + _DESC_TILE_BYTES * geom["cb"] * rc)
+
+
+#: (layout, lowering) -> fn(geom_dict, itemsize, nvec=1) -> resident bytes
+#: per grid step. Every (layout, lowering) pair a registered layout can
+#: lower MUST declare its contract here; the static verifier refuses plans
+#: whose declared footprint exceeds :data:`VMEM_LIMIT_BYTES` and the lint's
+#: registry-consistency rule cross-checks coverage against the registry.
+SPMV_VMEM_CONTRACTS = {
+    ("whole_vector", "mask"): _vmem_whole_mask,
+    ("whole_vector", "descriptor"): _vmem_whole_desc,
+    ("panels", "mask"): _vmem_panels_mask,
+    ("panels", "descriptor"): _vmem_panels_desc,
+}
+
 
 def _decode_chunk(mask, voff, col, vwin, x, *, r: int, c: int, ncols: int,
                   vmax: int, cmap=None):

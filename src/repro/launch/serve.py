@@ -53,11 +53,20 @@ def main(argv=None):
                     help="kernel lowering for --vocab-spmv: the bit-mask "
                          "decode, build-time descriptors, or the "
                          "tuner/cost-model pick (default)")
+    ap.add_argument("--verify", action="store_true",
+                    help="statically verify plans at admission time "
+                         "(repro.analysis.verify): the record store's "
+                         "schema on load, and every --vocab-spmv plan's "
+                         "format invariants before it serves a request")
     args = ap.parse_args(argv)
 
     from repro.core import selector as S
     if args.records:
-        S.set_default_store(S.load_records(args.records))
+        store = S.load_records(args.records)
+        if args.verify:
+            from repro.analysis.verify import verify_records
+            print(verify_records(store).summary())
+        S.set_default_store(store)
 
     from jax.sharding import Mesh
     from repro.configs import get_smoke_config
@@ -112,6 +121,12 @@ def main(argv=None):
                                       dtype=np.float32, nvec=1, **kw)
         x = jnp.asarray(rng.standard_normal(cfg.d_model), jnp.float32)
         h = lin.handle
+        if args.verify:
+            # plan-cache admission gate: prove the plan's invariants before
+            # the first request touches it (raises on any violation)
+            from repro.analysis.verify import verify_plan
+            report = verify_plan(h, nvec=1).raise_if_failed()
+            print(f"verify: plan ok ({len(report.checked)} rules checked)")
         lin(x).block_until_ready()
         t0 = time.perf_counter()
         iters = 16

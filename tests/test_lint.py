@@ -1,0 +1,205 @@
+"""tools/spc5_lint.py: the AST rule engine that guards the architecture.
+
+The real tree must lint clean; synthesized trees planted with violations
+must fire exactly the matching rule (mutation coverage for the linter
+itself, mirroring tests/test_verify.py's approach for the plan checker).
+"""
+import importlib.util
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _load_lint():
+    spec = importlib.util.spec_from_file_location(
+        "spc5_lint", os.path.join(REPO, "tools", "spc5_lint.py"))
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules[spec.name] = mod    # dataclasses resolve through sys.modules
+    spec.loader.exec_module(mod)
+    return mod
+
+
+L = _load_lint()
+
+
+_SEQ = iter(range(10**6))
+
+
+def plant(tmp_path, rel, source):
+    """Write one file into a FRESH synthetic src/repro tree; returns its
+    root (each call isolates, so findings never leak between plants)."""
+    root = tmp_path / f"tree{next(_SEQ)}"
+    p = root / "src" / "repro" / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(source))
+    return str(root)
+
+
+# ----------------------------------------------------------------------------
+# The real tree is clean
+# ----------------------------------------------------------------------------
+
+def test_real_tree_is_clean():
+    findings = L.run(REPO)
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_cli_clean_and_list_rules():
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tools", "spc5_lint.py")],
+        capture_output=True, text=True, env=env)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "clean" in out.stdout
+    listed = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tools", "spc5_lint.py"),
+         "--list-rules"], capture_output=True, text=True, env=env)
+    assert set(listed.stdout.split()) == set(L.rule_names())
+
+
+# ----------------------------------------------------------------------------
+# Planted violations fire exactly the matching rule
+# ----------------------------------------------------------------------------
+
+def test_layout_dispatch_literal_comparison(tmp_path):
+    root = plant(tmp_path, "kernels/bad.py", """
+        def f(h):
+            if h.layout == "panels":
+                return 1
+            return 0
+    """)
+    findings = L.check_layout_dispatch(root)
+    assert len(findings) == 1
+    assert findings[0].rule == "layout-dispatch"
+    assert "'panels'" in findings[0].message
+    assert findings[0].line == 3
+
+
+def test_layout_dispatch_handle_construction(tmp_path):
+    root = plant(tmp_path, "core/bad.py", """
+        from repro.core.ref_spmv import SPC5Device
+
+        def f(arrays, h):
+            if isinstance(h, SPC5Device):
+                return h
+            return SPC5Device(*arrays)
+    """)
+    rules = {f.message.split(";")[0] for f in L.check_layout_dispatch(root)}
+    assert len(rules) == 2              # the isinstance AND the construction
+
+
+def test_layout_dispatch_allowlist(tmp_path):
+    src = 'X = 1 if "panels" == "panels" else 0\n'
+    root = plant(tmp_path, "core/plan.py", src)
+    assert L.check_layout_dispatch(root) == []
+    root2 = plant(tmp_path, "core/other.py", src)
+    assert len(L.check_layout_dispatch(root2)) >= 1
+
+
+def test_pallas_call_outside_kernels(tmp_path):
+    root = plant(tmp_path, "core/bad.py", """
+        from jax.experimental import pallas as pl
+
+        def f(kernel, x):
+            return pl.pallas_call(kernel, out_shape=x)(x)
+    """)
+    findings = L.check_pallas_call(root)
+    assert [f.rule for f in findings] == ["pallas-call"]
+    # the same call under kernels/ is the sanctioned launch point
+    root2 = plant(tmp_path, "kernels/good.py", """
+        from jax.experimental import pallas as pl
+
+        def f(kernel, x):
+            return pl.pallas_call(kernel, out_shape=x)(x)
+    """)
+    assert all("kernels" not in f.path for f in L.check_pallas_call(root2))
+
+
+def test_dense_materialisation_in_core(tmp_path):
+    root = plant(tmp_path, "core/bad.py", """
+        import numpy as np
+
+        def f(mat, nrows, ncols):
+            d = np.zeros((nrows, ncols))
+            return d + mat.todense()
+    """)
+    findings = L.check_no_dense_in_core(root)
+    assert len(findings) == 2
+    assert all(f.rule == "no-dense-in-core" for f in findings)
+    # formats.py owns the dense<->sparse boundary
+    root2 = plant(tmp_path, "core/formats.py", """
+        import numpy as np
+
+        def to_dense(mat, nrows, ncols):
+            return np.zeros((nrows, ncols))
+    """)
+    assert L.check_no_dense_in_core(root2) == []
+    # 1-D allocations and non-matrix shapes are fine anywhere
+    root3 = plant(tmp_path, "core/ok.py", """
+        import numpy as np
+
+        def f(nrows, cb):
+            return np.zeros(nrows), np.zeros((cb, 8))
+    """)
+    assert L.check_no_dense_in_core(root3) == []
+
+
+def test_planted_tree_cli_exits_nonzero(tmp_path):
+    root = plant(tmp_path, "core/bad.py", 'X = h == "panels"\n')
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tools", "spc5_lint.py"),
+         "--root", root, "--rule", "layout-dispatch"],
+        capture_output=True, text=True, env=env)
+    assert out.returncode == 1
+    assert "[layout-dispatch]" in out.stdout
+
+
+# ----------------------------------------------------------------------------
+# Runtime rules (registry + record schema introspection)
+# ----------------------------------------------------------------------------
+
+def test_layout_lowerings_declared_clean():
+    assert L.check_layout_lowerings(REPO) == []
+
+
+def test_layout_lowerings_detects_drift(monkeypatch):
+    import dataclasses
+
+    from repro.core import plan as P
+    spec = P._REGISTRY[P.LAYOUT_WHOLE]
+    monkeypatch.setitem(
+        P._REGISTRY, P.LAYOUT_WHOLE,
+        dataclasses.replace(spec, lowerings=(P.LOWERING_MASK,)))
+    findings = L.check_layout_lowerings(REPO)
+    msgs = "\n".join(f.message for f in findings)
+    # desc_array_names still declared -> the drift is caught
+    assert "desc_array_names" in msgs
+
+
+def test_record_schema_sync_clean():
+    assert L.check_record_schema_sync(REPO) == []
+
+
+def test_record_schema_sync_detects_drift(monkeypatch):
+    from repro.core import selector as S
+
+    def add(self, kernel, avg):             # signature out of sync
+        raise NotImplementedError
+
+    monkeypatch.setattr(S.RecordStore, "add", add)
+    findings = L.check_record_schema_sync(REPO)
+    assert any("out of sync" in f.message for f in findings)
+
+
+def test_rule_registry_complete():
+    assert L.rule_names() == ("layout-dispatch", "layout-lowerings-declared",
+                              "no-dense-in-core", "pallas-call",
+                              "record-schema-sync")
+    with pytest.raises(SystemExit):
+        L.main(["--rule", "not-a-rule"])

@@ -1,0 +1,349 @@
+#!/usr/bin/env python
+"""Repo lint: enforce the SPC5 architecture rules statically.
+
+Generalises tests/test_plan.py's substring dispatch scan into an AST-based
+rule engine. Each rule is a function ``rule(root) -> list[Finding]``; the
+CLI runs all of them (or ``--rule NAME``) over ``--root`` (default: the
+repo this file lives in) and exits nonzero on any finding, printing
+``path:line: [rule] message`` lines a CI log renders as annotations.
+
+Rules
+-----
+layout-dispatch
+    Layout branching lives in ``repro.core.plan`` only. Nothing else in
+    ``src/repro`` compares against layout name literals, constructs the
+    legacy device handle tuples, or isinstance-checks handle classes --
+    adding a layout is one registration, not five edited files.
+pallas-call
+    ``pl.pallas_call`` appears only under ``src/repro/kernels/``: the
+    kernel boundary is the only place device code is launched.
+no-dense-in-core
+    ``repro/core`` never materialises a dense (nrows, ncols) matrix:
+    no ``.todense()``/``.toarray()`` calls, no full-shape
+    ``zeros``/``ones``/``empty``/``full`` allocations outside the format
+    converters in ``formats.py`` (which own the dense<->sparse boundary).
+layout-lowerings-declared
+    Runtime rule: every registered layout declares its lowerings
+    consistently -- "mask" first, only known lowering names, descriptor
+    array names imply the descriptor lowering is declared (and vice versa
+    a descriptor declaration brings a ``desc_device_view``), and both
+    SpMV and SpMM VMEM contracts cover every (layout, lowering) pair the
+    registry can produce.
+record-schema-sync
+    Runtime rule: the benchmark record schema is defined once. The
+    ``RecordStore.add`` signature mirrors the ``Record`` dataclass fields
+    in order, and the JSONL v3 field list matches.
+
+The rules are importable (tests/test_lint.py, and test_plan.py's dispatch
+test is a thin wrapper over ``layout-dispatch``); the CLI is what CI runs.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import dataclasses
+import os
+import sys
+from typing import Callable, Dict, List, Optional
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: Layout name string literals whose comparison constitutes dispatch.
+LAYOUT_LITERALS = {"panels", "whole_vector", "whole", "test"}
+
+#: Legacy handle constructors / classes nothing outside plan.py may touch.
+HANDLE_NAMES = {"SPC5Device", "SPC5PanelDevice", "SPC5DescDevice",
+                "SPC5PanelDescDevice"}
+
+#: Files allowed to branch on layout: the registry itself, the reference
+#: interpreter that defines the device views, and the selector's record
+#: schema (records *name* layouts; that is data, not dispatch).
+DISPATCH_ALLOWLIST = {
+    os.path.join("core", "plan.py"),
+    os.path.join("core", "ref_spmv.py"),
+    os.path.join("core", "selector.py"),
+}
+
+#: core/ files allowed to touch dense matrices: the converters.
+DENSE_ALLOWLIST = {
+    os.path.join("core", "formats.py"),
+    os.path.join("core", "matgen.py"),
+    os.path.join("core", "ref_spmv.py"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str          # repo-root-relative
+    line: int
+    message: str
+
+    def __str__(self):
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+_RULES: Dict[str, Callable[[str], List[Finding]]] = {}
+
+
+def _rule(name: str):
+    def deco(fn):
+        _RULES[name] = fn
+        fn.rule_name = name
+        return fn
+    return deco
+
+
+def rule_names():
+    return tuple(sorted(_RULES))
+
+
+# ----------------------------------------------------------------------------
+# helpers
+# ----------------------------------------------------------------------------
+
+def _py_files(root: str, sub: str):
+    """Yield (abspath, relpath-to-``sub``) for .py files under root/sub."""
+    base = os.path.join(root, sub)
+    for dirpath, dirnames, filenames in os.walk(base):
+        dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                ap = os.path.join(dirpath, fn)
+                yield ap, os.path.relpath(ap, base)
+
+
+def _parse(path: str) -> Optional[ast.AST]:
+    with open(path, encoding="utf-8") as f:
+        src = f.read()
+    try:
+        return ast.parse(src, filename=path)
+    except SyntaxError:
+        return None    # broken files are the tier-1 suite's problem
+
+
+def _rel(root: str, path: str) -> str:
+    return os.path.relpath(path, root)
+
+
+def _call_name(node: ast.Call) -> str:
+    """Trailing name of the called expression: f(), m.f() -> 'f'."""
+    fn = node.func
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    if isinstance(fn, ast.Name):
+        return fn.id
+    return ""
+
+
+# ----------------------------------------------------------------------------
+# static rules
+# ----------------------------------------------------------------------------
+
+@_rule("layout-dispatch")
+def check_layout_dispatch(root: str = REPO_ROOT) -> List[Finding]:
+    out: List[Finding] = []
+    for ap, rel in _py_files(root, os.path.join("src", "repro")):
+        if rel in DISPATCH_ALLOWLIST:
+            continue
+        tree = _parse(ap)
+        if tree is None:
+            continue
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Compare):
+                consts = [n for n in [node.left] + list(node.comparators)
+                          if isinstance(n, ast.Constant)
+                          and n.value in LAYOUT_LITERALS]
+                if consts:
+                    out.append(Finding(
+                        "layout-dispatch", _rel(root, ap), node.lineno,
+                        f"comparison against layout literal "
+                        f"{consts[0].value!r}; dispatch belongs in "
+                        f"repro.core.plan"))
+            elif isinstance(node, ast.Call):
+                name = _call_name(node)
+                if name in HANDLE_NAMES:
+                    out.append(Finding(
+                        "layout-dispatch", _rel(root, ap), node.lineno,
+                        f"direct {name}(...) construction; only the layout "
+                        f"registry builds device views"))
+                elif (name == "isinstance" and len(node.args) == 2):
+                    names = {n.id for n in ast.walk(node.args[1])
+                             if isinstance(n, ast.Name)}
+                    hit = names & HANDLE_NAMES
+                    if hit:
+                        out.append(Finding(
+                            "layout-dispatch", _rel(root, ap), node.lineno,
+                            f"isinstance check against {sorted(hit)[0]}; "
+                            f"branch on plan.layout inside repro.core.plan "
+                            f"instead"))
+    return out
+
+
+@_rule("pallas-call")
+def check_pallas_call(root: str = REPO_ROOT) -> List[Finding]:
+    out: List[Finding] = []
+    kernels_prefix = "kernels" + os.sep
+    for ap, rel in _py_files(root, os.path.join("src", "repro")):
+        if rel.startswith(kernels_prefix):
+            continue
+        tree = _parse(ap)
+        if tree is None:
+            continue
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call) and \
+                    _call_name(node) == "pallas_call":
+                out.append(Finding(
+                    "pallas-call", _rel(root, ap), node.lineno,
+                    "pl.pallas_call outside repro/kernels/; device code "
+                    "launches only at the kernel boundary"))
+    return out
+
+
+@_rule("no-dense-in-core")
+def check_no_dense_in_core(root: str = REPO_ROOT) -> List[Finding]:
+    out: List[Finding] = []
+    alloc_names = {"zeros", "ones", "empty", "full"}
+    dim_names = {"nrows", "ncols"}
+    for ap, rel in _py_files(root, os.path.join("src", "repro", "core")):
+        if os.path.join("core", rel) in DENSE_ALLOWLIST:
+            continue
+        tree = _parse(ap)
+        if tree is None:
+            continue
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _call_name(node)
+            if name in ("todense", "toarray"):
+                out.append(Finding(
+                    "no-dense-in-core", _rel(root, ap), node.lineno,
+                    f".{name}() in repro/core/; dense materialisation is "
+                    f"confined to the formats.py converters"))
+            elif name in alloc_names and node.args:
+                shape = node.args[0]
+                if isinstance(shape, ast.Tuple) and len(shape.elts) == 2:
+                    idents = {n.id for n in ast.walk(shape)
+                              if isinstance(n, ast.Name)}
+                    idents |= {n.attr for n in ast.walk(shape)
+                               if isinstance(n, ast.Attribute)}
+                    if idents & dim_names:
+                        out.append(Finding(
+                            "no-dense-in-core", _rel(root, ap), node.lineno,
+                            f"{name}((...nrows/ncols...)) allocates a "
+                            f"dense-matrix-sized buffer in repro/core/"))
+    return out
+
+
+# ----------------------------------------------------------------------------
+# runtime rules (import the tree they lint)
+# ----------------------------------------------------------------------------
+
+def _import_repro(root: str):
+    src = os.path.join(root, "src")
+    if src not in sys.path:
+        sys.path.insert(0, src)
+
+
+@_rule("layout-lowerings-declared")
+def check_layout_lowerings(root: str = REPO_ROOT) -> List[Finding]:
+    _import_repro(root)
+    from repro.core import plan as P
+    from repro.kernels.spc5_spmm import SPMM_VMEM_CONTRACTS
+    from repro.kernels.spc5_spmv import SPMV_VMEM_CONTRACTS
+    out: List[Finding] = []
+    rel = os.path.join("src", "repro", "core", "plan.py")
+    known = {P.LOWERING_MASK, P.LOWERING_DESC}
+
+    def f(msg):
+        out.append(Finding("layout-lowerings-declared", rel, 1, msg))
+
+    for name in P.layout_names():
+        spec = P.get_layout(name)
+        if not spec.lowerings or spec.lowerings[0] != P.LOWERING_MASK:
+            f(f"layout {name!r}: lowerings must start with 'mask', "
+              f"got {spec.lowerings!r}")
+        unknown = set(spec.lowerings) - known
+        if unknown:
+            f(f"layout {name!r}: unknown lowering(s) {sorted(unknown)}")
+        if spec.desc_array_names and \
+                P.LOWERING_DESC not in spec.lowerings:
+            f(f"layout {name!r}: has desc_array_names but does not "
+              f"declare the 'descriptor' lowering")
+        if P.LOWERING_DESC in spec.lowerings and spec.desc_array_names \
+                and spec.desc_device_view is None:
+            f(f"layout {name!r}: descriptor arrays without a "
+              f"desc_device_view")
+        if spec.device_view is None:
+            continue    # no pallas path registered; contracts don't apply
+        for low in spec.lowerings:
+            for label, contracts in (("SPMV", SPMV_VMEM_CONTRACTS),
+                                     ("SPMM", SPMM_VMEM_CONTRACTS)):
+                if (name, low) not in contracts:
+                    f(f"layout {name!r}: no {label} VMEM contract for "
+                      f"lowering {low!r} (kernels declare their footprint "
+                      f"so the verifier can bound it)")
+    return out
+
+
+@_rule("record-schema-sync")
+def check_record_schema_sync(root: str = REPO_ROOT) -> List[Finding]:
+    _import_repro(root)
+    import inspect
+
+    from repro.core import selector as S
+    out: List[Finding] = []
+    rel = os.path.join("src", "repro", "core", "selector.py")
+    fields = [f.name for f in dataclasses.fields(S.Record)]
+    add_params = [p for p in
+                  inspect.signature(S.RecordStore.add).parameters
+                  if p != "self"]
+    if add_params != fields:
+        out.append(Finding(
+            "record-schema-sync", rel, 1,
+            f"RecordStore.add params {add_params} out of sync with Record "
+            f"fields {fields}"))
+    if fields[-1] != "lowering" or len(fields) != 16:
+        out.append(Finding(
+            "record-schema-sync", rel, 1,
+            f"Record schema drifted from JSONL v3 (16 fields ending in "
+            f"'lowering'); got {len(fields)} fields ending in "
+            f"{fields[-1]!r} -- bump RECORDS_VERSION"))
+    return out
+
+
+# ----------------------------------------------------------------------------
+# driver
+# ----------------------------------------------------------------------------
+
+def run(root: str = REPO_ROOT, rules=None) -> List[Finding]:
+    findings: List[Finding] = []
+    for name in (rules or rule_names()):
+        findings.extend(_RULES[name](root))
+    return findings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", default=REPO_ROOT,
+                    help="repo root to lint (default: this checkout)")
+    ap.add_argument("--rule", action="append", choices=rule_names(),
+                    help="run only this rule (repeatable)")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+    if args.list_rules:
+        for name in rule_names():
+            print(name)
+        return 0
+    findings = run(os.path.abspath(args.root), args.rule)
+    for f in findings:
+        print(f)
+    if findings:
+        print(f"spc5_lint: {len(findings)} finding(s)")
+        return 1
+    print(f"spc5_lint: clean ({len(args.rule or rule_names())} rule(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
