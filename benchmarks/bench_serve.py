@@ -1,0 +1,86 @@
+"""Serving-tier bench: open-loop Poisson traffic swept to saturation.
+
+One section (``spmv_serve``) in ``benchmarks.run``: a pruned-weight
+vocab-projection matrix is served through ``repro.launch.server`` -- plan
+cache (hit demonstrated on the second warm build), request coalescing
+(bit-exactness vs per-request SpMV asserted every run), then an open-loop
+sweep over offered QPS recording p50/p99 latency and achieved throughput.
+Each QPS point prints a ``gflops=`` CSV line (completed-request FLOP rate),
+so the section aggregates under the CI perf-regression gate exactly like
+the kernel benches; the saturation line records the peak achieved QPS.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+SEED = 0
+
+
+def run(quick: bool = True) -> List[str]:
+    import jax.numpy as jnp
+
+    from repro.core import formats as F, matgen, plan as P
+    from repro.launch import server as SV
+
+    dim, density = (1024, 0.05) if quick else (4096, 0.02)
+    qps_points = [50, 100, 200, 400, 800] if quick else [
+        100, 200, 400, 800, 1600, 3200]
+    duration_s = 0.4 if quick else 1.0
+
+    csr = matgen.pruned_weight(dim, dim // 2, density, (1, 8), seed=SEED)
+    mat = F.csr_to_spc5(csr, 1, 8)
+    request = dict(layout="panels", pr=256, xw=64, cb=32, tune=False,
+                   lowering="mask")
+
+    lines: List[str] = []
+    cache = SV.PlanCache(capacity_bytes=64 << 20, verify_on_admit=True)
+    plan = cache.get_or_build(mat, **request)
+    cache.get_or_build(mat, **request)      # the warm path: must hit
+    st = cache.stats()
+    lines.append(f"spmv_serve.plan_cache.{dim},0.0,"
+                 f"hits={st['hits']};misses={st['misses']};"
+                 f"evictions={st['evictions']};"
+                 f"hit_rate={st['hit_rate']:.2f}")
+    assert st["hits"] > 0, "plan cache never hit on the warm build"
+
+    srv = SV.SPC5Server(plan, cache=cache, window_us=2000, max_batch=64)
+    rng = np.random.default_rng(SEED)
+    xs = [jnp.asarray(rng.standard_normal(mat.shape[1]), jnp.float32)
+          for _ in range(16)]
+    with srv:
+        # coalescing parity: concurrent submits vs lone per-request SpMV
+        futs = [srv.submit(x) for x in xs]
+        ys = [f.result(timeout=60) for f in futs]
+        bit = all(np.array_equal(np.asarray(y),
+                                 np.asarray(P.execute_spmv(plan, x)))
+                  for y, x in zip(ys, xs))
+        assert bit, "coalesced SpMM diverged from per-request SpMV"
+        lines.append(f"spmv_serve.coalesce_parity.{dim},0.0,"
+                     f"bitexact={int(bit)};"
+                     f"widest_batch={srv.widest_batch}")
+
+        peak = None
+        for qps in qps_points:
+            res = SV.open_loop(srv, xs, qps, duration_s=duration_s,
+                               seed=SEED)
+            gf = 2.0 * csr.nnz * res["completed"] / res["elapsed_s"] / 1e9
+            lines.append(
+                f"spmv_serve.openloop.{dim}.qps{qps},"
+                f"{res['p50_us']:.1f},gflops={gf:.4f};"
+                f"p99={res['p99_us']:.1f};"
+                f"achieved={res['qps_achieved']:.1f}")
+            if peak is None or res["qps_achieved"] > peak["qps_achieved"]:
+                peak = res
+        gf = 2.0 * csr.nnz * peak["qps_achieved"] / 1e9
+        lines.append(f"spmv_serve.saturation.{dim},"
+                     f"{peak['p50_us']:.1f},gflops={gf:.4f};"
+                     f"peak_qps={peak['qps_achieved']:.1f};"
+                     f"p99={peak['p99_us']:.1f}")
+        st = srv.stats()
+        lines.append(f"spmv_serve.coalescing.{dim},0.0,"
+                     f"batches={st['batches']};"
+                     f"mean_batch={st['mean_batch']:.2f};"
+                     f"widest_batch={st['widest_batch']}")
+    return lines

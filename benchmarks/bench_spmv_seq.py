@@ -149,8 +149,9 @@ def bench_matrix(name: str, csr, store: Optional[RecordStore] = None,
         # the layout's DMA-window total, what reordering tries to shrink --
         # next to the padded grid dims; chunks_per_panel is its mean.
         for pr in PANEL_PRS:
-            hp = ops.prepare_panels(mat, pr=pr, cb=64, xw=PANEL_XW,
-                                    dtype=np.float32)
+            hp = ops.prepare(mat, layout="panels", pr=pr, cb=64,
+                             xw=PANEL_XW, dtype=np.float32, tune=False,
+                             lowering="mask")
             # real chunks straight off the built layout (mask==0 is padding)
             # -- no second pass-1 planner run
             nch_total = int(np.asarray(
@@ -169,7 +170,7 @@ def bench_matrix(name: str, csr, store: Optional[RecordStore] = None,
                     workers, gfp, matrix=name, nchunks=nch_total)
         # paper's beta(r,c)_test variants for the small blocks
         if rc in ((1, 8), (2, 4)):
-            ht = ops.prepare_test(mat, cb=512, dtype=np.float32)
+            ht = ops.prepare(mat, layout="test", cb=512, dtype=np.float32)
             tt = time_fn(lambda: ops.spmv_test(ht, x, use_pallas=False))
             gft = flops / tt / 1e9
             lines.append(

@@ -103,6 +103,9 @@ def main(argv=None) -> None:
     from . import bench_lm_step
     sections.append(("lm", lambda: bench_lm_step.run(quick=quick)))
 
+    from . import bench_serve
+    sections.append(("spmv_serve", lambda: bench_serve.run(quick=quick)))
+
     from . import roofline
     def _roofline():
         rows = roofline.main(csv=False)

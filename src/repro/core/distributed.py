@@ -14,14 +14,16 @@ Mapping of the paper's shared-memory design onto SPMD devices:
 
 The sharding itself is the plan pipeline's ``shard`` pass
 (:func:`repro.core.plan.shard_plan`): the global matrix is tuned/reordered,
-row-partitioned, and each slab is stacked by its layout's registered
-``shard_build`` hook into a :class:`~repro.core.plan.ShardedPlan` -- so
-:func:`make_distributed_spmv` below is layout-agnostic (it squeezes one
-device's arrays and hands them to the registry's ``local_spmv``; no
+row-partitioned (block- or nnz-balanced), and each slab is stacked by its
+layout's registered ``shard_build``/``shard_build_desc`` hook into a
+:class:`~repro.core.plan.ShardedPlan` -- so :func:`make_distributed_spmv`
+below is layout- AND lowering-agnostic (it squeezes one device's arrays and
+hands them to :func:`repro.core.plan.local_execute_spmv`; no
 ``if layout == ...`` branching anywhere in this module).
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional
 
 import jax
@@ -39,21 +41,21 @@ ShardedSPC5 = PL.ShardedPlan
 ShardedSPC5Panels = PL.ShardedPlan
 
 
-def shard_matrix(mat: F.SPC5Matrix, ndev: int, cb: Optional[int] = None,
-                 mesh: Optional[Mesh] = None, axis: str = "data",
-                 dtype=None, pr: Optional[int] = None, xw: int = 512,
-                 store: Optional[S.RecordStore] = None,
+def shard_matrix(mat: F.SPC5Matrix, ndev: int, *, layout: str = "auto",
+                 cb: Optional[int] = None, mesh: Optional[Mesh] = None,
+                 axis: str = "data", dtype=None, pr: Optional[int] = None,
+                 xw: int = 512, store: Optional[S.RecordStore] = None,
                  config: Optional[S.PanelConfig] = None, tune: bool = True,
-                 reorder=None,
-                 lowering: str = PL.LOWERING_MASK) -> PL.ShardedPlan:
-    """Partition + build + stack + (optionally) device_put with sharding.
+                 reorder=None, lowering: str = "auto",
+                 partition: str = "auto") -> PL.ShardedPlan:
+    """Partition + build + stack + (optionally) device_put with sharding --
+    the one distributed prepare entry point.
 
     Thin wrapper over the plan pipeline's shard pass
-    (:func:`repro.core.plan.shard_plan`). ``pr=None`` keeps the flat
-    whole-vector per-device layout; passing a panel height (or a
-    tuned/explicit panels ``config``) selects row sharding composed with
-    per-device row-panel tiling. ``cb=None`` uses the layout's default
-    chunk size.
+    (:func:`repro.core.plan.shard_plan`). ``layout`` picks the per-device
+    layout by registry key ("auto" resolves it from the tuned/explicit
+    config, a panel height ``pr``, or the flat whole-vector default);
+    ``cb=None`` uses the layout's default chunk size.
 
     **Auto-tuning**: when neither ``pr`` nor ``cb`` is given and a record
     store is available (``store``, or the selector's default store), the
@@ -67,34 +69,52 @@ def shard_matrix(mat: F.SPC5Matrix, ndev: int, cb: Optional[int] = None,
     :func:`make_distributed_spmv` applies it transparently. A tuned config
     carrying ``config.reorder`` applies the same way.
 
-    **Lowering**: the sharded stacking hooks build mask-decode arrays only;
-    a "descriptor" request (explicit or via a tuned config) is demoted to
-    "mask" with the demotion recorded in the shard trace entry.
+    **Lowering**: resolves like ``make_plan``'s -- an explicit "mask" /
+    "descriptor" must be served by the layout's shard stacking hooks (both
+    block layouts serve both; the call raises otherwise), "auto" takes the
+    tuned pick else the cost-model arbitration. Tuned lowerings survive
+    ``workers=ndev`` unchanged.
+
+    **Partitioning**: ``partition`` = "blocks" (the paper's equal-block
+    split) | "nnz" (equal-nonzero slabs for skewed structure) | "auto"
+    (switch to "nnz" when the structure profile's skew says the block split
+    would straggle the mesh; evidence in ``sh.trace``).
     """
-    return PL.shard_plan(mat, ndev, cb=cb, mesh=mesh, axis=axis, dtype=dtype,
-                         pr=pr, xw=xw, store=store, config=config, tune=tune,
-                         reorder=reorder, lowering=lowering)
+    return PL.shard_plan(mat, ndev, layout=layout, cb=cb, mesh=mesh,
+                         axis=axis, dtype=dtype, pr=pr, xw=xw, store=store,
+                         config=config, tune=tune, reorder=reorder,
+                         lowering=lowering, partition=partition)
 
 
 def shard_matrix_panels(mat: F.SPC5Matrix, ndev: int, pr: int = 512,
                         cb: int = 64, xw: int = 512,
                         mesh: Optional[Mesh] = None, axis: str = "data",
                         dtype=None) -> PL.ShardedPlan:
-    """Row-shard + panel-tile each shard (explicit geometry, no tuning)."""
-    return PL.shard_plan(mat, ndev, pr=pr, cb=cb, xw=xw, mesh=mesh,
-                         axis=axis, dtype=dtype, tune=False)
+    """Deprecated: use ``shard_matrix(mat, ndev, layout="panels", pr=...,
+    tune=False)`` -- kept as a thin shim (same semantics: explicit panel
+    geometry, no tuning, mask lowering)."""
+    warnings.warn(
+        "distributed.shard_matrix_panels is deprecated; use "
+        "shard_matrix(mat, ndev, layout='panels', pr=..., cb=..., xw=..., "
+        "tune=False)",
+        DeprecationWarning, stacklevel=2)
+    return shard_matrix(mat, ndev, layout=PL.LAYOUT_PANELS, pr=pr, cb=cb,
+                        xw=xw, mesh=mesh, axis=axis, dtype=dtype,
+                        tune=False, lowering=PL.LOWERING_MASK)
 
 
 def make_distributed_spmv(sh: PL.ShardedPlan, mesh: Mesh,
                           axis: str = "data", gather: bool = True):
     """Build a jit'd y = A @ x over the mesh from a :class:`ShardedPlan`.
 
-    Layout-agnostic: the shard_map body squeezes each stacked array's
-    leading device dimension and hands the slice tuple to the plan
-    registry's ``local_spmv`` hook for ``sh.layout``. With gather=True the
-    result is the full replicated y (one all_gather at the end -- the only
-    collective; the paper's no-sync merge). With gather=False the caller
-    keeps the row-slab layout (ndev, rows_max), sharded over ``axis``.
+    Layout- and lowering-agnostic: the shard_map body squeezes each stacked
+    array's leading device dimension and hands the slice tuple to
+    :func:`repro.core.plan.local_execute_spmv` (the distributed executor --
+    the only place the sharded layout x lowering dispatch exists). With
+    gather=True the result is the full replicated y (one all_gather at the
+    end -- the only collective; the paper's no-sync merge). With
+    gather=False the caller keeps the row-slab layout (ndev, rows_max),
+    sharded over ``axis``.
 
     A reordering attached by ``shard_matrix(reorder=...)`` is applied
     transparently: x is gathered by ``col_perm`` before the shard_map (x is
@@ -105,7 +125,6 @@ def make_distributed_spmv(sh: PL.ShardedPlan, mesh: Mesh,
     """
     from jax.experimental.shard_map import shard_map
 
-    spec = PL.get_layout(sh.layout)
     narr = len(sh.arrays)
 
     def finish(y_loc, row_start):
@@ -122,7 +141,7 @@ def make_distributed_spmv(sh: PL.ShardedPlan, mesh: Mesh,
 
     def body(*args):
         arrs, row_start, x = args[:narr], args[narr], args[narr + 1]
-        y_loc = spec.local_spmv(sh, tuple(a[0] for a in arrs), x)
+        y_loc = PL.local_execute_spmv(sh, tuple(a[0] for a in arrs), x)
         return finish(y_loc, row_start)
 
     in_specs = (P(axis),) * (narr + 1) + (P(),)

@@ -40,6 +40,7 @@ from __future__ import annotations
 
 import dataclasses
 import difflib
+import hashlib
 import json
 from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
@@ -149,6 +150,12 @@ class LayoutSpec:
     device_view: Optional[Callable] = None
     shard_build: Optional[Callable] = None
     local_spmv: Optional[Callable] = None
+    #: Descriptor-lowering counterparts of the distributed hooks: stack
+    #: per-device descriptor tables / run one shard's descriptor SpMV. A
+    #: layout that registers both serves ``shard_plan(lowering="descriptor")``
+    #: natively -- see :meth:`shard_lowerings`.
+    shard_build_desc: Optional[Callable] = None
+    local_spmv_desc: Optional[Callable] = None
     auto_eligible: bool = True
     #: Lowering variants this layout registers, "mask" first (the tie-break
     #: winner of the cost arbitration). A tuned config naming a lowering the
@@ -163,6 +170,18 @@ class LayoutSpec:
         if lowering == LOWERING_DESC and self.desc_array_names:
             return self.desc_array_names
         return self.array_names
+
+    @property
+    def shard_lowerings(self) -> Tuple[str, ...]:
+        """Lowerings this layout can serve at ``workers=ndev`` -- the ones
+        with a complete (shard_build, local_spmv) hook pair."""
+        out = []
+        if self.shard_build is not None and self.local_spmv is not None:
+            out.append(LOWERING_MASK)
+        if (self.shard_build_desc is not None
+                and self.local_spmv_desc is not None):
+            out.append(LOWERING_DESC)
+        return tuple(out)
 
 
 _REGISTRY: Dict[str, LayoutSpec] = {}
@@ -595,9 +614,9 @@ def make_plan(mat: F.SPC5Matrix, *, layout: str = "auto",
               verify: Union[bool, Callable] = False) -> SPC5Plan:
     """The plan pipeline: tune -> reorder -> layout -> build.
 
-    This is the single entry point behind ``ops.prepare`` /
-    ``ops.prepare_panels`` / ``ops.prepare_test`` /
-    ``SparseLinear.from_dense``; every pass records its decision in the
+    This is the single entry point behind ``ops.prepare`` (and its
+    deprecation shims) / ``SparseLinear.from_dense``; every pass records
+    its decision in the
     returned plan's ``trace``. ``layout`` accepts a registry key, a legacy
     alias, or "auto"; ``multi_layout`` is the beta_test split's inner-layout
     request (only meaningful with ``layout="test"``). ``lowering`` selects
@@ -677,6 +696,65 @@ def execute_spmm(plan: SPC5Plan, x: jax.Array, *,
 
 def _gathered_x(plan: SPC5Plan, x: jax.Array) -> jax.Array:
     return x if plan.col_perm is None else jnp.take(x, plan.col_perm, axis=0)
+
+
+# ----------------------------------------------------------------------------
+# Fingerprints + plan footprint (the serving tier's cache substrate)
+# ----------------------------------------------------------------------------
+
+def matrix_fingerprint(mat: F.SPC5Matrix) -> str:
+    """Content hash of a beta(r,c) matrix: structure (block geometry,
+    row/col/mask/voffset arrays) + values + value dtype.
+
+    Two matrices with identical content hash identically regardless of how
+    their arrays were produced (fresh conversion, a copy, a checkpoint
+    round-trip); any structural or numeric change -- one flipped mask bit,
+    one edited value -- changes the digest. This is the build-once half of
+    the plan-cache key (:func:`plan_cache_key`)."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(np.asarray([mat.shape[0], mat.shape[1], mat.r, mat.c],
+                        dtype=np.int64).tobytes())
+    h.update(str(np.dtype(mat.values.dtype)).encode())
+    for a in (mat.block_rowptr, mat.block_colidx, mat.block_masks,
+              mat.block_voffset, mat.values):
+        h.update(np.ascontiguousarray(a).tobytes())
+    return h.hexdigest()
+
+
+def plan_cache_key(mat: F.SPC5Matrix, **request) -> str:
+    """The serving tier's cache key: matrix fingerprint + the prepare-path
+    request (layout / lowering / reorder / geometry / dtype / nvec / ...).
+
+    Every decision that changes the built plan is part of the key, so a
+    cached plan is only ever reused for the exact (matrix, request) pair it
+    was built for; omitted/None/"auto" knobs normalise away, so spelling a
+    default explicitly does not split the cache."""
+    norm = {}
+    for k in sorted(request):
+        v = request[k]
+        if v is None or v == "auto" or v == "" or v is False:
+            continue                    # defaults don't split the cache
+        if k == "dtype":
+            v = str(np.dtype(v))
+        elif not isinstance(v, (bool, int, float, str)):
+            v = str(v)                  # PanelConfig / Reordering reprs
+        norm[k] = v
+    h = hashlib.blake2b(digest_size=16)
+    h.update(matrix_fingerprint(mat).encode())
+    h.update(json.dumps(norm, sort_keys=True).encode())
+    return h.hexdigest()
+
+
+def plan_nbytes(plan: SPC5Plan) -> int:
+    """Device-array footprint of a plan in bytes (sub-plans and permutation
+    vectors included) -- the LRU currency of the serving tier's plan cache."""
+    n = sum(int(a.nbytes) for a in plan.arrays)
+    for child in plan.children:
+        n += plan_nbytes(child)
+    for p in (plan.col_perm, plan.row_iperm):
+        if p is not None:
+            n += int(p.nbytes)
+    return n
 
 
 # ----------------------------------------------------------------------------
@@ -816,6 +894,52 @@ def _local_spmv_whole(sh: "ShardedPlan", local: Tuple[jax.Array, ...], x):
     return R.spmv(dev, x, r=sh.r, c=sh.c, nrows=sh.rows_max, ncols=sh.ncols)
 
 
+def _shard_build_whole_desc(st: "ShardState"):
+    """Descriptor stacking: pad the per-device chunk arrays to one uniform
+    grid exactly like the mask hook, then expand the stacked masks once --
+    :func:`formats.chunk_descriptors` works on any leading shape, so the
+    (ndev, nchunks, cb) stack expands in one call. Padding chunks expand to
+    ``valid == 0`` lanes whose contribution is zeroed, so the uniform-shape
+    trick costs nothing numerically."""
+    cb = 256 if st.cb is None else st.cb
+    chunked = [F.to_chunked(p, cb=cb) for p in st.parts]
+    nch = max(ch.nchunks for ch in chunked)
+    vmax = max(ch.vmax for ch in chunked)
+    nvals = max(ch.values.shape[0] + vmax for ch in chunked)
+    rows_max = max(p.shape[0] for p in st.parts)
+
+    def pad2(a):  # pad axis0 of (nchunks, cb)
+        return np.pad(a, ((0, nch - a.shape[0]), (0, 0)))
+
+    desc = F.chunk_descriptors(
+        np.stack([pad2(ch.chunk_mask) for ch in chunked]),
+        np.stack([pad2(ch.chunk_voff) for ch in chunked]),
+        np.stack([pad2(ch.chunk_col) for ch in chunked]),
+        np.stack([pad2(ch.chunk_row) for ch in chunked]),
+        r=st.mat.r, c=st.mat.c, vmax=vmax, xmax=st.mat.shape[1],
+        ymax=rows_max)
+    dt = st.dtype or st.mat.values.dtype
+    arrays = (
+        jnp.asarray(np.stack([
+            np.pad(ch.values, (0, nvals - ch.values.shape[0]))
+            for ch in chunked]).astype(dt)),
+        jnp.asarray(desc.valid), jnp.asarray(desc.vidx),
+        jnp.asarray(desc.xcol), jnp.asarray(desc.yrow),
+        jnp.asarray(np.stack([
+            np.pad(ch.chunk_vbase, (0, nch - ch.chunk_vbase.shape[0]))
+            for ch in chunked])),
+    )
+    geom = dict(r=st.mat.r, c=st.mat.c, cb=cb, vmax=vmax, rows_max=rows_max,
+                nrows=st.mat.shape[0], ncols=st.mat.shape[1], nnz=st.mat.nnz)
+    return arrays, geom
+
+
+def _local_spmv_whole_desc(sh: "ShardedPlan", local: Tuple[jax.Array, ...],
+                           x):
+    dev = R.SPC5DescDevice(*local)
+    return R.spmv_desc(dev, x, nrows=sh.rows_max)
+
+
 register_layout(LayoutSpec(
     name=LAYOUT_WHOLE,
     array_names=_WHOLE_ARRAYS,
@@ -828,6 +952,8 @@ register_layout(LayoutSpec(
     device_view=lambda arrays: R.SPC5Device(*arrays),
     shard_build=_shard_build_whole,
     local_spmv=_local_spmv_whole,
+    shard_build_desc=_shard_build_whole_desc,
+    local_spmv_desc=_local_spmv_whole_desc,
     lowerings=(LOWERING_MASK, LOWERING_DESC),
     desc_array_names=tuple(R.SPC5DescDevice._fields),
     desc_device_view=lambda arrays: R.SPC5DescDevice(*arrays),
@@ -1053,6 +1179,58 @@ def _local_spmv_panels(sh: "ShardedPlan", local: Tuple[jax.Array, ...], x):
                          ncols_pad=sh.ncols_pad)
 
 
+def _shard_build_panels_desc(st: "ShardState"):
+    """Descriptor stacking for the panel layout: same uniform-grid padding
+    as the mask hook, then one :func:`formats.chunk_descriptors` expansion
+    over the stacked (ndev, npanels, nchunks, cb) masks (window-relative
+    xcol / panel-relative yrow, like the per-plan panel descriptor build)."""
+    pr = 512 if st.pr is None else st.pr
+    cb = 64 if st.cb is None else st.cb
+    xw = 512 if st.xw is None else st.xw
+    pans = [F.to_panels(p, pr=pr, cb=cb, xw=xw) for p in st.parts]
+    pr = pans[0].pr                        # normalised to a multiple of r
+    npan = max(p.npanels for p in pans)
+    nch = max(p.nchunks for p in pans)
+    vmax = max(p.vmax for p in pans)
+    nvals = max(int(p.chunk_vbase.max()) + vmax for p in pans)
+    ncols_pad = max(p.ncols_pad for p in pans)
+
+    def pad3(a):   # (npanels, nchunks, cb) -> (npan, nch, cb)
+        return np.pad(a, ((0, npan - a.shape[0]), (0, nch - a.shape[1]),
+                          (0, 0)))
+
+    def pad2(a):           # (npanels, nchunks) -> (npan, nch)
+        return np.pad(a, ((0, npan - a.shape[0]), (0, nch - a.shape[1])))
+
+    desc = F.chunk_descriptors(
+        np.stack([pad3(p.chunk_mask) for p in pans]),
+        np.stack([pad3(p.chunk_voff) for p in pans]),
+        np.stack([pad3(p.chunk_col) for p in pans]),
+        np.stack([pad3(p.chunk_row) for p in pans]),
+        r=st.mat.r, c=st.mat.c, vmax=vmax, xmax=pans[0].xw, ymax=pr)
+    dt = st.dtype or st.mat.values.dtype
+    arrays = (
+        jnp.asarray(np.stack([
+            np.pad(p.values, (0, nvals - p.values.shape[0]))
+            for p in pans]).astype(dt)),
+        jnp.asarray(desc.valid), jnp.asarray(desc.vidx),
+        jnp.asarray(desc.xcol), jnp.asarray(desc.yrow),
+        jnp.asarray(np.stack([pad2(p.chunk_vbase) for p in pans])),
+        jnp.asarray(np.stack([pad2(p.chunk_xbase) for p in pans])),
+    )
+    geom = dict(r=st.mat.r, c=st.mat.c, pr=pr, cb=pans[0].cb, xw=pans[0].xw,
+                vmax=vmax, rows_max=npan * pr, nrows=st.mat.shape[0],
+                ncols=st.mat.shape[1], ncols_pad=ncols_pad, nnz=st.mat.nnz)
+    return arrays, geom
+
+
+def _local_spmv_panels_desc(sh: "ShardedPlan", local: Tuple[jax.Array, ...],
+                            x):
+    dev = R.SPC5PanelDescDevice(*local)
+    return R.spmv_panels_desc(dev, x, pr=sh.pr, nrows=sh.rows_max,
+                              ncols_pad=sh.ncols_pad)
+
+
 register_layout(LayoutSpec(
     name=LAYOUT_PANELS,
     array_names=_PANEL_ARRAYS,
@@ -1065,6 +1243,8 @@ register_layout(LayoutSpec(
     device_view=lambda arrays: R.SPC5PanelDevice(*arrays),
     shard_build=_shard_build_panels,
     local_spmv=_local_spmv_panels,
+    shard_build_desc=_shard_build_panels_desc,
+    local_spmv_desc=_local_spmv_panels_desc,
     lowerings=(LOWERING_MASK, LOWERING_DESC),
     desc_array_names=tuple(R.SPC5PanelDescDevice._fields),
     desc_device_view=lambda arrays: R.SPC5PanelDescDevice(*arrays),
@@ -1256,33 +1436,49 @@ class ShardState:
     dtype: Any = None
 
 
-def shard_plan(mat: F.SPC5Matrix, ndev: int, *, cb: Optional[int] = None,
+def shard_plan(mat: F.SPC5Matrix, ndev: int, *, layout: str = "auto",
+               cb: Optional[int] = None,
                mesh=None, axis: str = "data", dtype=None,
                pr: Optional[int] = None, xw: int = 512,
                store: Optional[S.RecordStore] = None,
                config: Optional[S.PanelConfig] = None, tune: bool = True,
-               reorder=None, lowering: str = LOWERING_MASK) -> ShardedPlan:
+               reorder=None, lowering: str = "auto",
+               partition: str = "auto") -> ShardedPlan:
     """The shard pass: tune -> reorder -> partition -> per-layout stacking.
-
-    ``lowering`` accepts the registry names for symmetry with
-    :func:`make_plan`, but the sharded stacking hooks build mask-decode
-    arrays only -- a "descriptor" request (explicit or tuned) is demoted to
-    "mask" and the demotion recorded in the shard trace entry.
 
     Mirrors :func:`make_plan` for the distributed path: the global matrix is
     (optionally) tuned at ``workers=ndev`` and reordered, then row-
-    partitioned with the block-balanced interval algorithm, and each slab is
-    built in the resolved layout and stacked by the registry's
-    ``shard_build`` hook. ``pr=None`` keeps the flat whole-vector per-device
-    layout; a panel height (or a tuned/explicit panels config) selects the
-    row-panel-tiled one. The returned :class:`ShardedPlan` carries the
-    permutation and the pass trace; ``distributed.make_distributed_spmv``
-    consumes it without any layout branching.
+    partitioned into balanced slabs, and each slab is built in the resolved
+    layout x lowering and stacked by the registry's ``shard_build`` /
+    ``shard_build_desc`` hook. ``layout`` requests a per-device layout by
+    registry key; "auto" resolves it from the tuned/explicit config, a
+    panel height (``pr`` selects the row-panel-tiled layout), or the flat
+    whole-vector default.
+
+    ``lowering`` resolves exactly like :func:`make_plan`'s: an explicit
+    name must be served by the layout's shard hooks
+    (:attr:`LayoutSpec.shard_lowerings`) or the call raises; "auto" takes
+    the tuned pick when the store has one, else the :func:`lowering_cost`
+    arbitration -- tuned lowerings survive ``workers=ndev`` unchanged.
+
+    ``partition`` picks the row-slab balance objective: "blocks" (the
+    paper's equal-block split), "nnz" (equal-nonzero split for skewed
+    structure), or "auto", which reads the structure profile's per-part nnz
+    skew and switches to "nnz" when the block split would leave the
+    heaviest shard straggling the mesh (evidence in the trace). The
+    returned :class:`ShardedPlan` carries the permutation and the pass
+    trace; ``distributed.make_distributed_spmv`` consumes it without any
+    layout or lowering branching (:func:`local_execute_spmv` owns that
+    dispatch).
     """
-    from .partition import partition_matrix, partition_row_starts
+    from . import partition as P
     from jax.sharding import NamedSharding, PartitionSpec
 
     lowering = canonical_lowering(lowering)     # fail fast on typos
+    if partition not in P.PARTITION_MODES + ("auto",):
+        raise ValueError(
+            f"unknown partition mode {partition!r}; expected one of "
+            f"{P.PARTITION_MODES + ('auto',)}")
     trace: List[dict] = []
     # The tune/reorder passes here intentionally differ from make_plan's:
     # tuning runs at workers=ndev and clamps against the PER-SHARD slab (not
@@ -1326,6 +1522,7 @@ def shard_plan(mat: F.SPC5Matrix, ndev: int, *, cb: Optional[int] = None,
             rentry["applied"] = True
     trace.append(rentry)
 
+    req_layout = canonical_layout(layout)
     layout = LAYOUT_WHOLE
     spr, sxw, scb = pr, xw, cb
     if config is not None:
@@ -1347,21 +1544,73 @@ def shard_plan(mat: F.SPC5Matrix, ndev: int, *, cb: Optional[int] = None,
     if layout != LAYOUT_PANELS and pr is not None:
         layout = LAYOUT_PANELS
         spr, scb = pr, (64 if scb is None else scb)
+    if req_layout not in _LAYOUT_SENTINELS:
+        # an explicit layout request wins over the tuned/pr-derived one
+        layout = req_layout
+        if layout == LAYOUT_PANELS and spr is None:
+            spr, scb = 512, (64 if scb is None else scb)
 
     spec = get_layout(layout)
-    parts = partition_matrix(mat, ndev)
-    row_starts = partition_row_starts(mat, ndev)
+    if not spec.shard_lowerings:
+        raise ValueError(
+            f"layout {layout!r} registers no sharded stacking hooks; "
+            f"shardable layouts: "
+            f"{[n for n in _REGISTRY if _REGISTRY[n].shard_lowerings]}")
+
+    # lowering resolution, mirroring _layout_pass: explicit > tuned >
+    # cost-model arbitration -- over the lowerings the layout's shard hooks
+    # actually serve. An explicit request the hooks can't serve is an error,
+    # not a silent demotion.
+    lentry: dict = {"pass": "lowering", "layout": layout}
+    served = spec.shard_lowerings
+    if lowering not in _LOWERING_SENTINELS:
+        if lowering not in served:
+            raise ValueError(
+                f"layout {layout!r} has no sharded {lowering!r} stacking "
+                f"hooks (serves {served}); pass lowering='auto' or one of "
+                f"{served}")
+        lentry["reason"] = "requested"
+    elif (config is not None and config.lowering
+            and config.lowering in served):
+        lowering = config.lowering
+        lentry["reason"] = "tuned"
+    else:
+        lowering = min(served,
+                       key=lambda n: lowering_cost(
+                           mat.r, mat.c, mat.avg_nnz_per_block,
+                           np.dtype(dtype or mat.values.dtype).itemsize, n))
+        lentry["reason"] = "cost-model"
+    lentry["lowering"] = lowering
+    trace.append(lentry)
+
+    # partition-mode resolution: "auto" compares the nnz skew (max-shard nnz
+    # over the ideal share) of the paper's block-balanced split against the
+    # nnz-balanced one and switches when rebalancing meaningfully helps --
+    # the arXiv:1805.11938 load-imbalance criterion, with the evidence
+    # traced.
+    pentry: dict = {"pass": "partition", "requested": partition,
+                    "ndev": int(ndev)}
+    mode = partition
+    if partition == "auto":
+        skew_blocks = P.nnz_skew(mat, ndev, "blocks")
+        skew_nnz = P.nnz_skew(mat, ndev, "nnz")
+        mode = "nnz" if skew_nnz < 0.95 * skew_blocks else "blocks"
+        pentry.update(skew_blocks=round(skew_blocks, 4),
+                      skew_nnz=round(skew_nnz, 4))
+    pentry["mode"] = mode
+    trace.append(pentry)
+
+    parts = P.partition_matrix(mat, ndev, mode)
+    row_starts = P.partition_row_starts(mat, ndev, mode)
     sstate = ShardState(mat=mat, parts=parts, pr=spr, xw=sxw, cb=scb,
                         dtype=dtype)
-    arrays, geom = spec.shard_build(sstate)
+    build_hook = (spec.shard_build_desc if lowering == LOWERING_DESC
+                  else spec.shard_build)
+    arrays, geom = build_hook(sstate)
+    geom["lowering"] = lowering     # _resolve_attr keys array names off it
     sentry = {"pass": "shard", "layout": layout, "ndev": int(ndev),
-              "lowering": LOWERING_MASK,
               **{k: v for k, v in sorted(geom.items())
                  if isinstance(v, (int, float, str, bool))}}
-    if (lowering == LOWERING_DESC
-            or (config is not None and config.lowering == LOWERING_DESC)):
-        sentry["lowering_demoted"] = True
-        sentry["lowering_demoted_reason"] = "mask-only-shard-stacking"
     trace.append(sentry)
     row_start = jnp.asarray(row_starts)
     if mesh is not None:
@@ -1379,3 +1628,17 @@ def shard_plan(mat: F.SPC5Matrix, ndev: int, *, cb: Optional[int] = None,
                        meta=tuple(sorted(geom.items())), col_perm=col_perm,
                        row_iperm=row_iperm, reorder=reorder_name,
                        trace_json=json.dumps(trace, sort_keys=True))
+
+
+def local_execute_spmv(sh: ShardedPlan, local: Tuple[jax.Array, ...],
+                       x: jax.Array) -> jax.Array:
+    """One shard's SpMV inside shard_map: the distributed analogue of
+    :func:`execute_spmv`, and like it the only place that dispatches on the
+    sharded plan's layout x lowering -- ``make_distributed_spmv`` stays
+    generic. ``local`` is one device's slice of ``sh.arrays`` (leading
+    ``ndev`` axis squeezed), ``x`` the full (permuted) input vector."""
+    spec = get_layout(sh.layout)
+    hook = (spec.local_spmv_desc
+            if _meta_lowering(sh.meta) == LOWERING_DESC
+            else spec.local_spmv)
+    return hook(sh, local, x)

@@ -1,28 +1,33 @@
 """Public SpMV/SpMM entry points, now thin wrappers over ``repro.core.plan``.
 
 Historically this module owned four handle classes (whole-vector, panel,
-reordered, beta_test) and the layout dispatch between them; all of that
-lives in the execution-plan architecture now (layout registry + composable
-passes + one executor -- see ``repro.core.plan`` and
-``docs/architecture.md``). The entry points below keep their exact
-signatures and semantics:
+reordered, beta_test) and three prepare entry points dispatching between
+them; all of that lives in the execution-plan architecture now (layout
+registry + composable passes + one executor -- see ``repro.core.plan`` and
+``docs/architecture.md``), behind ONE keyword-driven entry point:
 
-  * :func:`prepare` / :func:`prepare_panels` / :func:`prepare_test` run the
-    plan pipeline (tune -> reorder -> layout -> build) and return an
-    :class:`~repro.core.plan.SPC5Plan` -- a pytree handle satisfying the old
-    handle APIs (``.dev``, geometry attributes, ``.multi`` /
-    ``.single_values`` for the test split, ``.strategy`` / ``.stats`` /
-    ``.rows_fused`` for reordered plans), so existing jit/checkpoint call
-    sites are untouched;
+  * :func:`prepare` runs the plan pipeline (tune -> reorder -> layout ->
+    build) and returns an :class:`~repro.core.plan.SPC5Plan` -- a pytree
+    handle satisfying the old handle APIs (``.dev``, geometry attributes,
+    ``.multi`` / ``.single_values`` for the test split, ``.strategy`` /
+    ``.stats`` / ``.rows_fused`` for reordered plans). Every axis is a
+    keyword: ``layout`` (incl. "test" for the beta_test split),
+    ``lowering``, ``reorder``, ``config`` (a tuned/explicit
+    ``selector.PanelConfig`` taken whole), ``verify``.
   * :func:`spmv` / :func:`spmm` / :func:`spmv_test` route to the plan
     executor, which dispatches through the layout registry (the only place
     layout branching exists).
+
+:func:`prepare_panels` and :func:`prepare_test` remain as deprecation
+shims over :func:`prepare` (``DeprecationWarning``; the lint rule
+``no-deprecated-entry-points`` keeps them out of in-tree non-test callers).
 
 The legacy class names are aliases of ``SPC5Plan``; inspect ``plan.layout``
 (a ``repro.core.plan`` registry key) or ``plan.trace`` to discriminate.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional, Union
 
 import jax
@@ -49,19 +54,29 @@ VMEM_WHOLE_VECTOR_BUDGET = P.VMEM_WHOLE_VECTOR_BUDGET
 fits_whole_vector = P.fits_whole_vector
 
 
-def prepare(mat: F.SPC5Matrix, cb: Optional[int] = None, align: int = 8,
-            dtype=None, layout: str = "auto", pr: Optional[int] = None,
-            xw: Optional[int] = None, nvec: int = 1,
-            store: Optional[S.RecordStore] = None, tune: bool = True,
+def prepare(mat: F.SPC5Matrix, *, layout: str = "auto",
+            lowering: str = "auto",
             reorder: Union[None, str, RE.Reordering] = None,
-            lowering: str = "auto", verify=False) -> P.SPC5Plan:
-    """Build an execution plan for ``mat`` (see ``repro.core.plan``).
+            config: Optional[S.PanelConfig] = None, verify=False,
+            pr: Optional[int] = None, xw: Optional[int] = None,
+            cb: Optional[int] = None, nvec: int = 1, align: int = 8,
+            dtype=None, store: Optional[S.RecordStore] = None,
+            tune: bool = True, multi_layout: str = "auto") -> P.SPC5Plan:
+    """Build an execution plan for ``mat`` -- the one prepare entry point.
 
     ``layout``: a registry key ("whole_vector", "panels", "test"), a legacy
     alias ("whole"), or "auto" (default) -- auto picks whole-vector when x
     and y fit the VMEM budget (:func:`fits_whole_vector`) and panels
-    otherwise. Pass ``nvec`` (widest SpMM batch this plan will see) so
+    otherwise. ``layout="test"`` builds the beta(r,c)_test split (multi-nnz
+    blocks in the ``multi_layout`` block layout + the singleton COO tail,
+    panel-bucketed with a Pallas tail kernel when the multi part resolves
+    to panels). Pass ``nvec`` (widest SpMM batch this plan will see) so
     "auto" budgets the nvt-wide SpMM tiles, not just the SpMV vectors.
+
+    **Explicit config**: ``config`` takes a ``selector.PanelConfig`` whole
+    -- its layout/geometry/reorder/lowering fill every axis the caller left
+    at its default, and tuning is bypassed (the programmatic analogue of a
+    fully explicit call; the serving tier's cached-decision replay path).
 
     **Auto-tuning**: when nothing is requested explicitly (``layout="auto"``
     and ``pr``/``xw``/``cb`` all None) and a record store is available --
@@ -92,6 +107,25 @@ def prepare(mat: F.SPC5Matrix, cb: Optional[int] = None, align: int = 8,
     format/plan invariants (``repro.analysis.verify``) and raises on any
     violation; a callable receives the ``VerifyReport`` instead.
     """
+    if config is not None:
+        if layout == "auto":
+            layout = config.layout or "auto"
+        pr = pr if pr is not None else (config.pr or None)
+        xw = xw if xw is not None else (config.xw or None)
+        cb = cb if cb is not None else (config.cb or None)
+        if lowering == "auto" and config.lowering:
+            lowering = config.lowering
+        if reorder is None and config.reorder:
+            reorder = config.reorder
+        # no tune=False needed: the config's layout is explicit, which
+        # already bypasses the store in the tune pass (trace: "explicit")
+    layout = P.canonical_layout(layout)
+    if layout == P.LAYOUT_TEST:
+        return P.make_plan(mat, layout=P.LAYOUT_TEST,
+                           multi_layout=multi_layout, pr=pr, xw=xw, cb=cb,
+                           nvec=nvec, align=align, dtype=dtype, store=store,
+                           tune=tune, reorder=reorder, lowering=lowering,
+                           verify=verify)
     return P.make_plan(mat, layout=layout, pr=pr, xw=xw, cb=cb, nvec=nvec,
                        align=align, dtype=dtype, store=store, tune=tune,
                        reorder=reorder, lowering=lowering, verify=verify)
@@ -100,12 +134,16 @@ def prepare(mat: F.SPC5Matrix, cb: Optional[int] = None, align: int = 8,
 def prepare_panels(mat: F.SPC5Matrix, pr: int = 512, cb: int = 64,
                    xw: int = 512, align: int = 8, dtype=None,
                    lowering: str = "mask", verify=False) -> P.SPC5Plan:
-    """Row-panel-tiled plan with explicit geometry (no tuning; the mask
-    lowering unless requested otherwise, matching this helper's
-    fixed-everything contract)."""
-    return P.make_plan(mat, layout=P.LAYOUT_PANELS, pr=pr, cb=cb, xw=xw,
-                       align=align, dtype=dtype, tune=False,
-                       lowering=lowering, verify=verify)
+    """Deprecated: use ``prepare(mat, layout="panels", pr=..., cb=...,
+    xw=..., tune=False)`` -- kept as a thin shim (same semantics: explicit
+    geometry, no tuning, mask lowering unless requested otherwise)."""
+    warnings.warn(
+        "ops.prepare_panels is deprecated; use ops.prepare(mat, "
+        "layout='panels', pr=..., cb=..., xw=..., tune=False)",
+        DeprecationWarning, stacklevel=2)
+    return prepare(mat, layout=P.LAYOUT_PANELS, pr=pr, cb=cb, xw=xw,
+                   align=align, dtype=dtype, tune=False, lowering=lowering,
+                   verify=verify)
 
 
 def prepare_test(mat: F.SPC5Matrix, cb: Optional[int] = None, align: int = 8,
@@ -114,18 +152,17 @@ def prepare_test(mat: F.SPC5Matrix, cb: Optional[int] = None, align: int = 8,
                  store: Optional[S.RecordStore] = None, tune: bool = True,
                  reorder: Union[None, str, RE.Reordering] = None,
                  lowering: str = "auto", verify=False) -> P.SPC5Plan:
-    """Build the beta(r,c)_test split plan: multi-nnz blocks in the block
-    layout + the singleton COO tail (panel-bucketed, with a Pallas tail
-    kernel, when the multi part resolves to panels).
-
-    ``layout``/``pr``/``xw``/``store``/``tune``/``lowering`` configure the
-    multi-block sub-plan; ``reorder`` permutes the WHOLE matrix (blocks and
-    singletons see the same permutation) before the split.
-    """
-    return P.make_plan(mat, layout=P.LAYOUT_TEST, multi_layout=layout,
-                       pr=pr, xw=xw, cb=cb, nvec=nvec, align=align,
-                       dtype=dtype, store=store, tune=tune, reorder=reorder,
-                       lowering=lowering, verify=verify)
+    """Deprecated: use ``prepare(mat, layout="test", multi_layout=...)`` --
+    kept as a thin shim (its old ``layout`` argument is the multi-block
+    sub-plan's layout request)."""
+    warnings.warn(
+        "ops.prepare_test is deprecated; use ops.prepare(mat, "
+        "layout='test', multi_layout=...)",
+        DeprecationWarning, stacklevel=2)
+    return prepare(mat, layout=P.LAYOUT_TEST, multi_layout=layout, pr=pr,
+                   xw=xw, cb=cb, nvec=nvec, align=align, dtype=dtype,
+                   store=store, tune=tune, reorder=reorder,
+                   lowering=lowering, verify=verify)
 
 
 def spmv(h: P.SPC5Plan, x: jax.Array, *, use_pallas: Optional[bool] = None,

@@ -3,6 +3,12 @@
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --batch 4 \
         --tokens 32 [--mesh 1x4] [--kv-dtype int8]
 
+Every knob is a :class:`repro.launch.server.ServeConfig` field -- the
+argparse flags below are GENERATED from the dataclass
+(``server.add_config_args``), so the CLI and the programmatic
+``server.start(config)`` path share one configuration surface (the
+``serve-config-knobs`` lint rule enforces it).
+
 SPC5 integration: ``--records`` points at a benchmark record store
 (JSON/JSONL file or directory, e.g. the CI ``benchmarks/records/``
 artifact) and installs it as the selector's default store, so any sparse
@@ -16,7 +22,9 @@ reordering subsystem (repro.core.reorder) before the layout is built --
 the layer's call signature is unchanged, the permutation is internal --
 and ``--lowering mask|descriptor|auto`` selects the kernel variant (the
 bit-mask decode vs build-time descriptors; auto lets the tuner/cost model
-arbitrate).
+arbitrate). Adding ``--qps RATE`` routes the vocab bench through the
+persistent serving tier instead: plan cache, request coalescing, and an
+open-loop Poisson traffic run (``repro.launch.server``).
 """
 from __future__ import annotations
 
@@ -27,43 +35,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.launch import server as SV
+
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="yi-6b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--tokens", type=int, default=32)
-    ap.add_argument("--mesh", default="", help="DxM, e.g. 1x4")
-    ap.add_argument("--kv-dtype", default="bfloat16",
-                    choices=["bfloat16", "int8"])
-    ap.add_argument("--records", default="",
-                    help="SPC5 record store (file or dir) for auto-tuned "
-                         "sparse-layer configs")
-    ap.add_argument("--vocab-spmv", type=float, default=0.0, metavar="DENSITY",
-                    help="bench a pruned SparseLinear vocab projection at "
-                         "this density (0 = off)")
-    ap.add_argument("--panel", default="",
-                    help="explicit pr,xw,cb for --vocab-spmv (overrides the "
-                         "tuned config)")
-    ap.add_argument("--reorder", default="",
-                    help="reordering strategy for --vocab-spmv (sigma, rcm, "
-                         "colwindow, auto; empty = none)")
-    ap.add_argument("--lowering", default="auto",
-                    choices=["auto", "mask", "descriptor"],
-                    help="kernel lowering for --vocab-spmv: the bit-mask "
-                         "decode, build-time descriptors, or the "
-                         "tuner/cost-model pick (default)")
-    ap.add_argument("--verify", action="store_true",
-                    help="statically verify plans at admission time "
-                         "(repro.analysis.verify): the record store's "
-                         "schema on load, and every --vocab-spmv plan's "
-                         "format invariants before it serves a request")
+    SV.add_config_args(ap)
     args = ap.parse_args(argv)
+    config = SV.config_from_args(args)
 
     from repro.core import selector as S
-    if args.records:
-        store = S.load_records(args.records)
-        if args.verify:
+    if config.records:
+        store = S.load_records(config.records)
+        if config.verify:
             from repro.analysis.verify import verify_records
             print(verify_records(store).summary())
         S.set_default_store(store)
@@ -76,80 +60,107 @@ def main(argv=None):
 
     devs = jax.devices()
     rules = None
-    if args.mesh:
-        d, m = (int(x) for x in args.mesh.split("x"))
+    if config.mesh:
+        d, m = (int(x) for x in config.mesh.split("x"))
         mesh = Mesh(np.asarray(devs[:d * m]).reshape(d, m),
                     ("data", "model"))
         rules = make_rules(mesh, fsdp=False, seq_shard=False)
 
     import dataclasses
-    cfg = dataclasses.replace(get_smoke_config(args.arch), dtype="float32")
+    cfg = dataclasses.replace(get_smoke_config(config.arch), dtype="float32")
     if cfg.is_encdec:
         raise SystemExit("enc-dec serving path: see tests/test_models.py")
     params = MD.init_params(cfg, jax.random.PRNGKey(0))
-    cache = MD.init_cache(cfg, args.batch, args.tokens,
-                          kv_dtype=args.kv_dtype)
+    cache = MD.init_cache(cfg, config.batch, config.tokens,
+                          kv_dtype=config.kv_dtype)
     if rules is not None:
         params = jax.device_put(params, rules.param_shardings(params))
         cache = jax.device_put(cache, rules.cache_shardings(cache))
     step = jax.jit(make_serve_step(cfg, rules), donate_argnums=(1,))
 
-    tok = jnp.zeros((args.batch, 1), jnp.int32)
+    tok = jnp.zeros((config.batch, 1), jnp.int32)
     outs = []
     t0 = time.perf_counter()
-    for t in range(args.tokens - 1):
+    for t in range(config.tokens - 1):
         tok, cache = step(params, cache, tok, jnp.asarray(t))
         outs.append(np.asarray(tok))
     jax.block_until_ready(tok)
     dt = time.perf_counter() - t0
-    print(f"{args.arch}: {args.batch}x{args.tokens} tokens, "
-          f"{args.batch * (args.tokens - 1) / dt:.1f} tok/s "
-          f"(kv={args.kv_dtype}, mesh={args.mesh or '1 device'})")
+    print(f"{config.arch}: {config.batch}x{config.tokens} tokens, "
+          f"{config.batch * (config.tokens - 1) / dt:.1f} tok/s "
+          f"(kv={config.kv_dtype}, mesh={config.mesh or '1 device'})")
 
-    if args.vocab_spmv > 0:
-        from repro.core.sparse_linear import SparseLinear
-        kw = {}
-        if args.panel:
-            pr, xw, cb = (int(v) for v in args.panel.split(","))
-            kw = dict(layout="panels", pr=pr, xw=xw, cb=cb)
-        if args.reorder:
-            kw["reorder"] = args.reorder
-        kw["lowering"] = args.lowering
-        rng = np.random.default_rng(0)
-        w = rng.standard_normal((cfg.vocab, cfg.d_model)).astype(np.float32)
-        lin = SparseLinear.from_dense(w, density=args.vocab_spmv,
-                                      dtype=np.float32, nvec=1, **kw)
-        x = jnp.asarray(rng.standard_normal(cfg.d_model), jnp.float32)
-        h = lin.handle
-        if args.verify:
-            # plan-cache admission gate: prove the plan's invariants before
-            # the first request touches it (raises on any violation)
-            from repro.analysis.verify import verify_plan
-            report = verify_plan(h, nvec=1).raise_if_failed()
-            print(f"verify: plan ok ({len(report.checked)} rules checked)")
-        lin(x).block_until_ready()
-        t0 = time.perf_counter()
-        iters = 16
-        for _ in range(iters):
-            y = lin(x)
-        y.block_until_ready()
-        us = (time.perf_counter() - t0) / iters * 1e6
-        # the plan is self-describing: layout key + geometry from its static
-        # meta, reordering from its pass trace -- no layout branching here
-        if h.is_reordered:
-            reo_str = (f", reorder={h.strategy}"
-                       f"[fused_rows={int(h.rows_fused)}]")
-        elif args.reorder:
-            reo_str = f", reorder={args.reorder}[declined]"
-        else:
-            reo_str = ""
-        cfg_str = ",".join(f"{k}={v}" for k, v in h.meta
-                           if k in ("pr", "xw", "cb", "lowering"))
-        src = ("explicit --panel" if args.panel
-               else ("tuned" if args.records else "defaults"))
-        print(f"vocab_spmv[{cfg.vocab}x{cfg.d_model}@{args.vocab_spmv}]: "
-              f"{us:.1f} us/call ({h.layout}, {cfg_str}, config={src}"
-              f"{reo_str})")
+    if config.vocab_spmv > 0 and config.qps > 0:
+        _serve_vocab(config, cfg)
+    elif config.vocab_spmv > 0:
+        _bench_vocab(config, cfg)
+
+
+def _serve_vocab(config: SV.ServeConfig, cfg) -> None:
+    """The persistent-tier path: plan cache + coalescing + open-loop
+    Poisson traffic at ``--qps`` (records already installed above)."""
+    srv = SV.start(config, install_records=False)
+    rng = np.random.default_rng(0)
+    xs = [jnp.asarray(rng.standard_normal(cfg.d_model), jnp.float32)
+          for _ in range(8)]
+    with srv:
+        res = SV.open_loop(srv, xs, config.qps,
+                           duration_s=config.duration_s)
+        st = srv.stats()
+    c = st["cache"]
+    print(f"vocab_serve[{cfg.vocab}x{cfg.d_model}@{config.vocab_spmv}]: "
+          f"offered={res['qps_offered']:.0f}qps "
+          f"achieved={res['qps_achieved']:.0f}qps "
+          f"p50={res['p50_us']:.0f}us p99={res['p99_us']:.0f}us "
+          f"(batches={st['batches']}, mean_batch={st['mean_batch']:.1f}, "
+          f"cache {c['hits']}h/{c['misses']}m/{c['evictions']}e)")
+
+
+def _bench_vocab(config: SV.ServeConfig, cfg) -> None:
+    """The original closed-loop microbench (``--qps`` left at 0)."""
+    from repro.core.sparse_linear import SparseLinear
+    kw = {}
+    if config.panel:
+        pr, xw, cb = (int(v) for v in config.panel.split(","))
+        kw = dict(layout="panels", pr=pr, xw=xw, cb=cb)
+    if config.reorder:
+        kw["reorder"] = config.reorder
+    kw["lowering"] = config.lowering
+    rng = np.random.default_rng(0)
+    w = rng.standard_normal((cfg.vocab, cfg.d_model)).astype(np.float32)
+    lin = SparseLinear.from_dense(w, density=config.vocab_spmv,
+                                  dtype=np.float32, nvec=1, **kw)
+    x = jnp.asarray(rng.standard_normal(cfg.d_model), jnp.float32)
+    h = lin.handle
+    if config.verify:
+        # plan-cache admission gate: prove the plan's invariants before
+        # the first request touches it (raises on any violation)
+        from repro.analysis.verify import verify_plan
+        report = verify_plan(h, nvec=1).raise_if_failed()
+        print(f"verify: plan ok ({len(report.checked)} rules checked)")
+    lin(x).block_until_ready()
+    t0 = time.perf_counter()
+    iters = 16
+    for _ in range(iters):
+        y = lin(x)
+    y.block_until_ready()
+    us = (time.perf_counter() - t0) / iters * 1e6
+    # the plan is self-describing: layout key + geometry from its static
+    # meta, reordering from its pass trace -- no layout branching here
+    if h.is_reordered:
+        reo_str = (f", reorder={h.strategy}"
+                   f"[fused_rows={int(h.rows_fused)}]")
+    elif config.reorder:
+        reo_str = f", reorder={config.reorder}[declined]"
+    else:
+        reo_str = ""
+    cfg_str = ",".join(f"{k}={v}" for k, v in h.meta
+                       if k in ("pr", "xw", "cb", "lowering"))
+    src = ("explicit --panel" if config.panel
+           else ("tuned" if config.records else "defaults"))
+    print(f"vocab_spmv[{cfg.vocab}x{cfg.d_model}@{config.vocab_spmv}]: "
+          f"{us:.1f} us/call ({h.layout}, {cfg_str}, config={src}"
+          f"{reo_str})")
 
 
 if __name__ == "__main__":

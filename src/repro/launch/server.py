@@ -1,0 +1,483 @@
+"""Persistent SpMV serving tier: plan cache, request coalescing, traffic.
+
+The launcher in ``repro.launch.serve`` builds a plan per process and calls
+it in a closed loop; this module is the persistent tier behind it, shared
+by the CLI and the programmatic ``start(config)`` path:
+
+  * :class:`ServeConfig` -- every serve knob as one frozen dataclass. The
+    CLI's argparse flags are GENERATED from its fields
+    (:func:`add_config_args` / :func:`config_from_args`), so a knob that
+    exists on the command line provably exists on the config (the
+    ``serve-config-knobs`` lint rule keeps it that way).
+  * :class:`PlanCache` -- built plans keyed by
+    ``plan.plan_cache_key(mat, **request)`` (matrix content fingerprint +
+    the normalised prepare request), verified at admission time
+    (``repro.analysis.verify``), evicted LRU by device-array footprint
+    (``plan.plan_nbytes``); hit/miss/eviction counters in :meth:`stats`.
+  * :class:`SPC5Server` -- request coalescing: concurrent ``submit`` calls
+    gather into ONE SpMM up to the plan's tuned ``xw`` under a bounded-wait
+    batching window, with the next microbatch prefetched asynchronously (a
+    depth-2 handoff queue lets the gather thread stack batch k+1 while the
+    executor runs batch k). Batches pad to power-of-two widths so the
+    executor sees a bounded set of SpMM shapes; padding columns are zero
+    and SpMM is column-independent, so coalesced results stay bit-identical
+    to per-request SpMV (pinned by tests/test_server.py).
+  * :func:`open_loop` / :func:`saturation_sweep` -- an open-loop traffic
+    harness: Poisson arrivals at a configured QPS (submission times are
+    scheduled up front and never wait on completions), per-request p50/p99
+    latency, achieved-vs-offered QPS, swept multiplicatively until the tier
+    stops keeping up. ``benchmarks.bench_serve`` records the sweep as the
+    ``spmv_serve.*`` section under the CI perf-regression gate.
+"""
+from __future__ import annotations
+
+import argparse
+import collections
+import concurrent.futures
+import dataclasses
+import queue
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import formats as F
+from repro.core import plan as P
+
+
+# ----------------------------------------------------------------------------
+# ServeConfig: the one declaration of every serve knob
+# ----------------------------------------------------------------------------
+
+def _knob(default, help: str, **meta):
+    meta["help"] = help
+    return dataclasses.field(default=default, metadata=meta)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Every serve knob, CLI and programmatic alike.
+
+    The field set is the source of truth: ``add_config_args`` generates one
+    ``--flag`` per field (``_`` -> ``-``), and the ``serve-config-knobs``
+    lint rule rejects any literal ``add_argument`` knob in the launch
+    modules that does not map back to a field here.
+    """
+
+    # --- decode-loop launcher (repro.launch.serve) ---
+    arch: str = _knob("yi-6b", "model architecture for the decode loop")
+    batch: int = _knob(4, "decode batch size")
+    tokens: int = _knob(32, "tokens to decode")
+    mesh: str = _knob("", "DxM device mesh, e.g. 1x4 (empty = 1 device)")
+    kv_dtype: str = _knob("bfloat16", "KV-cache dtype",
+                          choices=["bfloat16", "int8"])
+
+    # --- sparse-layer build inputs ---
+    records: str = _knob("", "SPC5 record store (file or dir) for "
+                             "auto-tuned sparse-layer configs")
+    vocab_spmv: float = _knob(0.0, "bench/serve a pruned vocab projection "
+                                   "at this density (0 = off)",
+                              metavar="DENSITY")
+    panel: str = _knob("", "explicit pr,xw,cb (overrides the tuned config)")
+    reorder: str = _knob("", "reordering strategy (sigma, rcm, colwindow, "
+                             "auto; empty = none)")
+    lowering: str = _knob("auto", "kernel lowering",
+                          choices=["auto", "mask", "descriptor"])
+    verify: bool = _knob(False, "statically verify records on load and "
+                                "every plan at cache-admission time")
+
+    # --- serving tier ---
+    cache_mb: int = _knob(256, "plan-cache capacity in MiB (LRU by plan "
+                               "device-array bytes)")
+    window_us: float = _knob(200.0, "coalescing bounded-wait window in "
+                                    "microseconds")
+    max_batch: int = _knob(0, "coalescing cap (0 = the plan's tuned xw)")
+    prefetch_depth: int = _knob(2, "microbatches stacked ahead of the "
+                                   "executor")
+    qps: float = _knob(0.0, "open-loop Poisson arrival rate; with "
+                            "--vocab-spmv routes the bench through the "
+                            "serving tier (0 = closed-loop microbench)")
+    duration_s: float = _knob(0.5, "open-loop bench duration per QPS point")
+
+
+def add_config_args(ap: argparse.ArgumentParser,
+                    cls=ServeConfig) -> argparse.ArgumentParser:
+    """Generate one ``--flag`` per ``cls`` field (the only argparse source
+    for serve knobs; bools become ``store_true`` switches)."""
+    for f in dataclasses.fields(cls):
+        flag = "--" + f.name.replace("_", "-")
+        meta = dict(f.metadata)
+        if isinstance(f.default, bool):
+            ap.add_argument(flag, action="store_true",
+                            help=meta.get("help"))
+        else:
+            ap.add_argument(flag, type=type(f.default), default=f.default,
+                            **meta)
+    return ap
+
+
+def config_from_args(args: argparse.Namespace, cls=ServeConfig):
+    """The parsed-namespace -> config half of the argparse round trip."""
+    return cls(**{f.name: getattr(args, f.name)
+                  for f in dataclasses.fields(cls)})
+
+
+def plan_request(config: ServeConfig) -> Dict[str, object]:
+    """The ``ops.prepare`` keyword request a config describes -- also the
+    cache-key payload (``plan.plan_cache_key`` normalises the defaults)."""
+    req: Dict[str, object] = {"lowering": config.lowering}
+    if config.panel:
+        pr, xw, cb = (int(v) for v in config.panel.split(","))
+        req.update(layout="panels", pr=pr, xw=xw, cb=cb, tune=False)
+    if config.reorder:
+        req["reorder"] = config.reorder
+    return req
+
+
+# ----------------------------------------------------------------------------
+# PlanCache: fingerprint-keyed, verify-on-admission, LRU by plan bytes
+# ----------------------------------------------------------------------------
+
+class PlanCache:
+    """Built plans keyed by (matrix fingerprint, normalised request).
+
+    ``get_or_build`` hashes the matrix CONTENT (``plan.matrix_fingerprint``)
+    plus every requested build decision, so a re-uploaded but identical
+    matrix hits while one flipped mask bit or a different lowering misses.
+    Admission optionally proves the fresh plan's format/plan invariants
+    (``repro.analysis.verify``) before it can serve a request; eviction is
+    LRU by device-array footprint (``plan.plan_nbytes``) against
+    ``capacity_bytes``. Thread-safe: the serving tier builds from its
+    gather thread while callers warm plans from theirs.
+    """
+
+    def __init__(self, capacity_bytes: int = 256 << 20, *,
+                 verify_on_admit: bool = False,
+                 builder: Optional[Callable[..., P.SPC5Plan]] = None):
+        self.capacity_bytes = int(capacity_bytes)
+        self.verify_on_admit = verify_on_admit
+        if builder is None:
+            from repro.kernels import ops
+            builder = ops.prepare
+        self._build = builder
+        self._entries: "collections.OrderedDict[str, tuple]" = \
+            collections.OrderedDict()          # key -> (plan, nbytes)
+        self._bytes = 0
+        self._lock = threading.Lock()
+        self.hits = self.misses = self.evictions = 0
+
+    def get_or_build(self, mat: F.SPC5Matrix, **request) -> P.SPC5Plan:
+        key = P.plan_cache_key(mat, **request)
+        with self._lock:
+            hit = self._entries.get(key)
+            if hit is not None:
+                self._entries.move_to_end(key)
+                self.hits += 1
+                return hit[0]
+            self.misses += 1
+        # build outside the lock: a slow build must not serialise hits
+        plan = self._build(mat, **request)
+        if self.verify_on_admit:
+            from repro.analysis.verify import verify_plan
+            verify_plan(plan).raise_if_failed()
+        nbytes = P.plan_nbytes(plan)
+        with self._lock:
+            if key not in self._entries:
+                while self._entries and self._bytes + nbytes > \
+                        self.capacity_bytes:
+                    _, (_, old) = self._entries.popitem(last=False)
+                    self._bytes -= old
+                    self.evictions += 1
+                self._entries[key] = (plan, nbytes)
+                self._bytes += nbytes
+        return plan
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def stats(self) -> Dict[str, float]:
+        total = self.hits + self.misses
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "entries": len(self._entries),
+                "bytes": self._bytes, "capacity_bytes": self.capacity_bytes,
+                "hit_rate": self.hits / total if total else 0.0}
+
+
+# ----------------------------------------------------------------------------
+# SPC5Server: bounded-wait coalescing with async microbatch prefetch
+# ----------------------------------------------------------------------------
+
+_Request = collections.namedtuple("_Request", "x future t_submit")
+
+
+def _pow2_width(n: int, cap: int) -> int:
+    """Batches pad to power-of-two widths (capped at the coalescing limit)
+    so the executor sees a bounded set of SpMM shapes."""
+    w = 1
+    while w < n:
+        w <<= 1
+    return min(w, max(cap, n))
+
+
+class SPC5Server:
+    """Coalesce concurrent SpMV requests into one SpMM.
+
+    ``submit(x)`` enqueues a vector and returns a future. A gather thread
+    drains the queue into microbatches: it takes the first waiter, then
+    holds the batch open for at most ``window_us`` (the bounded-wait
+    window) or until ``max_batch`` columns -- the plan's tuned ``xw`` by
+    default, so a full batch is exactly the column tile the kernel was
+    tuned for. Finished batches land on a depth-``prefetch_depth`` handoff
+    queue; while the executor runs batch k, the gather thread is already
+    stacking batch k+1 (the async prefetch). A single-request batch runs
+    the SpMV executor; a wider one pads to the next power of two with zero
+    columns and runs SpMM -- column-independent, so every caller's y is
+    bit-identical to a lone ``execute_spmv`` (see tests/test_server.py).
+    """
+
+    def __init__(self, plan: P.SPC5Plan, *, cache: Optional[PlanCache] = None,
+                 window_us: float = 200.0, max_batch: int = 0,
+                 prefetch_depth: int = 2):
+        self.plan = plan
+        self.cache = cache
+        meta = dict(plan.meta)
+        self.max_batch = int(max_batch) if max_batch and max_batch > 0 \
+            else int(meta.get("xw") or 128)
+        self.window_s = float(window_us) * 1e-6
+        self._pending: "collections.deque[_Request]" = collections.deque()
+        self._cv = threading.Condition()
+        self._closed = False
+        self._batches: "queue.Queue" = queue.Queue(maxsize=max(
+            1, int(prefetch_depth)))
+        self.requests = self.batches = 0
+        self.widest_batch = 0
+        self._coalesced_sum = 0
+        self._gather = threading.Thread(target=self._gather_loop,
+                                        name="spc5-gather", daemon=True)
+        self._exec = threading.Thread(target=self._exec_loop,
+                                      name="spc5-exec", daemon=True)
+        self._gather.start()
+        self._exec.start()
+
+    # -- client API ----------------------------------------------------------
+
+    def submit(self, x) -> "concurrent.futures.Future":
+        """Enqueue y = A @ x; the future resolves to y (original row
+        order, device-ready)."""
+        if self._closed:
+            raise RuntimeError("server is closed")
+        req = _Request(jnp.asarray(x), concurrent.futures.Future(),
+                       time.perf_counter())
+        with self._cv:
+            self._pending.append(req)
+            self._cv.notify_all()
+        return req.future
+
+    def spmv(self, x, timeout: Optional[float] = None) -> jax.Array:
+        """Synchronous y = A @ x through the coalescing path."""
+        return self.submit(x).result(timeout=timeout)
+
+    def close(self) -> None:
+        with self._cv:
+            if self._closed:
+                return
+            self._closed = True
+            self._cv.notify_all()
+        self._gather.join(timeout=5)
+        self._exec.join(timeout=5)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def stats(self) -> Dict[str, object]:
+        out: Dict[str, object] = {
+            "requests": self.requests, "batches": self.batches,
+            "mean_batch": (self.requests / self.batches
+                           if self.batches else 0.0),
+            "widest_batch": self.widest_batch,
+            "coalesced": self._coalesced_sum,
+            "max_batch": self.max_batch,
+            "window_us": self.window_s * 1e6,
+        }
+        if self.cache is not None:
+            out["cache"] = self.cache.stats()
+        return out
+
+    # -- worker threads ------------------------------------------------------
+
+    def _gather_loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._pending and not self._closed:
+                    self._cv.wait(timeout=0.05)
+                if not self._pending and self._closed:
+                    break
+                reqs = [self._pending.popleft()]
+                deadline = time.perf_counter() + self.window_s
+                while len(reqs) < self.max_batch:
+                    if self._pending:
+                        reqs.append(self._pending.popleft())
+                        continue
+                    remaining = deadline - time.perf_counter()
+                    if remaining <= 0 or self._closed:
+                        break
+                    self._cv.wait(timeout=remaining)
+            self._batches.put(reqs)     # blocks when the prefetch is full
+        self._batches.put(None)
+
+    def _exec_loop(self) -> None:
+        while True:
+            reqs = self._batches.get()
+            if reqs is None:
+                break
+            try:
+                if len(reqs) == 1:
+                    y = P.execute_spmv(self.plan, reqs[0].x)
+                    jax.block_until_ready(y)
+                    ys = [y]
+                else:
+                    width = _pow2_width(len(reqs), self.max_batch)
+                    X = jnp.stack([r.x for r in reqs], axis=1)
+                    if width > len(reqs):
+                        pad = jnp.zeros((X.shape[0], width - len(reqs)),
+                                        X.dtype)
+                        X = jnp.concatenate([X, pad], axis=1)
+                    Y = P.execute_spmm(self.plan, X)
+                    jax.block_until_ready(Y)
+                    ys = [Y[:, j] for j in range(len(reqs))]
+                self.batches += 1
+                self.requests += len(reqs)
+                self.widest_batch = max(self.widest_batch, len(reqs))
+                if len(reqs) > 1:
+                    self._coalesced_sum += len(reqs)
+                for r, y in zip(reqs, ys):
+                    r.future.set_result(y)
+            except Exception as e:      # noqa: BLE001 -- fail the callers
+                for r in reqs:
+                    if not r.future.done():
+                        r.future.set_exception(e)
+
+
+# ----------------------------------------------------------------------------
+# Open-loop traffic harness
+# ----------------------------------------------------------------------------
+
+def open_loop(server: SPC5Server, xs: Sequence, qps: float,
+              duration_s: float = 0.5, seed: int = 0,
+              warmup: int = 2) -> Dict[str, float]:
+    """Drive ``server`` open-loop: Poisson arrivals at ``qps`` for
+    ``duration_s``, submissions never waiting on completions.
+
+    Arrival times are drawn up front (exponential inter-arrivals); each
+    request's latency is submit-to-future-resolution, measured by a done
+    callback so the driver thread never sits in ``result()``. Returns
+    offered/achieved QPS and p50/p99 latency in microseconds -- the gap
+    between offered and achieved is the saturation signal
+    (:func:`saturation_sweep`).
+    """
+    rng = np.random.default_rng(seed)
+    for i in range(warmup):
+        server.spmv(xs[i % len(xs)])
+    arrivals, t = [], 0.0
+    while True:
+        t += rng.exponential(1.0 / qps)
+        if t >= duration_s:
+            break
+        arrivals.append(t)
+    if not arrivals:
+        arrivals = [0.0]
+    latencies: List[float] = []
+    lat_lock = threading.Lock()
+
+    def _record(t_submit, fut):
+        dt = time.perf_counter() - t_submit
+        with lat_lock:
+            latencies.append(dt)
+
+    t0 = time.perf_counter()
+    futures = []
+    for t in arrivals:
+        delay = t0 + t - time.perf_counter()
+        if delay > 0:
+            time.sleep(delay)
+        ts = time.perf_counter()
+        fut = server.submit(xs[len(futures) % len(xs)])
+        fut.add_done_callback(lambda f, ts=ts: _record(ts, f))
+        futures.append(fut)
+    concurrent.futures.wait(futures)
+    elapsed = time.perf_counter() - t0
+    lat = np.sort(np.asarray(latencies))
+    return {
+        "qps_offered": qps,
+        "qps_achieved": len(futures) / elapsed,
+        "completed": len(futures),
+        "elapsed_s": elapsed,
+        "p50_us": float(lat[int(0.50 * (len(lat) - 1))] * 1e6),
+        "p99_us": float(lat[int(0.99 * (len(lat) - 1))] * 1e6),
+    }
+
+
+def saturation_sweep(server: SPC5Server, xs: Sequence, *,
+                     qps0: float = 50.0, factor: float = 2.0,
+                     max_points: int = 5, duration_s: float = 0.5,
+                     seed: int = 0) -> List[Dict[str, float]]:
+    """Sweep offered QPS multiplicatively until the tier stops keeping up
+    (achieved < 85% of offered) or ``max_points`` is reached; the last
+    point's achieved QPS is the saturation throughput."""
+    points, qps = [], qps0
+    for _ in range(max_points):
+        res = open_loop(server, xs, qps, duration_s=duration_s, seed=seed)
+        points.append(res)
+        if res["qps_achieved"] < 0.85 * res["qps_offered"]:
+            break
+        qps *= factor
+    return points
+
+
+# ----------------------------------------------------------------------------
+# start(config): the programmatic entry point the CLI shares
+# ----------------------------------------------------------------------------
+
+def _default_matrix(config: ServeConfig) -> F.SPC5Matrix:
+    """The config's pruned vocab-projection matrix (the CLI's serve
+    subject) at the architecture's decode shape."""
+    if config.vocab_spmv <= 0:
+        raise ValueError("start(config) needs a matrix: pass mat= or set "
+                         "vocab_spmv > 0")
+    from repro.configs import get_smoke_config
+    from repro.core import matgen
+    cfg = get_smoke_config(config.arch)
+    csr = matgen.pruned_weight(cfg.vocab, cfg.d_model, config.vocab_spmv,
+                               (1, 8), seed=0)
+    return F.csr_to_spc5(csr, 1, 8)
+
+
+def start(config: ServeConfig, mat: Optional[F.SPC5Matrix] = None, *,
+          cache: Optional[PlanCache] = None,
+          install_records: bool = True) -> SPC5Server:
+    """Build the serving tier a config describes and return the running
+    server: record store installed (unless the launcher already did --
+    ``install_records=False``), plan built through the cache (admission
+    verify when ``config.verify``), coalescing threads started."""
+    if install_records and config.records:
+        from repro.core import selector as S
+        store = S.load_records(config.records)
+        if config.verify:
+            from repro.analysis.verify import verify_records
+            verify_records(store).raise_if_failed()
+        S.set_default_store(store)
+    if mat is None:
+        mat = _default_matrix(config)
+    if cache is None:
+        cache = PlanCache(capacity_bytes=config.cache_mb << 20,
+                          verify_on_admit=config.verify)
+    plan = cache.get_or_build(mat, **plan_request(config))
+    return SPC5Server(plan, cache=cache, window_us=config.window_us,
+                      max_batch=config.max_batch,
+                      prefetch_depth=config.prefetch_depth)

@@ -119,10 +119,10 @@ def test_descriptor_parity_test_split():
     x = jnp.asarray(np.random.default_rng(4).standard_normal(320),
                     jnp.float32)
     for layout in LAYOUTS:
-        hm = ops.prepare_test(mat, dtype=np.float32, layout=layout,
-                              lowering="mask", **GEOM)
-        hd = ops.prepare_test(mat, dtype=np.float32, layout=layout,
-                              lowering="descriptor", **GEOM)
+        hm = ops.prepare(mat, layout="test", multi_layout=layout,
+                         dtype=np.float32, lowering="mask", **GEOM)
+        hd = ops.prepare(mat, layout="test", multi_layout=layout,
+                         dtype=np.float32, lowering="descriptor", **GEOM)
         assert hd.multi.lowering == "descriptor" == hd.lowering
         bit_equal(ops.spmv_test(hm, x, use_pallas=False),
                   ops.spmv_test(hd, x, use_pallas=False))
@@ -294,16 +294,25 @@ def test_clamp_config_demotes_unregistered_lowering():
         S.PanelConfig("whole_vector", lowering="csr5")
 
 
-def test_shard_plan_demotes_descriptor():
+def test_shard_plan_serves_descriptor():
+    """An explicit descriptor request survives sharding: the layout's
+    shard_build_desc hook stacks descriptor tables (no demotion, no
+    mask arrays) and the trace records the requested resolution."""
     from repro.core import distributed as D
+    from repro.core import ref_spmv as R
 
     csr = matgen.banded(144, 5, 1.0, seed=37)
     sh = D.shard_matrix(F.csr_to_spc5(csr, 1, 8), 2, cb=32, tune=False,
                         lowering="descriptor")
     sentry = sh.trace[-1]
     assert sentry["pass"] == "shard"
-    assert sentry["lowering"] == "mask"
-    assert sentry["lowering_demoted"] is True
+    assert sentry["lowering"] == "descriptor"
+    assert "lowering_demoted" not in sentry
+    lentry = [e for e in sh.trace if e.get("pass") == "lowering"][0]
+    assert lentry["reason"] == "requested"
+    # the stacked arrays resolve by the DESCRIPTOR name set
+    assert len(sh.arrays) == len(R.SPC5DescDevice._fields)
+    assert sh.desc_valid.shape == sh.desc_vidx.shape
 
 
 # ----------------------------------------------------------------------------

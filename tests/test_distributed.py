@@ -141,3 +141,61 @@ m = make_test_mesh((2, 2, 2), ("pod", "data", "model"))
 assert m.shape == {"pod": 2, "data": 2, "model": 2}
 print("OK")
 """)
+
+
+def test_tuned_lowerings_survive_workers(devices8):
+    # descriptor (and every tuned lowering) must survive workers=ndev: the
+    # old shard path silently demoted descriptor requests to mask
+    devices8("""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.core import formats as F, distributed as D, matgen
+from repro.core import plan as P
+csr = matgen.banded(1024, 6, 0.7, seed=5)
+d = csr.to_dense()
+mat = F.csr_to_spc5(csr, 1, 8)
+mesh = Mesh(np.array(jax.devices()).reshape(8,), ("data",))
+x = np.random.default_rng(0).standard_normal(1024).astype(np.float32)
+for layout, kw in [("whole_vector", dict(cb=64)),
+                   ("panels", dict(pr=256, cb=32))]:
+    for lowering in ("mask", "descriptor"):
+        sh = D.shard_matrix(mat, 8, mesh=mesh, layout=layout,
+                            lowering=lowering, **kw)
+        served = [e for e in sh.trace if e.get("pass") == "lowering"]
+        assert served and served[0]["lowering"] == lowering, sh.trace
+        assert served[0]["reason"] == "requested", sh.trace
+        assert not any(k.endswith("demoted") for e in sh.trace for k in e)
+        y = np.asarray(D.make_distributed_spmv(sh, mesh)(jnp.asarray(x)))
+        tgt = d @ x
+        rel = np.abs(y - tgt).max() / (np.abs(tgt).max() + 1e-9)
+        assert rel < 1e-5, (layout, lowering, rel)
+print("OK")
+""")
+
+
+def test_nnz_balanced_partition_on_devices(devices8):
+    # a skewed matrix: nnz-balancing must shrink the heaviest shard's share
+    # vs block-count balancing, and both must stay correct end to end
+    devices8("""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.core import formats as F, distributed as D, matgen, partition as PT
+csr = matgen.powerlaw(1536, 12, alpha=1.6, seed=2)
+d = csr.to_dense()
+mat = F.csr_to_spc5(csr, 1, 8)
+mesh = Mesh(np.array(jax.devices()).reshape(8,), ("data",))
+x = np.random.default_rng(3).standard_normal(1536).astype(np.float32)
+skews = {}
+for mode in ("blocks", "nnz"):
+    sh = D.shard_matrix(mat, 8, cb=64, mesh=mesh, lowering="mask",
+                        partition=mode)
+    part = [e for e in sh.trace if e.get("pass") == "partition"][0]
+    assert part["mode"] == mode, sh.trace
+    skews[mode] = PT.nnz_skew(mat, 8, mode)
+    y = np.asarray(D.make_distributed_spmv(sh, mesh)(jnp.asarray(x)))
+    tgt = d @ x
+    rel = np.abs(y - tgt).max() / (np.abs(tgt).max() + 1e-9)
+    assert rel < 1e-5, (mode, rel)
+assert skews["nnz"] <= skews["blocks"], skews
+print("OK")
+""")

@@ -131,7 +131,7 @@ def test_beta_test_split_kernel(rc):
     csr = matgen.powerlaw(600, 5, seed=9)
     d = csr.to_dense()
     mat = F.csr_to_spc5(csr, *rc)
-    ht = ops.prepare_test(mat, cb=64, dtype=np.float32)
+    ht = ops.prepare(mat, layout="test", cb=64, dtype=np.float32)
     assert ht.single_values.shape[0] > 0   # power-law has singletons
     x = np.random.default_rng(1).standard_normal(600).astype(np.float32)
     y = ops.spmv_test(ht, jnp.asarray(x), use_pallas=False)

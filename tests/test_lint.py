@@ -199,7 +199,58 @@ def test_record_schema_sync_detects_drift(monkeypatch):
 
 def test_rule_registry_complete():
     assert L.rule_names() == ("layout-dispatch", "layout-lowerings-declared",
-                              "no-dense-in-core", "pallas-call",
-                              "record-schema-sync")
+                              "no-dense-in-core",
+                              "no-deprecated-entry-points", "pallas-call",
+                              "record-schema-sync", "serve-config-knobs")
     with pytest.raises(SystemExit):
         L.main(["--rule", "not-a-rule"])
+
+
+# ----------------------------------------------------------------------------
+# Serving-tier rules
+# ----------------------------------------------------------------------------
+
+def test_deprecated_entry_points_fire(tmp_path):
+    root = plant(tmp_path, "models/bad.py", """
+        from repro.kernels import ops
+
+        def f(mat):
+            return ops.prepare_panels(mat, pr=128)
+    """)
+    findings = L.check_no_deprecated_entry_points(root)
+    assert [f.rule for f in findings] == ["no-deprecated-entry-points"]
+    assert "ops.prepare" in findings[0].message
+    # the shim's own module may reference the name (it defines it)
+    root2 = plant(tmp_path, "kernels/ops.py", """
+        def prepare(mat, **kw): ...
+        def prepare_panels(mat, **kw):
+            return prepare(mat, **kw)
+        X = prepare_panels(None)
+    """)
+    assert L.check_no_deprecated_entry_points(root2) == []
+
+
+def test_deprecated_entry_points_scan_benchmarks(tmp_path):
+    root = plant(tmp_path, "core/ok.py", "X = 1\n")
+    bench = os.path.join(root, "benchmarks")
+    os.makedirs(bench)
+    with open(os.path.join(bench, "bad.py"), "w") as f:
+        f.write("from repro.core import distributed as D\n"
+                "sh = D.shard_matrix_panels(None, 8)\n")
+    findings = L.check_no_deprecated_entry_points(root)
+    assert [f.rule for f in findings] == ["no-deprecated-entry-points"]
+    assert "shard_matrix" in findings[0].message
+
+
+def test_serve_config_knobs_clean_and_fires(tmp_path):
+    assert L.check_serve_config_knobs(REPO) == []
+    # a literal flag with no ServeConfig field fires; one that maps is fine
+    root = plant(tmp_path, "launch/serve.py", """
+        import argparse
+        ap = argparse.ArgumentParser()
+        ap.add_argument("--rogue-knob", type=int, default=0)
+        ap.add_argument("--kv-dtype", default="bfloat16")
+    """)
+    findings = L.check_serve_config_knobs(root)
+    assert [f.rule for f in findings] == ["serve-config-knobs"]
+    assert "rogue_knob" in findings[0].message

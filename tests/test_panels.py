@@ -27,7 +27,8 @@ def rand_dense(n, m, density, seed=0, dtype=np.float32):
 def make_panel_handle(n, m, density, rc, seed, pr=PR, cb=8, xw=XW):
     d = rand_dense(n, m, density, seed=seed)
     mat = F.csr_to_spc5(F.csr_from_dense(d), *rc)
-    return d, ops.prepare_panels(mat, pr=pr, cb=cb, xw=xw)
+    return d, ops.prepare(mat, layout="panels", pr=pr, cb=cb, xw=xw,
+                          tune=False, lowering="mask")
 
 
 @pytest.mark.parametrize("rc", F.SUPPORTED_BLOCKS)
@@ -135,12 +136,14 @@ def test_sparse_linear_panel_layout():
 def test_panel_empty_and_edge():
     d = np.zeros((64, 64), np.float32)
     mat = F.csr_to_spc5(F.csr_from_dense(d), 2, 4)
-    h = ops.prepare_panels(mat, pr=8, cb=4, xw=16)
+    h = ops.prepare(mat, layout="panels", pr=8, cb=4, xw=16,
+                    tune=False, lowering="mask")
     y = ops.spmv(h, jnp.ones(64), use_pallas=False)
     np.testing.assert_allclose(np.asarray(y), 0.0)
     d[63, 63] = 3.0
     mat = F.csr_to_spc5(F.csr_from_dense(d), 4, 8)
-    h = ops.prepare_panels(mat, pr=8, cb=4, xw=16)
+    h = ops.prepare(mat, layout="panels", pr=8, cb=4, xw=16,
+                    tune=False, lowering="mask")
     y = ops.spmv(h, jnp.ones(64), use_pallas=True, interpret=True,
                  double_buffer=False)
     assert np.asarray(y)[63] == pytest.approx(3.0)
@@ -159,7 +162,8 @@ def test_panel_empty_and_edge():
 def test_property_panels_match_whole(n, m, density, rc, pr, xw, seed):
     d = rand_dense(n, m, density, seed=seed)
     mat = F.csr_to_spc5(F.csr_from_dense(d), *rc)
-    hp = ops.prepare_panels(mat, pr=pr, cb=8, xw=xw)
+    hp = ops.prepare(mat, layout="panels", pr=pr, cb=8, xw=xw,
+                     tune=False, lowering="mask")
     hw = ops.prepare(mat, layout="whole_vector")
     x = np.random.default_rng(seed + 1).standard_normal(m).astype(np.float32)
     y_pan = np.asarray(ops.spmv(hp, jnp.asarray(x), use_pallas=False))

@@ -5,8 +5,10 @@ Three concerns:
   * **Plan mechanics**: registry key set, pytree round-trip under jit/vmap
     (including the test split's nested sub-plan), attribute resolution, and
     the ``plan.trace`` golden decisions.
-  * **Equivalence suite**: each legacy entry point (``prepare``,
-    ``prepare_test``, ``SparseLinear.from_dense``, ``shard_matrix`` -- with
+  * **Equivalence suite**: each entry point (``prepare`` -- including the
+    deprecated ``prepare_panels``/``prepare_test`` shims, which must warn
+    AND stay bit-equal to their unified spellings --
+    ``SparseLinear.from_dense``, ``shard_matrix`` -- with
     and without ``reorder=``/``config=``) must produce BIT-IDENTICAL
     spmv/spmm results to a hand-rolled replica of the pre-refactor
     computation (layout build + explicit gather/scatter exactly as the old
@@ -131,8 +133,8 @@ def test_plan_pytree_roundtrip_jit_vmap():
 def test_test_split_plan_pytree_roundtrip():
     csr = matgen.powerlaw(300, 5, seed=9)
     mat = F.csr_to_spc5(csr, 1, 8)
-    ht = ops.prepare_test(mat, dtype=np.float32, layout="panels", pr=16,
-                          xw=32, cb=8)
+    ht = ops.prepare(mat, layout="test", multi_layout="panels",
+                     dtype=np.float32, pr=16, xw=32, cb=8)
     assert ht.layout == P.LAYOUT_TEST and ht.multi.layout == P.LAYOUT_PANELS
     flat, tdef = jax.tree.flatten(ht)
     ht2 = jax.tree.unflatten(tdef, flat)
@@ -197,9 +199,10 @@ def test_prepare_equivalence_whole_and_panels():
                      dtype=np.float32)
     bit_equal(ops.spmv(hp, x, use_pallas=False),
               _old_panels_spmv(mat, x, 16, 8, 32))
-    # prepare_panels is the same plan, bit-identical
-    bit_equal(ops.spmv(ops.prepare_panels(mat, pr=16, cb=8, xw=32,
-                                          dtype=np.float32), x,
+    # the unified panels call is the same plan, bit-identical
+    bit_equal(ops.spmv(ops.prepare(mat, layout="panels", pr=16, cb=8, xw=32,
+                                   dtype=np.float32, tune=False,
+                                   lowering="mask"), x,
                        use_pallas=False),
               ops.spmv(hp, x, use_pallas=False))
     # and the answers are right
@@ -230,6 +233,54 @@ def test_prepare_equivalence_with_reorder():
             d.astype(np.float64) @ np.asarray(x, np.float64), atol=2e-3)
 
 
+def test_deprecated_shims_warn_and_match():
+    """The pre-redesign entry points survive as DeprecationWarning shims
+    whose plans are bit-identical to the unified keyword calls."""
+    csr, _ = rand_csr(96, 96, 0.15, seed=31)
+    mat = F.csr_to_spc5(csr, 2, 4)
+    x = jnp.asarray(np.random.default_rng(8).standard_normal(96),
+                    jnp.float32)
+    with pytest.warns(DeprecationWarning, match="prepare_panels"):
+        hs = ops.prepare_panels(mat, pr=16, cb=8, xw=32, dtype=np.float32)
+    hu = ops.prepare(mat, layout="panels", pr=16, cb=8, xw=32,
+                     dtype=np.float32, tune=False, lowering="mask")
+    bit_equal(ops.spmv(hs, x, use_pallas=False),
+              ops.spmv(hu, x, use_pallas=False))
+    with pytest.warns(DeprecationWarning, match="prepare_test"):
+        hs = ops.prepare_test(mat, cb=64, dtype=np.float32)
+    hu = ops.prepare(mat, layout="test", cb=64, dtype=np.float32)
+    bit_equal(ops.spmv_test(hs, x, use_pallas=False),
+              ops.spmv_test(hu, x, use_pallas=False))
+    with pytest.warns(DeprecationWarning, match="shard_matrix_panels"):
+        shs = D.shard_matrix_panels(mat, 2, pr=16, cb=8, xw=32)
+    shu = D.shard_matrix(mat, 2, layout="panels", pr=16, cb=8, xw=32,
+                         tune=False, lowering="mask")
+    for a, b in zip(shs.arrays, shu.arrays):
+        bit_equal(a, b)
+    bit_equal(shs.row_start, shu.row_start)
+
+
+def test_prepare_config_takes_panelconfig_whole():
+    """ops.prepare(config=...) replays a tuned decision verbatim: layout,
+    geometry, and lowering come from the PanelConfig and tuning is
+    bypassed (the serving tier's cache-miss build path)."""
+    csr, _ = rand_csr(96, 96, 0.15, seed=33)
+    mat = F.csr_to_spc5(csr, 2, 4)
+    cfg = S.PanelConfig("panels", 16, 32, 8, lowering="descriptor")
+    h = ops.prepare(mat, config=cfg, dtype=np.float32)
+    assert h.layout == P.LAYOUT_PANELS
+    assert h.pr == 16 and h.xw == 32 and h.cb == 8
+    assert h.lowering == "descriptor"
+    assert h.trace[0]["source"] == "explicit"   # tuning bypassed
+    # explicit keywords beat the config's fields
+    h2 = ops.prepare(mat, config=cfg, lowering="mask", dtype=np.float32)
+    assert h2.lowering == "mask"
+    x = jnp.asarray(np.random.default_rng(9).standard_normal(96),
+                    jnp.float32)
+    bit_equal(ops.spmv(h, x, use_pallas=False),
+              ops.spmv(h2, x, use_pallas=False))
+
+
 def test_prepare_test_equivalence():
     csr = matgen.powerlaw(320, 5, seed=13)
     d = csr.to_dense()
@@ -237,7 +288,7 @@ def test_prepare_test_equivalence():
                     jnp.float32)
     mat = F.csr_to_spc5(csr, 2, 4)
     # flat tail (whole-vector multi): old path = prepare(multi) + spmv_coo
-    ht = ops.prepare_test(mat, cb=64, dtype=np.float32)
+    ht = ops.prepare(mat, layout="test", cb=64, dtype=np.float32)
     assert ht.tail_pr == 0
     split = F.split_singletons(mat)
     y_old = _old_whole_spmv(split.multi, x, 64) + R.spmv_coo(
@@ -245,8 +296,8 @@ def test_prepare_test_equivalence():
         jnp.asarray(split.single_values.astype(np.float32)), x, nrows=320)
     bit_equal(ops.spmv_test(ht, x, use_pallas=False), y_old)
     # panel tail: old path = panels multi + spmv_coo_panels buckets
-    htp = ops.prepare_test(mat, dtype=np.float32, layout="panels", pr=16,
-                           xw=32, cb=8)
+    htp = ops.prepare(mat, layout="test", multi_layout="panels",
+                      dtype=np.float32, pr=16, xw=32, cb=8)
     assert htp.tail_pr == 16
     y_tail = R.spmv_coo_panels(htp.single_rows, htp.single_cols,
                                htp.single_values, x, pr=16,
@@ -263,8 +314,8 @@ def test_pallas_tail_kernel_matches_oracle():
     spmv_coo_panels oracle, bitwise on the shared contributions."""
     csr = matgen.powerlaw(320, 5, seed=17)
     mat = F.csr_to_spc5(csr, 2, 4)
-    ht = ops.prepare_test(mat, dtype=np.float32, layout="panels", pr=16,
-                          xw=32, cb=8)
+    ht = ops.prepare(mat, layout="test", multi_layout="panels",
+                     dtype=np.float32, pr=16, xw=32, cb=8)
     assert ht.tail_pr and ht.single_values.size
     assert ht.tail_xw % 8 == 0 and ht.tail_xbase.shape == (ht.multi.npanels,)
     x = jnp.asarray(np.random.default_rng(5).standard_normal(320),
@@ -378,7 +429,9 @@ def test_shard_matrix_equivalence():
                   tune=False)]
     tgt = csr.to_dense().astype(np.float64) @ np.asarray(x, np.float64)
     for kw in cases:
-        sh = D.shard_matrix(mat, 1, mesh=mesh, **kw)
+        # the pre-refactor replica predates descriptor shard stacking, so
+        # pin the mask lowering (descriptor parity has its own suite)
+        sh = D.shard_matrix(mat, 1, mesh=mesh, lowering="mask", **kw)
         y_new = D.make_distributed_spmv(sh, mesh)(x)
         y_old = _old_make_distributed_spmv(sh, mesh)(x)
         bit_equal(y_new, y_old)
@@ -430,8 +483,9 @@ def test_plan_trace_golden():
                      "reason": "requested", "lowering": "mask"}
     assert h2.strategy == "rcm" and h2.is_reordered
     # the test split delegates tuning to its multi sub-plan
-    ht = ops.prepare_test(F.csr_to_spc5(scr, 1, 8), dtype=np.float32,
-                          layout="panels", pr=16, xw=32, cb=8)
+    ht = ops.prepare(F.csr_to_spc5(scr, 1, 8), layout="test",
+                     multi_layout="panels", dtype=np.float32, pr=16, xw=32,
+                     cb=8)
     assert ht.trace[0] == {"pass": "tune", "source": "delegated"}
     assert [e["pass"] for e in ht.multi.trace] == ["tune", "reorder",
                                                    "layout", "build"]
@@ -440,6 +494,14 @@ def test_plan_trace_golden():
 def test_shard_plan_trace():
     csr = matgen.banded(200, 4, 1.0, seed=37)
     sh = D.shard_matrix(F.csr_to_spc5(csr, 1, 8), 2, cb=32, tune=False)
-    assert [e["pass"] for e in sh.trace] == ["tune", "reorder", "shard"]
-    assert sh.trace[2]["layout"] == "whole_vector"
-    assert sh.trace[2]["ndev"] == 2
+    assert [e["pass"] for e in sh.trace] == ["tune", "reorder", "lowering",
+                                            "partition", "shard"]
+    lowering, part, shard = sh.trace[2:]
+    assert lowering["reason"] == "cost-model"
+    assert lowering["lowering"] in ("mask", "descriptor")
+    assert part["mode"] in ("blocks", "nnz")
+    assert "skew_blocks" in part and "skew_nnz" in part   # "auto" evidence
+    assert shard["layout"] == "whole_vector"
+    assert shard["ndev"] == 2
+    assert shard["lowering"] == lowering["lowering"] == \
+        dict(sh.meta)["lowering"]

@@ -238,17 +238,18 @@ def test_test_split_panel_tail_and_reorder():
     x = np.random.default_rng(5).standard_normal(256).astype(np.float32)
     tgt = d.astype(np.float64) @ x.astype(np.float64)
     mat = F.csr_to_spc5(csr, 2, 4)
-    hw = ops.prepare_test(mat, cb=64, dtype=np.float32)
+    hw = ops.prepare(mat, layout="test", cb=64, dtype=np.float32)
     assert hw.tail_pr == 0
-    hp = ops.prepare_test(mat, dtype=np.float32, layout="panels", **GEOM)
+    hp = ops.prepare(mat, layout="test", multi_layout="panels",
+                     dtype=np.float32, **GEOM)
     assert hp.tail_pr == GEOM["pr"] and hp.single_rows.ndim == 2
     assert hp.single_rows.shape[0] == hp.multi.npanels
     yw = np.asarray(ops.spmv_test(hw, jnp.asarray(x), use_pallas=False))
     yp = np.asarray(ops.spmv_test(hp, jnp.asarray(x), use_pallas=False))
     np.testing.assert_allclose(yw, tgt, atol=2e-3)
     np.testing.assert_allclose(yp, yw, atol=1e-5)
-    hr = ops.prepare_test(mat, dtype=np.float32, layout="panels",
-                          reorder="sigma", **GEOM)
+    hr = ops.prepare(mat, layout="test", multi_layout="panels",
+                     dtype=np.float32, reorder="sigma", **GEOM)
     yr = np.asarray(ops.spmv_test(hr, jnp.asarray(x), use_pallas=False))
     np.testing.assert_allclose(yr, tgt, atol=2e-3)
 

@@ -409,14 +409,17 @@ def test_layout_demotion_reason_in_trace():
         P._REGISTRY[P.LAYOUT_WHOLE] = spec
 
 
-def test_shard_demotion_reason_in_trace():
+def test_shard_descriptor_not_demoted():
+    """The mask-only-shard-stacking demotion is gone: descriptor sharding
+    is served natively, so no shard trace entry carries a demotion flag
+    (the trace-schema rule has nothing to fire on)."""
     from repro.core import distributed as D
     csr = matgen.banded(144, 5, 1.0, seed=37)
     sh = D.shard_matrix(F.csr_to_spc5(csr, 1, 8), 2, cb=32, tune=False,
                         lowering="descriptor")
     sentry = sh.trace[-1]
-    assert sentry["lowering_demoted"] is True
-    assert sentry["lowering_demoted_reason"] == "mask-only-shard-stacking"
+    assert sentry["lowering"] == "descriptor"
+    assert not any(k.endswith("demoted") for e in sh.trace for k in e)
 
 
 def test_tune_demotion_reason_in_trace():

@@ -33,6 +33,18 @@ record-schema-sync
     Runtime rule: the benchmark record schema is defined once. The
     ``RecordStore.add`` signature mirrors the ``Record`` dataclass fields
     in order, and the JSONL v3 field list matches.
+serve-config-knobs
+    Serve knobs are declared once, on ``launch.server.ServeConfig``. Any
+    literal ``add_argument("--flag")`` in the launch modules must map back
+    to a ServeConfig field (the CLI is supposed to be GENERATED from the
+    dataclass via ``add_config_args``; a hand-added flag that bypasses the
+    config is the drift this rule catches).
+no-deprecated-entry-points
+    The deprecated prepare/shard entry points (``prepare_panels``,
+    ``prepare_test``, ``shard_matrix_panels``) survive only as
+    ``DeprecationWarning`` shims: nothing under ``src/repro`` or
+    ``benchmarks`` may call them except the modules that define them
+    (tests may, to pin the shims' behaviour).
 
 The rules are importable (tests/test_lint.py, and test_plan.py's dispatch
 test is a thin wrapper over ``layout-dispatch``); the CLI is what CI runs.
@@ -235,6 +247,41 @@ def check_no_dense_in_core(root: str = REPO_ROOT) -> List[Finding]:
     return out
 
 
+#: Deprecated entry points and the module that is allowed to define/call
+#: each (the shim's own home).
+DEPRECATED_ENTRY_POINTS = {
+    "prepare_panels": os.path.join("kernels", "ops.py"),
+    "prepare_test": os.path.join("kernels", "ops.py"),
+    "shard_matrix_panels": os.path.join("core", "distributed.py"),
+}
+
+
+@_rule("no-deprecated-entry-points")
+def check_no_deprecated_entry_points(root: str = REPO_ROOT) -> List[Finding]:
+    out: List[Finding] = []
+    scans = [(os.path.join("src", "repro"), True), ("benchmarks", False)]
+    for sub, is_src in scans:
+        if not os.path.isdir(os.path.join(root, sub)):
+            continue
+        for ap, rel in _py_files(root, sub):
+            tree = _parse(ap)
+            if tree is None:
+                continue
+            for node in ast.walk(tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = _call_name(node)
+                home = DEPRECATED_ENTRY_POINTS.get(name)
+                if home is None or (is_src and rel == home):
+                    continue
+                out.append(Finding(
+                    "no-deprecated-entry-points", _rel(root, ap),
+                    node.lineno,
+                    f"{name}(...) is a deprecation shim; call the unified "
+                    f"entry point ({'ops.prepare' if 'prepare' in name else 'distributed.shard_matrix'}) with keywords instead"))
+    return out
+
+
 # ----------------------------------------------------------------------------
 # runtime rules (import the tree they lint)
 # ----------------------------------------------------------------------------
@@ -309,6 +356,38 @@ def check_record_schema_sync(root: str = REPO_ROOT) -> List[Finding]:
             f"Record schema drifted from JSONL v3 (16 fields ending in "
             f"'lowering'); got {len(fields)} fields ending in "
             f"{fields[-1]!r} -- bump RECORDS_VERSION"))
+    return out
+
+
+@_rule("serve-config-knobs")
+def check_serve_config_knobs(root: str = REPO_ROOT) -> List[Finding]:
+    _import_repro(root)
+    from repro.launch.server import ServeConfig
+    fields = {f.name for f in dataclasses.fields(ServeConfig)}
+    out: List[Finding] = []
+    launch = os.path.join("src", "repro", "launch")
+    for fn in ("serve.py", "server.py"):
+        ap_path = os.path.join(root, launch, fn)
+        if not os.path.exists(ap_path):
+            continue
+        tree = _parse(ap_path)
+        if tree is None:
+            continue
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.Call)
+                    and _call_name(node) == "add_argument" and node.args
+                    and isinstance(node.args[0], ast.Constant)
+                    and isinstance(node.args[0].value, str)):
+                continue
+            flag = node.args[0].value
+            knob = flag.lstrip("-").replace("-", "_")
+            if knob not in fields:
+                out.append(Finding(
+                    "serve-config-knobs", os.path.join(launch, fn),
+                    node.lineno,
+                    f"literal CLI knob {flag!r} has no ServeConfig field "
+                    f"{knob!r}; declare serve knobs on the dataclass and "
+                    f"let add_config_args generate the flag"))
     return out
 
 
