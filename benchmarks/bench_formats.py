@@ -3,7 +3,6 @@ cost for the synthetic Set-A/Set-B analogues (SuiteSparse is offline;
 DESIGN.md §8.5)."""
 from __future__ import annotations
 
-import time
 from typing import Dict, List
 
 import jax.numpy as jnp
@@ -12,6 +11,8 @@ import numpy as np
 from repro.core import formats as F
 from repro.core import matgen
 from repro.kernels import ops
+
+from .timing import time_fn, time_once
 
 TABLE_BLOCKS = [(1, 8), (2, 4), (2, 8), (4, 4), (4, 8), (8, 4)]
 
@@ -40,18 +41,12 @@ def stats_table(matrices: Dict, quick: bool = False) -> List[Dict]:
 def conversion_cost(name: str = "atmosmodd") -> Dict:
     """Paper claim: conversion from CSR ~= 2x one sequential SpMV."""
     csr = matgen.SET_A[name]()
-    t0 = time.perf_counter()
-    mat = F.csr_to_spc5(csr, 1, 8)
-    t_conv = time.perf_counter() - t0
+    mat, t_conv = time_once(lambda: F.csr_to_spc5(csr, 1, 8))
     h = ops.prepare(mat, cb=512)
     x = jnp.asarray(np.random.default_rng(0).standard_normal(csr.shape[1]),
                     jnp.float32)
-    y = ops.spmv(h, x, use_pallas=False).block_until_ready()
-    t0 = time.perf_counter()
-    for _ in range(8):
-        y = ops.spmv(h, x, use_pallas=False)
-    y.block_until_ready()
-    t_spmv = (time.perf_counter() - t0) / 8
+    t_spmv = time_fn(lambda: ops.spmv(h, x, use_pallas=False),
+                     iters=8, repeats=3)
     return {"name": name, "conv_s": t_conv, "spmv_s": t_spmv,
             "ratio": t_conv / max(t_spmv, 1e-9)}
 

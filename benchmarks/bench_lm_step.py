@@ -3,7 +3,6 @@ train-step and decode-step wall time per arch family + SparseLinear vs dense.
 """
 from __future__ import annotations
 
-import time
 from typing import List
 
 import jax
@@ -18,15 +17,13 @@ from repro.models.config import ShapeConfig
 from repro.optim import AdamWConfig, adamw_init
 from repro.train.step import make_train_step
 
+from .timing import time_fn
+
 
 def _time(fn, iters=5):
-    out = fn()
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn()
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters
+    # single timed block (repeats=1) keeps total call count at the old
+    # 1 + iters scheme; the shared helper supplies the warmup-discard fence
+    return time_fn(fn, iters=iters, repeats=1)
 
 
 def run(quick: bool = False) -> List[str]:

@@ -21,6 +21,7 @@ SEED = 0
 def run(quick: bool = True) -> List[str]:
     import jax.numpy as jnp
 
+    from repro import obs
     from repro.core import formats as F, matgen, plan as P
     from repro.launch import server as SV
 
@@ -35,7 +36,11 @@ def run(quick: bool = True) -> List[str]:
                    lowering="mask")
 
     lines: List[str] = []
-    cache = SV.PlanCache(capacity_bytes=64 << 20, verify_on_admit=True)
+    # attach the cache (and so the server) to the GLOBAL registry: the
+    # runner's obs snapshot artifact then carries every serving counter,
+    # latency histogram, and span this section produced
+    cache = SV.PlanCache(capacity_bytes=64 << 20, verify_on_admit=True,
+                         registry=obs.get_registry())
     plan = cache.get_or_build(mat, **request)
     cache.get_or_build(mat, **request)      # the warm path: must hit
     st = cache.stats()

@@ -16,10 +16,12 @@ from typing import List, Optional
 from repro.core.selector import Record, RecordStore
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+ROOT = os.path.join(os.path.dirname(__file__), "..")
 
 _CODE = r"""
-import dataclasses, json, time, numpy as np, jax, jax.numpy as jnp
+import dataclasses, json, numpy as np, jax, jax.numpy as jnp
 from jax.sharding import Mesh
+from benchmarks.timing import time_fn
 from repro.core import formats as F, distributed as D, matgen
 from repro.core import selector as S
 
@@ -38,17 +40,9 @@ for name in names:
         sh = D.shard_matrix(mat, 8, cb=512 if pr is None else None,
                             mesh=mesh, pr=pr)
         run = D.make_distributed_spmv(sh, mesh)
-        # warmup-discard + median-of-repeats (benchmarks.timing.time_fn's
-        # scheme, inlined: this code runs in a bare subprocess)
-        run(x).block_until_ready()
-        samples = []
-        for _ in range(3):
-            t0 = time.perf_counter()
-            for _ in range(4):
-                y = run(x)
-            y.block_until_ready()
-            samples.append((time.perf_counter() - t0) / 4)
-        t = sorted(samples)[1]
+        # warmup-discard + median-of-repeats via the shared helper (the
+        # repo root rides on the subprocess PYTHONPATH next to src/)
+        t = time_fn(lambda: run(x), iters=4, repeats=3)
         gf = 2.0 * csr.nnz / t / 1e9
         tag = "" if pr is None else f"_pr{pr}"
         print(f"spmv_par.{name}.1x8_dev8{tag},{t*1e6:.1f},gflops={gf:.3f}")
@@ -68,7 +62,8 @@ def run(quick: bool = False, store: Optional[RecordStore] = None
         "atmosmodd", "bone010", "pdb1HYS", "HV15R", "ldoor", "cage15"]
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env["PYTHONPATH"] = (SRC + os.pathsep + ROOT + os.pathsep
+                         + env.get("PYTHONPATH", ""))
     res = subprocess.run(
         [sys.executable, "-c", _CODE.replace("__NAMES__", repr(names))],
         capture_output=True, text=True, env=env, timeout=1200)

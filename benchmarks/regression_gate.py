@@ -74,7 +74,9 @@ def compare(current: dict, prior: dict, threshold: float = 0.25,
         if verdict == "FAIL":
             failures.append(
                 f"section {name!r} regressed to {ratio:.2f}x of the prior "
-                f"run ({g_pri:.3f} -> {g_cur:.3f} geomean gflops)")
+                f"run (geomean {g_pri:.3f} -> {g_cur:.3f} gflops over "
+                f"{len(pri[name])} prior / {len(cur[name])} current "
+                f"samples)")
     for name in sorted(set(pri) - set(cur)):
         # removed benches must not block the PR that removes them; a note
         # in the log is enough to catch accidental drops

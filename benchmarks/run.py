@@ -13,7 +13,10 @@ Artifacts (both written by default, disable with ``--no-artifacts``):
   * a versioned JSONL record store under ``benchmarks/records/``
     (``--records-dir``): the auto-tuner's training data.
     ``selector.load_records`` merges the directory across runs, so
-    accumulated CI artifacts keep refining ``selector.tune``'s fits.
+    accumulated CI artifacts keep refining ``selector.tune``'s fits;
+  * ``BENCH_obs.json`` (``--obs-out``): the global ``repro.obs`` registry
+    snapshot -- plan-pass spans, serving-tier counters and latency
+    histograms accumulated across every section of the run.
 
 Everything runs in CPU-interpret mode (use_pallas=False / interpret=True
 under the hood) with fixed seeds, so record identities -- matrix set,
@@ -65,6 +68,8 @@ def main(argv=None) -> None:
                       help="representative subset (the default)")
     ap.add_argument("--out", default="BENCH_spmv.json",
                     help="benchmark-record JSON artifact path")
+    ap.add_argument("--obs-out", default="BENCH_obs.json",
+                    help="obs registry snapshot artifact path")
     ap.add_argument("--records-dir",
                     default=os.path.join(os.path.dirname(__file__), "records"),
                     help="directory for the JSONL record store")
@@ -142,6 +147,9 @@ def main(argv=None) -> None:
     if not args.no_artifacts:
         write_artifacts(sections_out, store.extend(sweep_store), args.out,
                         args.records_dir, mode="quick" if quick else "full")
+        if args.obs_out:
+            from repro import obs
+            obs.export.dump_json(obs.get_registry(), args.obs_out)
     if failed:
         sys.exit(1)
 

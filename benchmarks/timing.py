@@ -7,19 +7,30 @@ mercy of one scheduler hiccup on a noisy CI runner; taking the MEDIAN over
 several independently-timed blocks (after one discarded warmup call that
 also absorbs jit compilation) cuts the worst of that tail without growing
 total call count much.
+
+This module is the ONE place in the bench tree allowed to touch the raw
+clock (the ``no-adhoc-timing`` lint rule allowlists it); every other bench
+routes through :func:`time_fn` / :func:`time_once`, optionally feeding the
+per-block samples into a ``repro.obs`` histogram via ``observe=`` so the
+same numbers surface in the exported metrics snapshot.
 """
 from __future__ import annotations
 
 import time
 
 
-def time_fn(fn, iters: int = 4, repeats: int = 3) -> float:
+def time_fn(fn, iters: int = 4, repeats: int = 3, observe=None) -> float:
     """Seconds per call of ``fn``: median over ``repeats`` timed blocks of
     ``iters`` calls each, after one discarded warmup call.
 
     ``fn`` must return a jax array (``block_until_ready`` fences each
     block). Total calls = 1 + iters * repeats, comparable to the previous
     single-block scheme at the defaults.
+
+    ``observe``, when given, is a ``repro.obs`` Histogram (or anything with
+    an ``observe(seconds)`` method): every per-block per-call sample is
+    recorded into it, not just the median, so percentile views keep the
+    spread the median deliberately hides.
     """
     fn().block_until_ready()            # warmup (compile) -- discarded
     samples = []
@@ -29,5 +40,15 @@ def time_fn(fn, iters: int = 4, repeats: int = 3) -> float:
             out = fn()
         out.block_until_ready()
         samples.append((time.perf_counter() - t0) / max(1, iters))
+        if observe is not None:
+            observe.observe(samples[-1])
     samples.sort()
     return samples[len(samples) // 2]
+
+
+def time_once(fn):
+    """``(result, seconds)`` for a single un-warmed call -- for one-shot
+    costs (format conversion, first build) where a median is meaningless."""
+    t0 = time.perf_counter()
+    out = fn()
+    return out, time.perf_counter() - t0

@@ -504,9 +504,10 @@ def _r_vmem_budget(ctx: _Ctx) -> bool:
 
 _TRACE_PASSES = ("tune", "reorder", "layout", "build")
 _TUNE_SOURCES = ("store", "no-store", "explicit", "disabled", "delegated")
-_TRACE_KEYS = {"tune": ("source",), "reorder": ("strategy", "applied"),
-               "layout": ("layout", "reason", "lowering"),
-               "build": ("layout", "rows_fused")}
+_TRACE_KEYS = {"tune": ("source", "duration_s"),
+               "reorder": ("strategy", "applied", "duration_s"),
+               "layout": ("layout", "reason", "lowering", "duration_s"),
+               "build": ("layout", "rows_fused", "duration_s")}
 
 
 @_rule("trace-schema")

@@ -30,6 +30,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import obs
+
 from . import plan as PL
 from . import formats as F
 from . import selector as S
@@ -150,12 +152,23 @@ def make_distributed_spmv(sh: PL.ShardedPlan, mesh: Mesh,
                    check_rep=False)
 
     @jax.jit
-    def run(x):
+    def _run(x):
         if sh.col_perm is not None:
             x = jnp.take(x, sh.col_perm, axis=0)
         y = fn(*sh.arrays, sh.row_start, x)
         if gather and sh.row_iperm is not None:
             y = jnp.take(y, sh.row_iperm, axis=0)
         return y
+
+    ndev = int(sh.row_start.shape[0])
+    lowering = dict(sh.meta).get("lowering", "")
+
+    def run(x):
+        # span per dispatch (jit call, not device completion): the global
+        # registry's timeline shows each distributed SpMV launch with its
+        # layout x lowering x mesh width
+        with obs.span("distributed.spmv", layout=sh.layout, ndev=ndev,
+                      lowering=lowering):
+            return _run(x)
 
     return run

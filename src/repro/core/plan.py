@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.kernels import spc5_spmm, spc5_spmv
 
 from . import formats as F
@@ -581,7 +582,8 @@ def _build_pass(st: PlanState) -> SPC5Plan:
     ``col_perm`` rides on the plan at all; ``extra["rows_fused"]`` likewise
     drops the inverse row permutation."""
     spec = get_layout(st.layout)
-    arrays, geom, extra = spec.build(st)
+    with obs.span("plan.build", layout=st.layout) as sp:
+        arrays, geom, extra = spec.build(st)
     rows_fused = bool(extra.get("rows_fused", False))
     cols_fused = bool(extra.get("cols_fused", False))
     col_perm = row_iperm = None
@@ -592,6 +594,7 @@ def _build_pass(st: PlanState) -> SPC5Plan:
         row_iperm = (None if (rows_fused or reo.identity_rows)
                      else jnp.asarray(reo.row_iperm.astype(np.int32)))
     st.trace.append({"pass": "build", "layout": st.layout,
+                     "duration_s": sp.duration_s,
                      "rows_fused": rows_fused,
                      **{k: v for k, v in sorted(geom.items())
                         if isinstance(v, (int, float, str, bool))}})
@@ -635,9 +638,15 @@ def make_plan(mat: F.SPC5Matrix, *, layout: str = "auto",
                    lowering=canonical_lowering(lowering),
                    pr=pr, xw=xw, cb=cb, nvec=nvec, align=align, dtype=dtype,
                    store=store, tune=tune, reorder=reorder)
-    _tune_pass(st)
-    _reorder_pass(st)
-    _layout_pass(st)
+    # Each pass runs under an obs span and stamps its wall-time into its
+    # own trace entry, so plan.trace records durations alongside decisions
+    # (the trace-schema verify rule requires duration_s on every entry).
+    for pass_name, pass_fn in (("tune", _tune_pass),
+                               ("reorder", _reorder_pass),
+                               ("layout", _layout_pass)):
+        with obs.span(f"plan.{pass_name}") as sp:
+            pass_fn(st)
+        st.trace[-1]["duration_s"] = sp.duration_s
     plan = _build_pass(st)
     if verify:
         from repro.analysis.verify import verify_plan
@@ -781,7 +790,8 @@ def _build_whole(st: PlanState):
             ch, chunk_row=st.reo.row_perm[ch.chunk_row].astype(np.int32))
         rows_fused = True
     geom = dict(r=ch.r, c=ch.c, cb=ch.cb, vmax=ch.vmax, nrows=ch.nrows,
-                ncols=ch.ncols, nnz=ch.nnz, lowering=st.lowering)
+                ncols=ch.ncols, nnz=ch.nnz, nblocks=int(st.mat.nblocks),
+                lowering=st.lowering)
     if st.lowering == LOWERING_DESC:
         # descriptor lowering: expand the masks once; a column permutation
         # folds into the static xcol table outright, so the plan carries no
@@ -1029,7 +1039,8 @@ def _build_panels(st: PlanState):
     geom = dict(r=pan.r, c=pan.c, pr=pan.pr, cb=pan.cb, xw=pan.xw,
                 vmax=pan.vmax, npanels=pan.npanels, nchunks=pan.nchunks,
                 nrows=pan.nrows, ncols=pan.ncols, ncols_pad=pan.ncols_pad,
-                nnz=pan.nnz, lowering=st.lowering)
+                nnz=pan.nnz, nblocks=int(st.mat.nblocks),
+                lowering=st.lowering)
     if st.lowering == LOWERING_DESC:
         # window-relative xcol / panel-relative yrow tables; a column
         # permutation cannot fold in (windows live in permuted column
@@ -1484,6 +1495,7 @@ def shard_plan(mat: F.SPC5Matrix, ndev: int, *, layout: str = "auto",
     # tuning runs at workers=ndev and clamps against the PER-SHARD slab (not
     # the global matrix), and there is no whole-vector VMEM demotion because
     # each device's local kernel only ever sees its rows_max-row slab.
+    sp = obs.span("shard.tune", workers=int(ndev))
     tentry: dict = {"pass": "tune", "workers": int(ndev)}
     if config is None and tune and pr is None and cb is None:
         tstore = store if store is not None else S.get_default_store()
@@ -1500,10 +1512,12 @@ def shard_plan(mat: F.SPC5Matrix, ndev: int, *, layout: str = "auto",
                                            or pr is not None
                                            or cb is not None)
                             else "disabled")
+    tentry["duration_s"] = sp.finish().duration_s
     trace.append(tentry)
     if reorder is None and config is not None and config.reorder:
         reorder = config.reorder
 
+    sp = obs.span("shard.reorder")
     rentry: dict = {"pass": "reorder", "strategy": "", "applied": False}
     reo = None
     if reorder is not None:
@@ -1520,8 +1534,10 @@ def shard_plan(mat: F.SPC5Matrix, ndev: int, *, layout: str = "auto",
         else:
             mat = reo.permute_spc5(mat)
             rentry["applied"] = True
+    rentry["duration_s"] = sp.finish().duration_s
     trace.append(rentry)
 
+    sp = obs.span("shard.lowering")
     req_layout = canonical_layout(layout)
     layout = LAYOUT_WHOLE
     spr, sxw, scb = pr, xw, cb
@@ -1581,6 +1597,7 @@ def shard_plan(mat: F.SPC5Matrix, ndev: int, *, layout: str = "auto",
                            np.dtype(dtype or mat.values.dtype).itemsize, n))
         lentry["reason"] = "cost-model"
     lentry["lowering"] = lowering
+    lentry["duration_s"] = sp.finish().duration_s
     trace.append(lentry)
 
     # partition-mode resolution: "auto" compares the nnz skew (max-shard nnz
@@ -1588,6 +1605,7 @@ def shard_plan(mat: F.SPC5Matrix, ndev: int, *, layout: str = "auto",
     # nnz-balanced one and switches when rebalancing meaningfully helps --
     # the arXiv:1805.11938 load-imbalance criterion, with the evidence
     # traced.
+    sp = obs.span("shard.partition", ndev=int(ndev))
     pentry: dict = {"pass": "partition", "requested": partition,
                     "ndev": int(ndev)}
     mode = partition
@@ -1598,8 +1616,11 @@ def shard_plan(mat: F.SPC5Matrix, ndev: int, *, layout: str = "auto",
         pentry.update(skew_blocks=round(skew_blocks, 4),
                       skew_nnz=round(skew_nnz, 4))
     pentry["mode"] = mode
+    pentry["duration_s"] = sp.finish().duration_s
     trace.append(pentry)
 
+    sp = obs.span("shard.build", layout=layout, ndev=int(ndev),
+                  lowering=lowering)
     parts = P.partition_matrix(mat, ndev, mode)
     row_starts = P.partition_row_starts(mat, ndev, mode)
     sstate = ShardState(mat=mat, parts=parts, pr=spr, xw=sxw, cb=scb,
@@ -1609,6 +1630,7 @@ def shard_plan(mat: F.SPC5Matrix, ndev: int, *, layout: str = "auto",
     arrays, geom = build_hook(sstate)
     geom["lowering"] = lowering     # _resolve_attr keys array names off it
     sentry = {"pass": "shard", "layout": layout, "ndev": int(ndev),
+              "duration_s": sp.finish().duration_s,
               **{k: v for k, v in sorted(geom.items())
                  if isinstance(v, (int, float, str, bool))}}
     trace.append(sentry)

@@ -14,11 +14,11 @@ import dataclasses
 import functools
 import json
 import sys
-import time
 
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.analysis.hlo import analyze_hlo, xla_cost_analysis
 from repro.configs import ARCHS, get_config
 from repro.launch.mesh import make_production_mesh
@@ -168,9 +168,9 @@ def lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
                                  sharding=rules.ns(
                                      jax.sharding.PartitionSpec())),
         )
-    t0 = time.time()
-    lowered = jitted.lower(*args)
-    return lowered, {"lower_s": time.time() - t0}
+    with obs.span("dryrun.lower", arch=cfg.name, shape=shape.name) as sp:
+        lowered = jitted.lower(*args)
+    return lowered, {"lower_s": sp.duration_s}
 
 
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
@@ -209,9 +209,9 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                                seq_shard=seq_shard, accum=accum,
                                tp_enabled=tp_enabled)
     rec.update(meta)
-    t0 = time.time()
-    compiled = lowered.compile()
-    rec["compile_s"] = time.time() - t0
+    with obs.span("dryrun.compile", arch=arch, shape=shape_name) as sp:
+        compiled = lowered.compile()
+    rec["compile_s"] = sp.duration_s
 
     mem = compiled.memory_analysis()
     rec["memory"] = {

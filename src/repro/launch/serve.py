@@ -29,12 +29,12 @@ open-loop Poisson traffic run (``repro.launch.server``).
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.launch import server as SV
 
 
@@ -80,12 +80,13 @@ def main(argv=None):
 
     tok = jnp.zeros((config.batch, 1), jnp.int32)
     outs = []
-    t0 = time.perf_counter()
-    for t in range(config.tokens - 1):
-        tok, cache = step(params, cache, tok, jnp.asarray(t))
-        outs.append(np.asarray(tok))
-    jax.block_until_ready(tok)
-    dt = time.perf_counter() - t0
+    with obs.span("serve.decode", arch=config.arch, batch=config.batch,
+                  tokens=config.tokens) as sp:
+        for t in range(config.tokens - 1):
+            tok, cache = step(params, cache, tok, jnp.asarray(t))
+            outs.append(np.asarray(tok))
+        jax.block_until_ready(tok)
+    dt = sp.duration_s
     print(f"{config.arch}: {config.batch}x{config.tokens} tokens, "
           f"{config.batch * (config.tokens - 1) / dt:.1f} tok/s "
           f"(kv={config.kv_dtype}, mesh={config.mesh or '1 device'})")
@@ -94,6 +95,15 @@ def main(argv=None):
         _serve_vocab(config, cfg)
     elif config.vocab_spmv > 0:
         _bench_vocab(config, cfg)
+
+    if config.metrics:
+        # one scrape covers the whole launcher: decode span, serving-tier
+        # counters/histograms, plan passes -- all on the global registry
+        reg = obs.get_registry()
+        obs.export.dump_prometheus(reg, config.metrics_path)
+        obs.export.dump_chrome_trace(reg, config.trace_path)
+        print(f"metrics: {config.metrics_path} (Prometheus), "
+              f"{config.trace_path} (chrome://tracing)")
 
 
 def _serve_vocab(config: SV.ServeConfig, cfg) -> None:
@@ -139,12 +149,12 @@ def _bench_vocab(config: SV.ServeConfig, cfg) -> None:
         report = verify_plan(h, nvec=1).raise_if_failed()
         print(f"verify: plan ok ({len(report.checked)} rules checked)")
     lin(x).block_until_ready()
-    t0 = time.perf_counter()
     iters = 16
-    for _ in range(iters):
-        y = lin(x)
-    y.block_until_ready()
-    us = (time.perf_counter() - t0) / iters * 1e6
+    with obs.span("serve.vocab_bench", iters=iters) as sp:
+        for _ in range(iters):
+            y = lin(x)
+        y.block_until_ready()
+    us = sp.duration_s / iters * 1e6
     # the plan is self-describing: layout key + geometry from its static
     # meta, reordering from its pass trace -- no layout branching here
     if h.is_reordered:

@@ -25,9 +25,20 @@ by the CLI and the programmatic ``start(config)`` path:
   * :func:`open_loop` / :func:`saturation_sweep` -- an open-loop traffic
     harness: Poisson arrivals at a configured QPS (submission times are
     scheduled up front and never wait on completions), per-request p50/p99
-    latency, achieved-vs-offered QPS, swept multiplicatively until the tier
-    stops keeping up. ``benchmarks.bench_serve`` records the sweep as the
-    ``spmv_serve.*`` section under the CI perf-regression gate.
+    latency (bucket-interpolated from a ``repro.obs`` histogram, not a
+    sorted sample list), achieved-vs-offered QPS, swept multiplicatively
+    until the tier stops keeping up. ``benchmarks.bench_serve`` records
+    the sweep as the ``spmv_serve.*`` section under the CI
+    perf-regression gate.
+
+Every counter, latency distribution, and timed region in this module is a
+``repro.obs`` instrument or span: ``PlanCache``/``SPC5Server`` counters
+are VIEWS over a metrics registry (``stats()`` reads the same numbers a
+Prometheus export would), each cache entry carries
+:class:`PlanExecStats` (calls, columns, achieved gflops vs the roofline
+model for that plan's layout x lowering), and a request's trace context
+propagates ``submit`` -> coalesce window -> SpMM dispatch so a serve run
+renders as one connected Chrome-trace timeline (``serve.py --metrics``).
 """
 from __future__ import annotations
 
@@ -37,13 +48,13 @@ import concurrent.futures
 import dataclasses
 import queue
 import threading
-import time
 from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import formats as F
 from repro.core import plan as P
 
@@ -102,6 +113,14 @@ class ServeConfig:
                             "serving tier (0 = closed-loop microbench)")
     duration_s: float = _knob(0.5, "open-loop bench duration per QPS point")
 
+    # --- observability (repro.obs) ---
+    metrics: bool = _knob(False, "record serve metrics/spans on the global "
+                                 "obs registry and export them at exit")
+    metrics_path: str = _knob("serve_metrics.prom", "Prometheus text "
+                              "snapshot path (with --metrics)")
+    trace_path: str = _knob("serve_trace.json", "Chrome trace_event "
+                            "timeline path (with --metrics)")
+
 
 def add_config_args(ap: argparse.ArgumentParser,
                     cls=ServeConfig) -> argparse.ArgumentParser:
@@ -141,6 +160,50 @@ def plan_request(config: ServeConfig) -> Dict[str, object]:
 # PlanCache: fingerprint-keyed, verify-on-admission, LRU by plan bytes
 # ----------------------------------------------------------------------------
 
+class PlanExecStats:
+    """Per-plan execution stats, recorded on the cache entry: how many
+    dispatches this plan served, how many request columns they carried,
+    and the achieved gflops against the roofline ceiling for THIS plan's
+    layout x lowering (``formats.spmv_bytes_per_nnz`` at the plan's
+    measured avg nnz/block x the model HBM bandwidth) -- the measured
+    signal ROADMAP open item 2's learned cost model wants."""
+
+    def __init__(self, plan: P.SPC5Plan):
+        meta = dict(plan.meta)
+        self.nnz = int(meta.get("nnz") or 0)
+        self._lock = threading.Lock()
+        self.calls = 0
+        self.columns = 0
+        self.seconds = 0.0
+        self.gflops_roofline = 0.0
+        r, c, nblocks = meta.get("r"), meta.get("c"), meta.get("nblocks")
+        lowering = meta.get("lowering")
+        if self.nnz and r and c and nblocks and lowering in (
+                P.LOWERING_MASK, P.LOWERING_DESC):
+            bpn = F.spmv_bytes_per_nnz(int(r), int(c), self.nnz / nblocks,
+                                       lowering)
+            self.gflops_roofline = 2.0 / bpn * P.LOWERING_HBM_BW / 1e9
+
+    def record(self, ncols: int, seconds: float) -> None:
+        with self._lock:
+            self.calls += 1
+            self.columns += int(ncols)
+            self.seconds += seconds
+
+    @property
+    def gflops_achieved(self) -> float:
+        return (2.0 * self.nnz * self.columns / self.seconds / 1e9
+                if self.seconds > 0 else 0.0)
+
+    def as_dict(self) -> Dict[str, float]:
+        ach = self.gflops_achieved
+        return {"calls": self.calls, "columns": self.columns,
+                "seconds": self.seconds, "gflops_achieved": ach,
+                "gflops_roofline": self.gflops_roofline,
+                "roofline_fraction": (ach / self.gflops_roofline
+                                      if self.gflops_roofline else 0.0)}
+
+
 class PlanCache:
     """Built plans keyed by (matrix fingerprint, normalised request).
 
@@ -152,11 +215,19 @@ class PlanCache:
     LRU by device-array footprint (``plan.plan_nbytes``) against
     ``capacity_bytes``. Thread-safe: the serving tier builds from its
     gather thread while callers warm plans from theirs.
+
+    The hit/miss/eviction counters are ``repro.obs`` counters on
+    ``registry`` (a private registry per cache by default, so
+    test-constructed caches never share totals); ``hits``/``misses``/
+    ``evictions`` remain as read-only views and ``stats()`` reads the
+    registry. Each entry carries a :class:`PlanExecStats` the serving
+    tier feeds per dispatch (``stats_for``).
     """
 
     def __init__(self, capacity_bytes: int = 256 << 20, *,
                  verify_on_admit: bool = False,
-                 builder: Optional[Callable[..., P.SPC5Plan]] = None):
+                 builder: Optional[Callable[..., P.SPC5Plan]] = None,
+                 registry: Optional[obs.Registry] = None):
         self.capacity_bytes = int(capacity_bytes)
         self.verify_on_admit = verify_on_admit
         if builder is None:
@@ -164,10 +235,31 @@ class PlanCache:
             builder = ops.prepare
         self._build = builder
         self._entries: "collections.OrderedDict[str, tuple]" = \
-            collections.OrderedDict()          # key -> (plan, nbytes)
+            collections.OrderedDict()   # key -> (plan, nbytes, PlanExecStats)
         self._bytes = 0
         self._lock = threading.Lock()
-        self.hits = self.misses = self.evictions = 0
+        self.registry = registry if registry is not None else obs.Registry()
+        self._hits = self.registry.counter(
+            "spc5_plan_cache_hits_total", "plan-cache hits")
+        self._misses = self.registry.counter(
+            "spc5_plan_cache_misses_total", "plan-cache misses")
+        self._evictions = self.registry.counter(
+            "spc5_plan_cache_evictions_total", "plan-cache LRU evictions")
+        self._build_seconds = self.registry.histogram(
+            "spc5_plan_cache_build_seconds", "cold plan-build wall time")
+
+    # counters are views over the registry, never writable ints
+    @property
+    def hits(self) -> int:
+        return self._hits.value
+
+    @property
+    def misses(self) -> int:
+        return self._misses.value
+
+    @property
+    def evictions(self) -> int:
+        return self._evictions.value
 
     def get_or_build(self, mat: F.SPC5Matrix, **request) -> P.SPC5Plan:
         key = P.plan_cache_key(mat, **request)
@@ -175,42 +267,59 @@ class PlanCache:
             hit = self._entries.get(key)
             if hit is not None:
                 self._entries.move_to_end(key)
-                self.hits += 1
+                self._hits.inc()
                 return hit[0]
-            self.misses += 1
+            self._misses.inc()
         # build outside the lock: a slow build must not serialise hits
-        plan = self._build(mat, **request)
-        if self.verify_on_admit:
-            from repro.analysis.verify import verify_plan
-            verify_plan(plan).raise_if_failed()
+        with self.registry.span("cache.build") as sp:
+            plan = self._build(mat, **request)
+            if self.verify_on_admit:
+                from repro.analysis.verify import verify_plan
+                verify_plan(plan).raise_if_failed()
+        self._build_seconds.observe(sp.duration_s)
         nbytes = P.plan_nbytes(plan)
         with self._lock:
             if key not in self._entries:
                 while self._entries and self._bytes + nbytes > \
                         self.capacity_bytes:
-                    _, (_, old) = self._entries.popitem(last=False)
+                    _, (_, old, _) = self._entries.popitem(last=False)
                     self._bytes -= old
-                    self.evictions += 1
-                self._entries[key] = (plan, nbytes)
+                    self._evictions.inc()
+                self._entries[key] = (plan, nbytes, PlanExecStats(plan))
                 self._bytes += nbytes
         return plan
+
+    def stats_for(self, plan: P.SPC5Plan) -> PlanExecStats:
+        """The exec-stats slot for a cached plan (by identity); plans the
+        cache no longer holds get a fresh, unattached slot."""
+        with self._lock:
+            for p, _, st in self._entries.values():
+                if p is plan:
+                    return st
+        return PlanExecStats(plan)
 
     def __len__(self) -> int:
         return len(self._entries)
 
     def stats(self) -> Dict[str, float]:
         total = self.hits + self.misses
-        return {"hits": self.hits, "misses": self.misses,
-                "evictions": self.evictions, "entries": len(self._entries),
-                "bytes": self._bytes, "capacity_bytes": self.capacity_bytes,
-                "hit_rate": self.hits / total if total else 0.0}
+        out = {"hits": self.hits, "misses": self.misses,
+               "evictions": self.evictions, "entries": len(self._entries),
+               "bytes": self._bytes, "capacity_bytes": self.capacity_bytes,
+               "hit_rate": self.hits / total if total else 0.0}
+        with self._lock:
+            out["plans"] = [dict(st.as_dict(), layout=p.layout)
+                            for p, _, st in self._entries.values()]
+        return out
 
 
 # ----------------------------------------------------------------------------
 # SPC5Server: bounded-wait coalescing with async microbatch prefetch
 # ----------------------------------------------------------------------------
 
-_Request = collections.namedtuple("_Request", "x future t_submit")
+#: ``ctx`` is the submit span's id: the exec thread opens its batch span
+#: with ``parent=ctx`` so the cross-thread request lifetime is one trace.
+_Request = collections.namedtuple("_Request", "x future t_submit ctx")
 
 
 def _pow2_width(n: int, cap: int) -> int:
@@ -240,7 +349,8 @@ class SPC5Server:
 
     def __init__(self, plan: P.SPC5Plan, *, cache: Optional[PlanCache] = None,
                  window_us: float = 200.0, max_batch: int = 0,
-                 prefetch_depth: int = 2):
+                 prefetch_depth: int = 2,
+                 registry: Optional[obs.Registry] = None):
         self.plan = plan
         self.cache = cache
         meta = dict(plan.meta)
@@ -252,9 +362,25 @@ class SPC5Server:
         self._closed = False
         self._batches: "queue.Queue" = queue.Queue(maxsize=max(
             1, int(prefetch_depth)))
-        self.requests = self.batches = 0
-        self.widest_batch = 0
-        self._coalesced_sum = 0
+        # instruments live on the cache's registry when one is attached
+        # (one scrape covers the whole tier), else a private registry
+        self.registry = registry if registry is not None else (
+            cache.registry if cache is not None else obs.Registry())
+        self._requests = self.registry.counter(
+            "spc5_server_requests_total", "requests submitted")
+        self._batches_total = self.registry.counter(
+            "spc5_server_batches_total", "coalesced batches executed")
+        self._coalesced = self.registry.counter(
+            "spc5_server_coalesced_total",
+            "requests that shared a multi-request batch")
+        self._widest = self.registry.gauge(
+            "spc5_server_widest_batch", "widest batch coalesced so far")
+        self._batch_seconds = self.registry.histogram(
+            "spc5_server_batch_seconds", "batch dispatch-to-ready time")
+        self._request_seconds = self.registry.histogram(
+            "spc5_server_request_seconds", "submit-to-result latency")
+        self._plan_stats = (cache.stats_for(plan) if cache is not None
+                            else PlanExecStats(plan))
         self._gather = threading.Thread(target=self._gather_loop,
                                         name="spc5-gather", daemon=True)
         self._exec = threading.Thread(target=self._exec_loop,
@@ -269,11 +395,12 @@ class SPC5Server:
         order, device-ready)."""
         if self._closed:
             raise RuntimeError("server is closed")
-        req = _Request(jnp.asarray(x), concurrent.futures.Future(),
-                       time.perf_counter())
-        with self._cv:
-            self._pending.append(req)
-            self._cv.notify_all()
+        with self.registry.span("serve.submit") as sp:
+            req = _Request(jnp.asarray(x), concurrent.futures.Future(),
+                           obs.monotonic(), sp.span_id)
+            with self._cv:
+                self._pending.append(req)
+                self._cv.notify_all()
         return req.future
 
     def spmv(self, x, timeout: Optional[float] = None) -> jax.Array:
@@ -295,15 +422,34 @@ class SPC5Server:
     def __exit__(self, *exc):
         self.close()
 
+    # -- registry views ------------------------------------------------------
+
+    @property
+    def requests(self) -> int:
+        return self._requests.value
+
+    @property
+    def batches(self) -> int:
+        return self._batches_total.value
+
+    @property
+    def widest_batch(self) -> int:
+        return int(self._widest.value)
+
     def stats(self) -> Dict[str, object]:
+        """Every number here is a view over ``self.registry`` -- the same
+        instruments a Prometheus export or ``obs.snapshot`` reads."""
         out: Dict[str, object] = {
             "requests": self.requests, "batches": self.batches,
             "mean_batch": (self.requests / self.batches
                            if self.batches else 0.0),
             "widest_batch": self.widest_batch,
-            "coalesced": self._coalesced_sum,
+            "coalesced": self._coalesced.value,
             "max_batch": self.max_batch,
             "window_us": self.window_s * 1e6,
+            "p50_us": self._request_seconds.percentile(50) * 1e6,
+            "p99_us": self._request_seconds.percentile(99) * 1e6,
+            "plan": self._plan_stats.as_dict(),
         }
         if self.cache is not None:
             out["cache"] = self.cache.stats()
@@ -319,12 +465,12 @@ class SPC5Server:
                 if not self._pending and self._closed:
                     break
                 reqs = [self._pending.popleft()]
-                deadline = time.perf_counter() + self.window_s
+                deadline = obs.monotonic() + self.window_s
                 while len(reqs) < self.max_batch:
                     if self._pending:
                         reqs.append(self._pending.popleft())
                         continue
-                    remaining = deadline - time.perf_counter()
+                    remaining = deadline - obs.monotonic()
                     if remaining <= 0 or self._closed:
                         break
                     self._cv.wait(timeout=remaining)
@@ -337,26 +483,35 @@ class SPC5Server:
             if reqs is None:
                 break
             try:
-                if len(reqs) == 1:
-                    y = P.execute_spmv(self.plan, reqs[0].x)
-                    jax.block_until_ready(y)
-                    ys = [y]
-                else:
-                    width = _pow2_width(len(reqs), self.max_batch)
-                    X = jnp.stack([r.x for r in reqs], axis=1)
-                    if width > len(reqs):
-                        pad = jnp.zeros((X.shape[0], width - len(reqs)),
-                                        X.dtype)
-                        X = jnp.concatenate([X, pad], axis=1)
-                    Y = P.execute_spmm(self.plan, X)
-                    jax.block_until_ready(Y)
-                    ys = [Y[:, j] for j in range(len(reqs))]
-                self.batches += 1
-                self.requests += len(reqs)
-                self.widest_batch = max(self.widest_batch, len(reqs))
+                # the batch span parents on the FIRST request's submit
+                # span: submit -> coalesce window -> dispatch is one trace
+                with self.registry.span("serve.batch",
+                                        parent=reqs[0].ctx,
+                                        n=len(reqs)) as sp:
+                    if len(reqs) == 1:
+                        y = P.execute_spmv(self.plan, reqs[0].x)
+                        jax.block_until_ready(y)
+                        ys = [y]
+                    else:
+                        width = _pow2_width(len(reqs), self.max_batch)
+                        X = jnp.stack([r.x for r in reqs], axis=1)
+                        if width > len(reqs):
+                            pad = jnp.zeros((X.shape[0], width - len(reqs)),
+                                            X.dtype)
+                            X = jnp.concatenate([X, pad], axis=1)
+                        Y = P.execute_spmm(self.plan, X)
+                        jax.block_until_ready(Y)
+                        ys = [Y[:, j] for j in range(len(reqs))]
+                self._batches_total.inc()
+                self._requests.inc(len(reqs))
+                self._widest.set_max(len(reqs))
                 if len(reqs) > 1:
-                    self._coalesced_sum += len(reqs)
+                    self._coalesced.inc(len(reqs))
+                self._batch_seconds.observe(sp.duration_s)
+                self._plan_stats.record(len(reqs), sp.duration_s)
+                done = obs.monotonic()
                 for r, y in zip(reqs, ys):
+                    self._request_seconds.observe(done - r.t_submit)
                     r.future.set_result(y)
             except Exception as e:      # noqa: BLE001 -- fail the callers
                 for r in reqs:
@@ -376,11 +531,15 @@ def open_loop(server: SPC5Server, xs: Sequence, qps: float,
 
     Arrival times are drawn up front (exponential inter-arrivals); each
     request's latency is submit-to-future-resolution, measured by a done
-    callback so the driver thread never sits in ``result()``. Returns
-    offered/achieved QPS and p50/p99 latency in microseconds -- the gap
-    between offered and achieved is the saturation signal
-    (:func:`saturation_sweep`).
+    callback so the driver thread never sits in ``result()``. Latencies
+    land in a fresh ``repro.obs`` histogram (one per call, so QPS points
+    never mix) and p50/p99 come from bucket interpolation -- O(buckets)
+    memory instead of the old O(requests) sorted list, with the bounded
+    bucket-ratio error tests/test_obs.py pins. Returns offered/achieved
+    QPS and p50/p99 latency in microseconds -- the gap between offered
+    and achieved is the saturation signal (:func:`saturation_sweep`).
     """
+    import time as _time    # sleep only; timestamps come from obs
     rng = np.random.default_rng(seed)
     for i in range(warmup):
         server.spmv(xs[i % len(xs)])
@@ -392,34 +551,30 @@ def open_loop(server: SPC5Server, xs: Sequence, qps: float,
         arrivals.append(t)
     if not arrivals:
         arrivals = [0.0]
-    latencies: List[float] = []
-    lat_lock = threading.Lock()
+    hist = obs.Histogram("open_loop_latency_seconds")
 
     def _record(t_submit, fut):
-        dt = time.perf_counter() - t_submit
-        with lat_lock:
-            latencies.append(dt)
+        hist.observe(obs.monotonic() - t_submit)
 
-    t0 = time.perf_counter()
+    t0 = obs.monotonic()
     futures = []
     for t in arrivals:
-        delay = t0 + t - time.perf_counter()
+        delay = t0 + t - obs.monotonic()
         if delay > 0:
-            time.sleep(delay)
-        ts = time.perf_counter()
+            _time.sleep(delay)
+        ts = obs.monotonic()
         fut = server.submit(xs[len(futures) % len(xs)])
         fut.add_done_callback(lambda f, ts=ts: _record(ts, f))
         futures.append(fut)
     concurrent.futures.wait(futures)
-    elapsed = time.perf_counter() - t0
-    lat = np.sort(np.asarray(latencies))
+    elapsed = obs.monotonic() - t0
     return {
         "qps_offered": qps,
         "qps_achieved": len(futures) / elapsed,
-        "completed": len(futures),
+        "completed": hist.count,
         "elapsed_s": elapsed,
-        "p50_us": float(lat[int(0.50 * (len(lat) - 1))] * 1e6),
-        "p99_us": float(lat[int(0.99 * (len(lat) - 1))] * 1e6),
+        "p50_us": hist.percentile(50) * 1e6,
+        "p99_us": hist.percentile(99) * 1e6,
     }
 
 
@@ -464,7 +619,12 @@ def start(config: ServeConfig, mat: Optional[F.SPC5Matrix] = None, *,
     """Build the serving tier a config describes and return the running
     server: record store installed (unless the launcher already did --
     ``install_records=False``), plan built through the cache (admission
-    verify when ``config.verify``), coalescing threads started."""
+    verify when ``config.verify``), coalescing threads started.
+
+    With ``config.metrics`` the tier's instruments and spans land on the
+    GLOBAL obs registry (``obs.get_registry()``) so the CLI can export
+    one Prometheus snapshot + Chrome trace at exit; otherwise the tier
+    gets a private registry and leaves the global one untouched."""
     if install_records and config.records:
         from repro.core import selector as S
         store = S.load_records(config.records)
@@ -474,10 +634,13 @@ def start(config: ServeConfig, mat: Optional[F.SPC5Matrix] = None, *,
         S.set_default_store(store)
     if mat is None:
         mat = _default_matrix(config)
+    registry = obs.get_registry() if config.metrics else None
     if cache is None:
         cache = PlanCache(capacity_bytes=config.cache_mb << 20,
-                          verify_on_admit=config.verify)
+                          verify_on_admit=config.verify,
+                          registry=registry)
     plan = cache.get_or_build(mat, **plan_request(config))
     return SPC5Server(plan, cache=cache, window_us=config.window_us,
                       max_batch=config.max_batch,
-                      prefetch_depth=config.prefetch_depth)
+                      prefetch_depth=config.prefetch_depth,
+                      registry=registry)

@@ -1,0 +1,63 @@
+"""repro.obs: the unified observability layer (metrics, spans, exporters).
+
+One dependency-free subsystem behind every telemetry touchpoint in the
+repo -- ``PlanCache``/``SPC5Server`` counters, ``make_plan`` per-pass
+wall-times, ``open_loop`` latency percentiles, ``benchmarks.timing``
+samples -- so "what happened and how long did it take" has one answer.
+
+  * :class:`Registry` scopes a set of named :class:`Counter` /
+    :class:`Gauge` / :class:`Histogram` instruments plus a bounded span
+    buffer; ``Registry(enabled=False)`` hands out shared no-op
+    instruments (the near-zero-cost disabled path).
+  * :func:`get_registry` / :func:`set_registry` manage the process-global
+    registry -- what ``serve.py --metrics`` exports and
+    ``benchmarks.run`` snapshots into ``BENCH_obs.json``. Tiers that
+    need isolation (every test-constructed ``PlanCache``) build private
+    registries instead.
+  * :func:`span` opens a span on the global registry;
+    ``registry.span(...)`` on a specific one. Cross-thread propagation
+    goes through ``registry.current_context()`` + ``parent=``.
+  * :data:`monotonic` is the sanctioned wall-clock
+    (``time.perf_counter`` under an auditable name): launch/ and
+    benchmarks/ code takes deadlines and timestamps from here, and the
+    ``no-adhoc-timing`` lint rule bans the raw calls.
+  * :mod:`repro.obs.export` renders a registry as a JSON snapshot,
+    Prometheus text, or a Chrome ``trace_event`` timeline.
+"""
+from __future__ import annotations
+
+from repro.obs import export
+from repro.obs.metrics import (BUCKET_RATIO, HISTOGRAM_BOUNDS, Counter,
+                               Gauge, Histogram, Registry)
+from repro.obs.spans import SpanEvent, SpanHandle, monotonic
+
+__all__ = ["Counter", "Gauge", "Histogram", "Registry", "SpanEvent",
+           "SpanHandle", "BUCKET_RATIO", "HISTOGRAM_BOUNDS", "export",
+           "monotonic", "get_registry", "set_registry", "span",
+           "snapshot"]
+
+_global_registry = Registry()
+
+
+def get_registry() -> Registry:
+    """The process-global registry (serve-CLI export, bench snapshots)."""
+    return _global_registry
+
+
+def set_registry(registry: Registry) -> Registry:
+    """Swap the process-global registry; returns the previous one."""
+    global _global_registry
+    prev = _global_registry
+    _global_registry = registry
+    return prev
+
+
+def span(name: str, parent=None, **attrs) -> SpanHandle:
+    """Open a span on the global registry (the common case for code that
+    is not handed an explicit registry, e.g. the plan pipeline)."""
+    return _global_registry.span(name, parent=parent, **attrs)
+
+
+def snapshot() -> dict:
+    """JSON snapshot of the global registry."""
+    return export.snapshot(_global_registry)

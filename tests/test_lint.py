@@ -199,7 +199,7 @@ def test_record_schema_sync_detects_drift(monkeypatch):
 
 def test_rule_registry_complete():
     assert L.rule_names() == ("layout-dispatch", "layout-lowerings-declared",
-                              "no-dense-in-core",
+                              "no-adhoc-timing", "no-dense-in-core",
                               "no-deprecated-entry-points", "pallas-call",
                               "record-schema-sync", "serve-config-knobs")
     with pytest.raises(SystemExit):
@@ -240,6 +240,48 @@ def test_deprecated_entry_points_scan_benchmarks(tmp_path):
     findings = L.check_no_deprecated_entry_points(root)
     assert [f.rule for f in findings] == ["no-deprecated-entry-points"]
     assert "shard_matrix" in findings[0].message
+
+
+def test_no_adhoc_timing_fires_in_launch(tmp_path):
+    root = plant(tmp_path, "launch/bad.py", """
+        import time
+
+        def f():
+            t0 = time.perf_counter()
+            t1 = time.time()
+            return t1 - t0
+    """)
+    findings = L.check_no_adhoc_timing(root)
+    assert [f.rule for f in findings] == ["no-adhoc-timing"] * 2
+    assert "perf_counter()" in findings[0].message
+    assert "time.time()" in findings[1].message
+
+
+def test_no_adhoc_timing_scans_benchmarks_with_allowlist(tmp_path):
+    root = plant(tmp_path, "core/ok.py", "X = 1\n")
+    bench = os.path.join(root, "benchmarks")
+    os.makedirs(bench)
+    clock = "import time\nT = time.perf_counter()\n"
+    with open(os.path.join(bench, "timing.py"), "w") as f:
+        f.write(clock)                      # the one sanctioned clock user
+    with open(os.path.join(bench, "bad.py"), "w") as f:
+        f.write(clock)
+    findings = L.check_no_adhoc_timing(root)
+    assert [os.path.basename(f.path) for f in findings] == ["bad.py"]
+
+
+def test_no_adhoc_timing_sanctioned_clock_is_clean(tmp_path):
+    # obs.monotonic IS perf_counter, but under an auditable name -- the
+    # rule keys on the call's trailing name, so the alias passes
+    root = plant(tmp_path, "launch/good.py", """
+        from repro import obs
+
+        def f():
+            with obs.span("work") as sp:
+                pass
+            return obs.monotonic(), sp.duration_s
+    """)
+    assert L.check_no_adhoc_timing(root) == []
 
 
 def test_serve_config_knobs_clean_and_fires(tmp_path):

@@ -448,8 +448,12 @@ def test_plan_trace_golden():
     h = ops.prepare(mat, dtype=np.float32)
     assert [e["pass"] for e in h.trace] == ["tune", "reorder", "layout",
                                             "build"]
+    # every pass entry records its wall-time next to its decision
+    assert all(e["duration_s"] >= 0 for e in h.trace)
     tune, reo, lay, build = h.trace
+    assert tune.pop("duration_s") is not None
     assert tune == {"pass": "tune", "source": "no-store"}
+    assert reo.pop("duration_s") is not None
     assert reo == {"pass": "reorder", "strategy": "", "applied": False}
     assert lay["pass"] == "layout" and lay["layout"] == "whole_vector"
     assert lay["reason"] == "vmem-fit"
@@ -479,14 +483,18 @@ def test_plan_trace_golden():
     # the tuned config carries the lowering it measured under (v3 records
     # default to "mask"), so no cost-model arbitration runs
     assert t2[0]["lowering"] == "mask"
-    assert t2[2] == {"pass": "layout", "layout": "panels",
-                     "reason": "requested", "lowering": "mask"}
+    lay2 = dict(t2[2])
+    assert lay2.pop("duration_s") >= 0
+    assert lay2 == {"pass": "layout", "layout": "panels",
+                    "reason": "requested", "lowering": "mask"}
     assert h2.strategy == "rcm" and h2.is_reordered
     # the test split delegates tuning to its multi sub-plan
     ht = ops.prepare(F.csr_to_spc5(scr, 1, 8), layout="test",
                      multi_layout="panels", dtype=np.float32, pr=16, xw=32,
                      cb=8)
-    assert ht.trace[0] == {"pass": "tune", "source": "delegated"}
+    ht_tune = dict(ht.trace[0])
+    assert ht_tune.pop("duration_s") >= 0
+    assert ht_tune == {"pass": "tune", "source": "delegated"}
     assert [e["pass"] for e in ht.multi.trace] == ["tune", "reorder",
                                                    "layout", "build"]
 
@@ -496,6 +504,8 @@ def test_shard_plan_trace():
     sh = D.shard_matrix(F.csr_to_spc5(csr, 1, 8), 2, cb=32, tune=False)
     assert [e["pass"] for e in sh.trace] == ["tune", "reorder", "lowering",
                                             "partition", "shard"]
+    # the shard pipeline's entries carry per-pass wall-time too
+    assert all(e["duration_s"] >= 0 for e in sh.trace)
     lowering, part, shard = sh.trace[2:]
     assert lowering["reason"] == "cost-model"
     assert lowering["lowering"] in ("mask", "descriptor")

@@ -292,6 +292,17 @@ def test_mutation_trace_missing_pass():
     assert_only(bad, "trace-schema")
 
 
+def test_mutation_trace_missing_duration():
+    # every pass records its wall-time (the obs span); a trace entry
+    # without duration_s is schema drift
+    plan = build()
+    trace = plan.trace
+    tune = next(e for e in trace if e["pass"] == "tune")
+    del tune["duration_s"]
+    bad = dataclasses.replace(plan, trace_json=json.dumps(trace))
+    assert_only(bad, "trace-schema")
+
+
 def test_mutation_test_split_count():
     plan = build(layout="test")
     g = dict(plan.meta)

@@ -45,6 +45,13 @@ no-deprecated-entry-points
     ``DeprecationWarning`` shims: nothing under ``src/repro`` or
     ``benchmarks`` may call them except the modules that define them
     (tests may, to pin the shims' behaviour).
+no-adhoc-timing
+    All timing in ``src/repro/launch/`` and ``benchmarks/`` routes through
+    ``repro.obs`` (spans / ``obs.monotonic``) or ``benchmarks.timing``: no
+    raw ``time.perf_counter()`` / ``time.time()`` calls. Allowlisted:
+    ``benchmarks/timing.py`` (the one sanctioned clock user; ``repro.obs``
+    itself lives outside the scanned trees). Ad-hoc clocks are how serve
+    counters and bench numbers drift out of the exported metrics.
 
 The rules are importable (tests/test_lint.py, and test_plan.py's dispatch
 test is a thin wrapper over ``layout-dispatch``); the CLI is what CI runs.
@@ -279,6 +286,45 @@ def check_no_deprecated_entry_points(root: str = REPO_ROOT) -> List[Finding]:
                     node.lineno,
                     f"{name}(...) is a deprecation shim; call the unified "
                     f"entry point ({'ops.prepare' if 'prepare' in name else 'distributed.shard_matrix'}) with keywords instead"))
+    return out
+
+
+#: (scan subtree, allowlisted rel-paths) for the ad-hoc-timing ban.
+TIMING_SCANS = (
+    (os.path.join("src", "repro", "launch"), frozenset()),
+    ("benchmarks", frozenset({"timing.py"})),
+)
+
+
+@_rule("no-adhoc-timing")
+def check_no_adhoc_timing(root: str = REPO_ROOT) -> List[Finding]:
+    out: List[Finding] = []
+    for sub, allow in TIMING_SCANS:
+        if not os.path.isdir(os.path.join(root, sub)):
+            continue
+        for ap, rel in _py_files(root, sub):
+            if rel in allow:
+                continue
+            tree = _parse(ap)
+            if tree is None:
+                continue
+            for node in ast.walk(tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = _call_name(node)
+                bad = None
+                if name == "perf_counter":
+                    bad = "perf_counter()"
+                elif (name == "time"
+                      and isinstance(node.func, ast.Attribute)
+                      and isinstance(node.func.value, ast.Name)
+                      and node.func.value.id == "time"):
+                    bad = "time.time()"
+                if bad:
+                    out.append(Finding(
+                        "no-adhoc-timing", _rel(root, ap), node.lineno,
+                        f"raw {bad}; route timing through repro.obs "
+                        f"(span / obs.monotonic) or benchmarks.timing"))
     return out
 
 
