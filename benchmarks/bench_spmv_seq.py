@@ -65,6 +65,11 @@ SWEEP_CONFIGS: Tuple[PanelConfig, ...] = (
     PanelConfig("whole_vector", 0, 0, 512, lowering="descriptor"),
     PanelConfig("panels", 512, 2048, 64, lowering="descriptor"),
     PanelConfig("panels", 512, 512, 32, lowering="descriptor"),
+    # quantised value stores (v4 records): the tuner learns per-matrix
+    # whether halving/quartering the value bytes pays on each lowering
+    PanelConfig("whole_vector", 0, 0, 512, vdtype="bf16"),
+    PanelConfig("panels", 512, 2048, 64, lowering="descriptor",
+                vdtype="int8"),
 )
 SWEEP_KERNELS = ((1, 8), (4, 4))
 # Sweep-mode matrix subset: one per structural class keeps the quick run
@@ -113,7 +118,18 @@ def bench_matrix(name: str, csr, store: Optional[RecordStore] = None,
     t = time_fn(lambda: csr_spmv(row_ids, colidx, values, x,
                                  nrows=csr.nrows))
     gf_csr = flops / t / 1e9
-    lines.append(f"spmv_seq.{name}.csr,{t*1e6:.1f},gflops={gf_csr:.3f}")
+    lines.append(f"spmv_seq.{name}.csr,{t*1e6:.1f},gflops={gf_csr:.3f}"
+                 f";vdtype=f32")
+    # same-dtype CSR baseline for the quantised kernels: bf16 values,
+    # f32 accumulate (the gathered product promotes) -- so the _bf16/_int8
+    # speedup lines compare against a baseline moving the same value bytes,
+    # not the f32 one
+    values_bf16 = values.astype(jnp.bfloat16)
+    t = time_fn(lambda: csr_spmv(row_ids, colidx, values_bf16, x,
+                                 nrows=csr.nrows))
+    gf_csr_bf16 = flops / t / 1e9
+    lines.append(f"spmv_seq.{name}.csr_bf16,{t*1e6:.1f},"
+                 f"gflops={gf_csr_bf16:.3f};vdtype=bf16")
     for rc in KERNELS:
         mat = F.csr_to_spc5(csr, *rc)
         feats = S.spc5_features(mat)
@@ -122,7 +138,8 @@ def bench_matrix(name: str, csr, store: Optional[RecordStore] = None,
         gf = flops / t / 1e9
         kname = f"{rc[0]}x{rc[1]}"
         lines.append(f"spmv_seq.{name}.{kname},{t*1e6:.1f},"
-                     f"gflops={gf:.3f};speedup_vs_csr={gf/gf_csr:.2f}")
+                     f"gflops={gf:.3f};speedup_vs_csr={gf/gf_csr:.2f}"
+                     f";vdtype=f32")
         if store is not None:
             store.add_measurement(kname, feats,
                                   PanelConfig("whole_vector", 0, 0, 512),
@@ -137,13 +154,32 @@ def bench_matrix(name: str, csr, store: Optional[RecordStore] = None,
             td = time_fn(lambda: ops.spmv(hd, x, use_pallas=False))
             gfd = flops / td / 1e9
             lines.append(f"spmv_seq.{name}.{kname}_desc,{td*1e6:.1f},"
-                         f"gflops={gfd:.3f};vs_mask={gfd/gf:.2f}")
+                         f"gflops={gfd:.3f};vs_mask={gfd/gf:.2f}"
+                         f";vdtype=f32")
             if store is not None:
                 store.add_measurement(
                     kname, feats,
                     PanelConfig("whole_vector", 0, 0, 512,
                                 lowering="descriptor"),
                     workers, gfd, matrix=name)
+            # quantised value stores at the same geometry: speedups are
+            # against the SAME-dtype CSR baseline (csr_bf16 above), with
+            # the f32 ratio alongside so the bytes-saved win is visible
+            for vd in ("bf16", "int8"):
+                hq = ops.prepare(mat, cb=512, vdtype=vd,
+                                 layout="whole_vector")
+                tq = time_fn(lambda: ops.spmv(hq, x, use_pallas=False))
+                gfq = flops / tq / 1e9
+                lines.append(
+                    f"spmv_seq.{name}.{kname}_{vd},{tq*1e6:.1f},"
+                    f"gflops={gfq:.3f}"
+                    f";speedup_vs_csr_bf16={gfq/gf_csr_bf16:.2f}"
+                    f";vs_f32={gfq/gf:.2f};vdtype={vd}")
+                if store is not None:
+                    store.add_measurement(
+                        kname, feats,
+                        PanelConfig("whole_vector", 0, 0, 512, vdtype=vd),
+                        workers, gfq, matrix=name)
         # row-panel-tiled layout sweep (bounded-VMEM path). Locality stats
         # ride along: nchunks_total counts the REAL (mask != 0) chunks --
         # the layout's DMA-window total, what reordering tries to shrink --
@@ -163,7 +199,7 @@ def bench_matrix(name: str, csr, store: Optional[RecordStore] = None,
                 f"gflops={gfp:.3f};panels={hp.npanels};chunks={hp.nchunks}"
                 f";nchunks_total={nch_total}"
                 f";chunks_per_panel={nch_total / max(hp.npanels, 1):.2f}"
-                f";bandwidth={feats.bandwidth:.1f}")
+                f";bandwidth={feats.bandwidth:.1f};vdtype=f32")
             if store is not None:
                 store.add_measurement(
                     kname, feats, PanelConfig("panels", pr, PANEL_XW, 64),
@@ -175,7 +211,7 @@ def bench_matrix(name: str, csr, store: Optional[RecordStore] = None,
             gft = flops / tt / 1e9
             lines.append(
                 f"spmv_seq.{name}.{kname}_test,{tt*1e6:.1f},"
-                f"gflops={gft:.3f};singles={int(ht.n_single)}")
+                f"gflops={gft:.3f};singles={int(ht.n_single)};vdtype=f32")
             if store is not None:
                 store.add_measurement(f"{kname}_test", feats,
                                       PanelConfig("whole_vector", 0, 0, 512),
@@ -210,8 +246,11 @@ def sweep_matrix(name: str, csr, store: RecordStore,
             if cfg in seen:
                 continue
             seen.add(cfg)
+            quant = cfg.vdtype in ("bf16", "int8")
             h = ops.prepare(mat, layout=cfg.layout, pr=cfg.pr or None,
-                            xw=cfg.xw or None, cb=cfg.cb, dtype=np.float32,
+                            xw=cfg.xw or None, cb=cfg.cb,
+                            dtype=None if quant else np.float32,
+                            vdtype=cfg.vdtype if quant else "auto",
                             tune=False, lowering=cfg.lowering)
             t = time_fn(lambda: ops.spmv(h, x, use_pallas=False), iters=iters)
             gf = flops / t / 1e9
@@ -219,8 +258,10 @@ def sweep_matrix(name: str, csr, store: RecordStore,
                    else f"whole_cb{cfg.cb}")
             if cfg.lowering == "descriptor":
                 tag += "_desc"
+            if quant:
+                tag += f"_{cfg.vdtype}"
             lines.append(f"spmv_sweep.{name}.{kname}.{tag},{t*1e6:.1f},"
-                         f"gflops={gf:.3f}")
+                         f"gflops={gf:.3f};vdtype={cfg.vdtype}")
             store.add_measurement(kname, feats, cfg, workers, gf, matrix=name)
     return lines
 
@@ -281,7 +322,8 @@ def bench_reorder(name: str, csr, store: Optional[RecordStore] = None,
                 f"spmv_reorder.{name}.{kname}.{strat}.{gtag},{t*1e6:.1f},"
                 f"gflops={gf:.3f};applied={applied}"
                 f";bw_pre={pre.bandwidth_mean:.1f};bw_post={bw_post:.1f}"
-                f";nchunks_pre={pre.nchunks_total};nchunks_post={nch_post}")
+                f";nchunks_pre={pre.nchunks_total};nchunks_post={nch_post}"
+                f";vdtype=f32")
             if store is not None:
                 cfg = PanelConfig("panels", geo.pr, geo.xw, geo.cb,
                                   reorder=strat if applied else "")

@@ -60,7 +60,10 @@ def compare(current: dict, prior: dict, threshold: float = 0.25,
     failures = []
     for name in sorted(cur):
         if name not in pri:
-            print(f"gate: section {name!r} has no prior -- skipped")
+            # new benches (e.g. a fresh vdtype variant) must not fail their
+            # introducing PR; the note keeps the addition visible in CI logs
+            print(f"gate: section {name!r} is NEW in the current run -- "
+                  f"skipped (no prior baseline)")
             continue
         if len(cur[name]) < min_lines or len(pri[name]) < min_lines:
             print(f"gate: section {name!r} has <{min_lines} lines -- "

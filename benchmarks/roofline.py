@@ -39,15 +39,26 @@ DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
 # full fill (its worst -- the r*c-fold index tables dominate the bytes).
 SPMV_AVG_POINTS = (1.5, 4.0, 8.0, 16.0, 32.0)
 SPMV_BLOCKS = ((1, 8), (2, 4), (4, 4), (4, 8))
+# Value-dtype axis for the lowering model: the bytes-per-nnz (and so the
+# memory-bound gflops ceiling) shifts as the value store narrows while the
+# index/mask bytes stay fixed -- the model quantifies how much of each
+# lowering's stream quantisation actually removes.
+SPMV_VDTYPES = ("f32", "bf16", "int8")
 
 
-def spmv_lowering_rows(s_float: int = 4) -> List[Dict]:
+def spmv_lowering_rows(s_float: Optional[int] = None,
+                       vdtype: str = "f32") -> List[Dict]:
     """Bytes-per-nnz + memory-bound ceilings of the SpMV kernels, per
     lowering (the descriptor tables' bytes are accounted, so these numbers
     stay honest for both variants -- same model the plan registry's
-    lowering arbitration uses, ``formats.spmv_bytes_per_nnz``)."""
+    lowering arbitration uses, ``formats.spmv_bytes_per_nnz``).
+
+    ``vdtype`` sets the value itemsize ("f32" | "bf16" | "int8"); an
+    explicit ``s_float`` overrides it (the legacy call shape)."""
     from repro.core import formats as F
 
+    if s_float is None:
+        s_float = F.value_itemsize(vdtype)
     rows = []
     for (r, c) in SPMV_BLOCKS:
         for avg in SPMV_AVG_POINTS:
@@ -57,7 +68,7 @@ def spmv_lowering_rows(s_float: int = 4) -> List[Dict]:
             b_desc = F.spmv_bytes_per_nnz(r, c, avg, "descriptor",
                                           s_float=s_float)
             rows.append({
-                "block": f"{r}x{c}", "avg": avg,
+                "block": f"{r}x{c}", "avg": avg, "vdtype": vdtype,
                 "bytes_nnz_mask": b_mask, "bytes_nnz_desc": b_desc,
                 # 2 flops/nnz (mul+add) against the HBM stream: the
                 # memory-bound gflops ceiling per lowering
@@ -67,16 +78,26 @@ def spmv_lowering_rows(s_float: int = 4) -> List[Dict]:
     return rows
 
 
-def spmv_lowering_lines(s_float: int = 4) -> List[str]:
-    """CSV lines of :func:`spmv_lowering_rows` for the bench harness."""
-    return [
-        (f"roofline.spmv_lowering.{r['block']}.avg{r['avg']:g},0,"
-         f"bytes_mask={r['bytes_nnz_mask']:.2f};"
-         f"bytes_desc={r['bytes_nnz_desc']:.2f};"
-         f"gflops_mem_mask={r['gflops_mem_mask']:.1f};"
-         f"gflops_mem_desc={r['gflops_mem_desc']:.1f}")
-        for r in spmv_lowering_rows(s_float)
-    ]
+def spmv_lowering_lines(s_float: Optional[int] = None,
+                        vdtypes=SPMV_VDTYPES) -> List[str]:
+    """CSV lines of :func:`spmv_lowering_rows` for the bench harness.
+
+    f32 keeps the historical line names (the gate's priors); the quantised
+    dtypes append a ``.bf16`` / ``.int8`` segment so they land as fresh
+    sections, and every line carries a ``;vdtype=`` field."""
+    lines = []
+    for vd in vdtypes:
+        for r in spmv_lowering_rows(s_float, vdtype=vd):
+            suffix = "" if vd == "f32" else f".{vd}"
+            lines.append(
+                f"roofline.spmv_lowering.{r['block']}.avg{r['avg']:g}"
+                f"{suffix},0,"
+                f"bytes_mask={r['bytes_nnz_mask']:.2f};"
+                f"bytes_desc={r['bytes_nnz_desc']:.2f};"
+                f"gflops_mem_mask={r['gflops_mem_mask']:.1f};"
+                f"gflops_mem_desc={r['gflops_mem_desc']:.1f};"
+                f"vdtype={vd}")
+    return lines
 
 
 def load_cells(dryrun_dir: str = DRYRUN_DIR, tag: str = "") -> List[Dict]:

@@ -21,7 +21,7 @@ Layering: ``repro.core.plan`` never imports this module at module scope --
 ``make_plan(verify=...)`` pulls it in lazily, so the checker can import the
 registry freely.
 
-``verify_records`` is the record-store counterpart: schema-v3 completeness
+``verify_records`` is the record-store counterpart: schema-v4 completeness
 of every selector record plus the loader's malformed-line count
 (``RecordStore.skipped``).
 """
@@ -134,6 +134,7 @@ class _Ctx:
     geom: Dict[str, Any] = dataclasses.field(default_factory=dict)
     spec: Optional[P.LayoutSpec] = None
     lowering: str = P.LOWERING_MASK
+    vdtype: str = ""
     names: Tuple[str, ...] = ()
     host: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
 
@@ -168,6 +169,7 @@ def _r_layout_registered(ctx: _Ctx) -> bool:
     ctx.spec = P.get_layout(layout)
     ctx.geom = dict(ctx.plan.meta)
     ctx.lowering = ctx.geom.get("lowering", P.LOWERING_MASK)
+    ctx.vdtype = ctx.geom.get("vdtype", "")
     if ctx.lowering not in ctx.spec.lowerings:
         ctx.fail(rule, f"lowering {ctx.lowering!r} is not registered by "
                        f"layout {layout!r} (declares {ctx.spec.lowerings})")
@@ -192,16 +194,21 @@ def _expected_shapes(ctx: _Ctx) -> Dict[str, Tuple[int, ...]]:
         per_chunk = ((nch, g["cb"], rc) if ctx.lowering == P.LOWERING_DESC
                      else (nch, g["cb"]))
         names = {n: per_chunk for n in ctx.names
-                 if n not in ("values", "chunk_vbase")}
+                 if n not in ("values", "chunk_vbase", "value_scale")}
         names["chunk_vbase"] = (nch,)
+        if "value_scale" in ctx.names:      # one f32 scale per chunk
+            names["value_scale"] = (nch,)
         return names
     per_chunk = ((g["npanels"], g["nchunks"], g["cb"], rc)
                  if ctx.lowering == P.LOWERING_DESC
                  else (g["npanels"], g["nchunks"], g["cb"]))
     names = {n: per_chunk for n in ctx.names
-             if n not in ("values", "chunk_vbase", "chunk_xbase")}
+             if n not in ("values", "chunk_vbase", "chunk_xbase",
+                          "value_scale")}
     names["chunk_vbase"] = (g["npanels"], g["nchunks"])
     names["chunk_xbase"] = (g["npanels"], g["nchunks"])
+    if "value_scale" in ctx.names:
+        names["value_scale"] = (g["npanels"], g["nchunks"])
     return names
 
 
@@ -236,7 +243,11 @@ def _r_geometry_schema(ctx: _Ctx) -> bool:
                 ctx.fail(rule, f"xw={g['xw']} cannot hold a c={g['c']} block")
             if g["ncols_pad"] < g["xw"]:
                 ctx.fail(rule, f"ncols_pad={g['ncols_pad']} < xw={g['xw']}")
-    ctx.names = ctx.spec.plan_array_names(ctx.lowering)
+    if ctx.vdtype not in ("",) + F.VDTYPES:
+        ctx.fail(rule, f"geometry 'vdtype' must be one of {F.VDTYPES} or "
+                       f"'' (legacy), got {ctx.vdtype!r}")
+        return True
+    ctx.names = ctx.spec.plan_array_names(ctx.lowering, ctx.vdtype)
     if len(ctx.plan.arrays) != len(ctx.names):
         ctx.fail(rule, f"expected {len(ctx.names)} device arrays "
                        f"{ctx.names}, got {len(ctx.plan.arrays)}")
@@ -447,6 +458,85 @@ def _r_descriptor_vidx(ctx: _Ctx) -> bool:
     return True
 
 
+@_rule("descriptor-index-width")
+def _r_descriptor_index_width(ctx: _Ctx) -> bool:
+    """Descriptor gather tables carry the NARROWED index dtypes the chunk
+    geometry allows: each table's dtype both covers its bound (a too-narrow
+    dtype would have wrapped at build time) and IS the narrowest signed
+    integer that does (``formats.narrow_index_dtype`` -- a silently widened
+    table would undo the bytes-per-nnz win the descriptor lowering exists
+    for). ``desc_lane_nbytes`` in the geometry must equal the actual
+    per-lane byte count of the stored tables."""
+    if ctx.plan.layout == P.LAYOUT_TEST or _masked(ctx):
+        return False
+    rule = "descriptor-index-width"
+    g = ctx.geom
+    if ctx.plan.layout == P.LAYOUT_WHOLE:
+        xmax, ymax = g["ncols"], g["nrows"]
+    else:
+        xmax, ymax = g["xw"], g["pr"]
+    for name, limit in (("desc_vidx", g["vmax"]), ("desc_xcol", xmax),
+                        ("desc_yrow", ymax)):
+        dt = ctx.a(name).dtype
+        if dt.kind != "i":
+            ctx.fail(rule, f"{name} dtype {dt} is not a signed integer")
+            continue
+        if np.iinfo(dt).max < limit - 1:
+            ctx.fail(rule, f"{name} dtype {dt} cannot represent its bound "
+                           f"{limit - 1} (indices wrapped at build time)")
+        want = F.narrow_index_dtype(max(limit - 1, 0))
+        if dt.itemsize > want.itemsize:
+            ctx.fail(rule, f"{name} stored as {dt} but bound {limit - 1} "
+                           f"narrows to {want} (table not narrowed)")
+    if ctx.a("desc_valid").dtype.itemsize != 1:
+        ctx.fail(rule, f"desc_valid must be a 1-byte flag, got "
+                       f"{ctx.a('desc_valid').dtype}")
+    lane = (1 + ctx.a("desc_vidx").dtype.itemsize
+            + ctx.a("desc_xcol").dtype.itemsize
+            + ctx.a("desc_yrow").dtype.itemsize)
+    declared = g.get("desc_lane_nbytes")
+    if declared is not None and int(declared) != lane:
+        ctx.fail(rule, f"geometry desc_lane_nbytes={declared} but the "
+                       f"stored tables take {lane} bytes per lane")
+    return True
+
+
+# ----------------------------------------------------------------------------
+# Value-dtype rules
+# ----------------------------------------------------------------------------
+
+@_rule("value-dtype")
+def _r_value_dtype(ctx: _Ctx) -> bool:
+    """The plan's value store matches its declared ``vdtype``: stored
+    values carry the declared dtype, and int8 plans carry one finite,
+    strictly positive f32 dequantisation scale per chunk (shape-checked by
+    geometry-schema; corrupt scales would silently rescale whole chunks of
+    output)."""
+    if ctx.plan.layout == P.LAYOUT_TEST or not ctx.vdtype:
+        return False                    # legacy dtype= passthrough: no claim
+    rule = "value-dtype"
+    want = F.value_dtype(ctx.vdtype)
+    got = ctx.a("values").dtype
+    if got != want:
+        ctx.fail(rule, f"vdtype {ctx.vdtype!r} declares values dtype "
+                       f"{want}, stored array is {got}")
+    if ctx.vdtype != "int8":
+        return True
+    if "value_scale" not in ctx.names:
+        ctx.fail(rule, "int8 plan is missing its value_scale array")
+        return True
+    scale = ctx.a("value_scale")
+    if scale.dtype != np.float32:
+        ctx.fail(rule, f"value_scale must be f32, got {scale.dtype}")
+    if not np.isfinite(scale).all():
+        ctx.fail(rule, "value_scale has non-finite entries")
+    elif scale.size and float(scale.min()) <= 0.0:
+        ctx.fail(rule, f"value_scale must be strictly positive "
+                       f"(dequantisation divides by it at build time); "
+                       f"min={float(scale.min())}")
+    return True
+
+
 # ----------------------------------------------------------------------------
 # Cross-cutting rules
 # ----------------------------------------------------------------------------
@@ -506,7 +596,8 @@ _TRACE_PASSES = ("tune", "reorder", "layout", "build")
 _TUNE_SOURCES = ("store", "no-store", "explicit", "disabled", "delegated")
 _TRACE_KEYS = {"tune": ("source", "duration_s"),
                "reorder": ("strategy", "applied", "duration_s"),
-               "layout": ("layout", "reason", "lowering", "duration_s"),
+               "layout": ("layout", "reason", "lowering", "vdtype",
+                          "duration_s"),
                "build": ("layout", "rows_fused", "duration_s")}
 
 
@@ -625,7 +716,8 @@ def _r_test_split(ctx: _Ctx) -> bool:
 _ARRAY_RULES = ("mask-popcount", "mask-voff-window", "values-window-bounds",
                 "chunk-row-bounds", "chunk-col-bounds",
                 "descriptor-valid-mask", "descriptor-bounds",
-                "descriptor-vidx-consistent", "vmem-budget", "test-split")
+                "descriptor-vidx-consistent", "descriptor-index-width",
+                "value-dtype", "vmem-budget", "test-split")
 
 
 def verify_plan(plan: P.SPC5Plan, *, nvec: int = 1,
@@ -676,18 +768,19 @@ def _verify_into(plan, path: str, nvec: int, budget: int,
 
 
 # ----------------------------------------------------------------------------
-# Record-store verification (selector schema v3)
+# Record-store verification (selector schema v4)
 # ----------------------------------------------------------------------------
 
 _KERNEL_RE = re.compile(r"^(\d+)x(\d+)(?:_test)?$")
 
 
 def verify_records(store) -> VerifyReport:
-    """Schema-v3 completeness of a selector record store.
+    """Schema-v4 completeness of a selector record store.
 
     Rule ``record-schema``: every record's kernel parses as ``rxc`` with a
-    uint32-expressible mask, workers/gflops/avg sane and finite, layout and
-    lowering canonical. Rule ``store-load``: the loader dropped no lines
+    uint32-expressible mask, workers/gflops/avg sane and finite, layout,
+    lowering and vdtype canonical. Rule ``store-load``: the loader dropped
+    no lines
     (``RecordStore.skipped`` -- malformed JSONL lines are skipped with a
     count instead of poisoning the merge; a nonzero count is surfaced here).
     """
@@ -718,6 +811,10 @@ def verify_records(store) -> VerifyReport:
             bad(str(e))
         try:
             P.canonical_lowering(r.lowering or "")
+        except ValueError as e:
+            bad(str(e))
+        try:
+            F.canonical_vdtype(r.vdtype or "")
         except ValueError as e:
             bad(str(e))
     skipped = int(getattr(store, "skipped", 0) or 0)

@@ -45,7 +45,8 @@ ShardedSPC5Panels = PL.ShardedPlan
 
 def shard_matrix(mat: F.SPC5Matrix, ndev: int, *, layout: str = "auto",
                  cb: Optional[int] = None, mesh: Optional[Mesh] = None,
-                 axis: str = "data", dtype=None, pr: Optional[int] = None,
+                 axis: str = "data", dtype=None, vdtype: str = "auto",
+                 pr: Optional[int] = None,
                  xw: int = 512, store: Optional[S.RecordStore] = None,
                  config: Optional[S.PanelConfig] = None, tune: bool = True,
                  reorder=None, lowering: str = "auto",
@@ -77,13 +78,19 @@ def shard_matrix(mat: F.SPC5Matrix, ndev: int, *, layout: str = "auto",
     tuned pick else the cost-model arbitration. Tuned lowerings survive
     ``workers=ndev`` unchanged.
 
+    **Value dtype**: ``vdtype`` = "f32" | "bf16" | "int8" | "auto", as on
+    ``ops.prepare``. bf16 shards are served natively; int8 demotes to bf16
+    (per-chunk scale arrays have no stacked-shard story yet -- the
+    demotion is recorded on the lowering trace entry).
+
     **Partitioning**: ``partition`` = "blocks" (the paper's equal-block
     split) | "nnz" (equal-nonzero slabs for skewed structure) | "auto"
     (switch to "nnz" when the structure profile's skew says the block split
     would straggle the mesh; evidence in ``sh.trace``).
     """
     return PL.shard_plan(mat, ndev, layout=layout, cb=cb, mesh=mesh,
-                         axis=axis, dtype=dtype, pr=pr, xw=xw, store=store,
+                         axis=axis, dtype=dtype, vdtype=vdtype, pr=pr,
+                         xw=xw, store=store,
                          config=config, tune=tune, reorder=reorder,
                          lowering=lowering, partition=partition)
 

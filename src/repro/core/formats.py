@@ -44,6 +44,121 @@ SUPPORTED_BLOCKS: Tuple[Tuple[int, int], ...] = (
 _SENTINEL = np.int32(0)
 
 
+# ----------------------------------------------------------------------------
+# Value dtypes: the storage axis (f32 raw, bf16 raw, int8 + per-chunk scales)
+# ----------------------------------------------------------------------------
+
+#: Canonical value-storage dtypes. Every layout x lowering accepts any of
+#: these; kernels upcast to f32 inside the decode and accumulate in f32, so
+#: the dtype only changes HBM traffic, never the accumulation precision.
+VDTYPES: Tuple[str, ...] = ("f32", "bf16", "int8")
+
+_VDTYPE_ALIASES = {
+    "f32": "f32", "float32": "f32", "fp32": "f32",
+    "bf16": "bf16", "bfloat16": "bf16",
+    "int8": "int8", "i8": "int8", "s8": "int8",
+}
+
+
+def canonical_vdtype(name: str) -> str:
+    """Normalise a value-dtype name to one of :data:`VDTYPES`.
+
+    The sentinels ``""`` (legacy ``dtype=`` passthrough) and ``"auto"``
+    (tuner-resolved) pass through unchanged -- resolution is the plan
+    pipeline's job, not the format layer's.
+    """
+    if name in ("", "auto"):
+        return name
+    key = str(name).strip().lower()
+    if key not in _VDTYPE_ALIASES:
+        raise ValueError(f"unknown vdtype {name!r}; expected one of "
+                         f"{VDTYPES + ('auto', '')}")
+    return _VDTYPE_ALIASES[key]
+
+
+def value_dtype(vdtype: str) -> np.dtype:
+    """The numpy storage dtype of a canonical vdtype.
+
+    bfloat16 comes from ``ml_dtypes`` (a jax dependency, always present in
+    this toolchain); int8 values carry per-chunk f32 scales alongside.
+    """
+    vd = canonical_vdtype(vdtype)
+    if vd == "bf16":
+        import ml_dtypes
+        return np.dtype(ml_dtypes.bfloat16)
+    if vd == "int8":
+        return np.dtype(np.int8)
+    return np.dtype(np.float32)
+
+
+def value_itemsize(vdtype: str) -> int:
+    """Bytes per stored value for a canonical vdtype ('' -> f32's 4)."""
+    if vdtype in ("", "auto", "f32"):
+        return 4
+    return int(value_dtype(vdtype).itemsize)
+
+
+def quantize_chunk_values(values: np.ndarray, chunk_vbase: np.ndarray,
+                          chunk_mask: np.ndarray, vdtype: str
+                          ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+    """Quantise a chunked/panelled packed values array to ``vdtype``.
+
+    Returns ``(qvalues, scales)`` where ``scales`` is ``None`` except for
+    int8, which gets one symmetric f32 scale per chunk (``absmax / 127``
+    over the chunk's OWN nnz -- the popcount of its masks, NOT the full
+    aligned vmax window, which overlaps the next chunk's values). Chunks
+    with no values (or all zeros) get scale 1.0 so dequantisation is always
+    well-defined. Works on any leading chunk shape (flat or panel-tiled):
+    ``chunk_vbase`` and the per-chunk mask rows are raveled in step.
+    """
+    vd = canonical_vdtype(vdtype)
+    if vd in ("", "auto", "f32"):
+        return values.astype(np.float32), None
+    if vd == "bf16":
+        return values.astype(value_dtype("bf16")), None
+    vbase = np.asarray(chunk_vbase).ravel().astype(np.int64)
+    nnz_per_chunk = popcount_u32(
+        np.asarray(chunk_mask).reshape(vbase.shape[0], -1)
+    ).sum(axis=1).astype(np.int64)
+    scales = np.ones(vbase.shape[0], dtype=np.float32)
+    q = np.zeros(values.shape[0], dtype=np.int8)
+    v32 = values.astype(np.float32)
+    for i in range(vbase.shape[0]):
+        lo, hi = int(vbase[i]), int(vbase[i]) + int(nnz_per_chunk[i])
+        if hi <= lo:
+            continue
+        absmax = float(np.max(np.abs(v32[lo:hi])))
+        if absmax > 0.0:
+            scales[i] = np.float32(absmax / 127.0)
+        q[lo:hi] = np.clip(np.round(v32[lo:hi] / scales[i]),
+                           -127, 127).astype(np.int8)
+    return q, scales.reshape(np.asarray(chunk_vbase).shape)
+
+
+# ----------------------------------------------------------------------------
+# Narrow descriptor indices: int8/int16 gather tables where geometry allows
+# ----------------------------------------------------------------------------
+
+def narrow_index_dtype(max_value: int) -> np.dtype:
+    """Narrowest signed integer dtype that represents ``[0, max_value]``."""
+    if max_value <= np.iinfo(np.int8).max:
+        return np.dtype(np.int8)
+    if max_value <= np.iinfo(np.int16).max:
+        return np.dtype(np.int16)
+    return np.dtype(np.int32)
+
+
+def descriptor_lane_nbytes(vmax: int, xmax: int, ymax: int) -> int:
+    """Bytes per descriptor LANE at the narrowed table dtypes.
+
+    One int8 ``valid`` byte plus the narrowed itemsizes of the three index
+    tables (``vidx`` bounded by vmax, ``xcol`` by xmax, ``yrow`` by ymax) --
+    the dtype-aware replacement for ``DESC_WORDS_PER_LANE * 4``.
+    """
+    return 1 + sum(narrow_index_dtype(max(b - 1, 0)).itemsize
+                   for b in (vmax, xmax, ymax))
+
+
 @dataclasses.dataclass
 class CSRMatrix:
     """Compressed sparse row, the de-facto baseline format (paper fig. 1)."""
@@ -183,22 +298,32 @@ def descriptor_table_bytes(nblocks: int, r: int, c: int,
 
 
 def spmv_bytes_per_nnz(r: int, c: int, avg: float, lowering: str = "mask",
-                       s_float: int = 4, s_int: int = 4) -> float:
-    """HBM bytes per nonzero of one SpMV pass, per lowering.
+                       s_float: int = 4, s_int: int = 4,
+                       desc_lane_nbytes: Optional[int] = None) -> float:
+    """HBM bytes per nonzero of one SpMV pass, per lowering and value dtype.
 
-    Shared by the plan registry's lowering-cost arbitration and the roofline
-    bench, so "auto" resolution and the reported arithmetic intensity use
-    the same model. Both lowerings stream the packed values (``s_float``)
-    and one chunk-base int per block; they differ in index traffic:
+    Shared by the plan registry's lowering-cost arbitration, the roofline
+    bench, and the server's :class:`PlanExecStats` ceiling, so "auto"
+    resolution and the reported arithmetic intensity use the same model.
+    Both lowerings stream the packed values (``s_float`` -- the VALUE
+    itemsize: 4 for f32, 2 for bf16, 1 for int8) and one chunk-base int per
+    block; they differ in index traffic:
 
       * ``mask``: 4 int32 per block (mask, voffset, colidx, row);
-      * ``descriptor``: :data:`DESC_WORDS_PER_LANE` int32 per block *lane*
-        -- the bit expansion and rank cumsum are gone from the hot loop, at
-        an r*c-fold index inflation.
+      * ``descriptor``: ``desc_lane_nbytes`` bytes per block *lane* (the
+        narrowed tables a built plan actually carries -- see
+        :func:`descriptor_lane_nbytes`; defaults to the un-narrowed
+        :data:`DESC_WORDS_PER_LANE` int32 words) -- the bit expansion and
+        rank cumsum are gone from the hot loop, at an r*c-fold index
+        inflation.
     """
     avg = max(avg, 1e-12)
-    per_block = (DESC_WORDS_PER_LANE * r * c * s_int
-                 if lowering == "descriptor" else 4 * s_int)
+    if lowering == "descriptor":
+        lane = (DESC_WORDS_PER_LANE * s_int if desc_lane_nbytes is None
+                else desc_lane_nbytes)
+        per_block = lane * r * c
+    else:
+        per_block = 4 * s_int
     return s_float + (per_block + s_int) / avg
 
 
@@ -219,12 +344,24 @@ class ChunkDescriptors:
     whole-vector layout, ``(npanels, nchunks, cb, r*c)`` for panels (where
     ``xcol`` is window-relative and ``yrow`` panel-relative, like the mask
     arrays they expand).
+
+    Table dtypes are NARROWED to the smallest signed integer the clip bound
+    allows (:func:`narrow_index_dtype`): ``valid`` is always int8, ``vidx``
+    is bounded by ``vmax``, ``xcol`` by ``xmax`` and ``yrow`` by ``ymax``.
+    Kernels cast back to int32 in-VMEM before gathering; the narrowing only
+    cuts HBM traffic (:func:`descriptor_lane_nbytes` models the lane bytes).
     """
 
-    valid: np.ndarray  # int32, mask bit per lane (0 => padding lane)
-    vidx: np.ndarray   # int32, value index within the chunk window
-    xcol: np.ndarray   # int32, x gather index (col_map pre-folded if given)
-    yrow: np.ndarray   # int32, y scatter index
+    valid: np.ndarray  # int8, mask bit per lane (0 => padding lane)
+    vidx: np.ndarray   # int8/int16/int32, value index within chunk window
+    xcol: np.ndarray   # int8/int16/int32, x gather (col_map pre-folded)
+    yrow: np.ndarray   # int8/int16/int32, y scatter index
+
+    @property
+    def lane_nbytes(self) -> int:
+        """Actual bytes per lane across the four tables."""
+        return (self.valid.dtype.itemsize + self.vidx.dtype.itemsize
+                + self.xcol.dtype.itemsize + self.yrow.dtype.itemsize)
 
 
 def chunk_descriptors(chunk_mask: np.ndarray, chunk_voff: np.ndarray,
@@ -256,8 +393,11 @@ def chunk_descriptors(chunk_mask: np.ndarray, chunk_voff: np.ndarray,
         xcol = np.asarray(col_map, dtype=np.int64)[xcol]
     yrow = np.clip(chunk_row[..., None].astype(np.int64) + (kk // c),
                    0, ymax - 1)
-    return ChunkDescriptors(bits, vidx.astype(np.int32),
-                            xcol.astype(np.int32), yrow.astype(np.int32))
+    return ChunkDescriptors(
+        bits.astype(np.int8),
+        vidx.astype(narrow_index_dtype(vmax - 1)),
+        xcol.astype(narrow_index_dtype(xmax - 1)),
+        yrow.astype(narrow_index_dtype(ymax - 1)))
 
 
 # ----------------------------------------------------------------------------

@@ -167,10 +167,18 @@ class LayoutSpec:
     desc_array_names: Optional[Tuple[str, ...]] = None
     desc_device_view: Optional[Callable] = None
 
-    def plan_array_names(self, lowering: str) -> Tuple[str, ...]:
-        if lowering == LOWERING_DESC and self.desc_array_names:
-            return self.desc_array_names
-        return self.array_names
+    def plan_array_names(self, lowering: str,
+                         vdtype: str = "f32") -> Tuple[str, ...]:
+        """Device-array names of a (lowering, vdtype) plan variant. The
+        int8 value store rides a per-chunk f32 scale array alongside the
+        layout's base arrays (only layouts with a packed ``values`` array
+        quantise -- the test tail keeps full precision)."""
+        names = (self.desc_array_names
+                 if lowering == LOWERING_DESC and self.desc_array_names
+                 else self.array_names)
+        if vdtype == "int8" and "values" in names:
+            names = names + ("value_scale",)
+        return names
 
     @property
     def shard_lowerings(self) -> Tuple[str, ...]:
@@ -287,6 +295,15 @@ def _meta_lowering(meta) -> str:
     return LOWERING_MASK
 
 
+def _meta_vdtype(meta) -> str:
+    """The plan's resolved value dtype ("" = legacy ``dtype=`` passthrough,
+    indistinguishable from f32 for sizing purposes on f32 matrices)."""
+    for k, v in meta:
+        if k == "vdtype":
+            return v
+    return ""
+
+
 def _resolve_attr(obj, name):
     """Shared attribute resolution for plan containers: geometry meta keys
     first, then the layout's named device arrays (per-lowering name set)."""
@@ -297,7 +314,8 @@ def _resolve_attr(obj, name):
     layout = object.__getattribute__(obj, "layout")
     spec = _REGISTRY.get(layout)
     if spec is not None:
-        names = spec.plan_array_names(_meta_lowering(meta))
+        names = spec.plan_array_names(_meta_lowering(meta),
+                                      _meta_vdtype(meta))
         if name in names:
             arrays = object.__getattribute__(obj, "arrays")
             return arrays[names.index(name)]
@@ -344,14 +362,18 @@ class SPC5Plan:
     @property
     def dev(self):
         """The layout's device-array view (legacy ``handle.dev`` API),
-        lowering-aware: descriptor plans get the descriptor view."""
+        lowering-aware: descriptor plans get the descriptor view. The int8
+        value store's trailing scale array is not part of the NamedTuple
+        view -- lowerings fetch ``plan.value_scale`` separately."""
         spec = get_layout(self.layout)
+        lowering = _meta_lowering(self.meta)
         view = (spec.desc_device_view
-                if _meta_lowering(self.meta) == LOWERING_DESC
+                if lowering == LOWERING_DESC
                 else spec.device_view)
         if view is None:
             raise AttributeError(f"layout {self.layout!r} has no dev view")
-        return view(self.arrays)
+        base = spec.plan_array_names(lowering)
+        return view(self.arrays[:len(base)])
 
     @property
     def multi(self) -> "SPC5Plan":
@@ -424,6 +446,7 @@ class PlanState:
     nvec: int = 1
     align: int = 8
     dtype: Any = None
+    vdtype: str = "auto"            # value-dtype axis ("" = legacy dtype=)
     store: Optional[S.RecordStore] = None
     tune: bool = True
     reorder: Union[None, str, RE.Reordering] = None
@@ -433,6 +456,11 @@ class PlanState:
 
     @property
     def itemsize(self) -> int:
+        """Bytes per stored value under the vdtype in effect -- every VMEM
+        budget and cost-model decision downstream runs on this, so a bf16 /
+        int8 request is sized at its real footprint from the first pass."""
+        if self.vdtype in F.VDTYPES:
+            return F.value_itemsize(self.vdtype)
         return np.dtype(self.dtype or self.mat.values.dtype).itemsize
 
 
@@ -479,12 +507,18 @@ def _tune_pass(st: PlanState) -> None:
             st.cb = cfg.cb
             if st.lowering == "auto" and cfg.lowering:
                 st.lowering = cfg.lowering
+            # only a QUANTISED tuned pick flips the value-dtype axis: a
+            # tuned "f32" is the neutral default and must leave an
+            # untuned-equivalent plan byte-identical (legacy passthrough)
+            if st.vdtype == "auto" and cfg.vdtype in ("bf16", "int8"):
+                st.vdtype = cfg.vdtype
             if st.reorder is None and cfg.reorder:
                 st.reorder = cfg.reorder
             entry.update(source="store", layout=cfg.layout,
                          pr=int(cfg.pr or 0), xw=int(cfg.xw or 0),
                          cb=int(cfg.cb or 0), reorder=cfg.reorder,
-                         lowering=cfg.lowering, demoted=demoted)
+                         lowering=cfg.lowering, vdtype=cfg.vdtype,
+                         demoted=demoted)
             if demoted:
                 entry["demoted_reason"] = "vmem-budget"
             if lowering_demoted:
@@ -537,6 +571,12 @@ def _layout_pass(st: PlanState) -> None:
     demotion traced); "auto" is arbitrated by :func:`lowering_cost` --
     descriptor-table bytes vs mask-decode ops."""
     entry: dict = {"pass": "layout"}
+    # Resolve the value-dtype axis FIRST: "auto" with no tuned pick falls
+    # back to "" (legacy dtype= passthrough, byte-identical to pre-axis
+    # plans), so st.itemsize is final before any cost arbitration below.
+    if st.vdtype == "auto":
+        st.vdtype = ""
+    entry["vdtype"] = st.vdtype
     if st.layout == "auto":
         entry["reason"] = "vmem-fit"
         for name in _AUTO_ORDER:
@@ -609,7 +649,8 @@ def _build_pass(st: PlanState) -> SPC5Plan:
 def make_plan(mat: F.SPC5Matrix, *, layout: str = "auto",
               pr: Optional[int] = None, xw: Optional[int] = None,
               cb: Optional[int] = None, nvec: int = 1, align: int = 8,
-              dtype=None, store: Optional[S.RecordStore] = None,
+              dtype=None, vdtype: str = "auto",
+              store: Optional[S.RecordStore] = None,
               tune: bool = True,
               reorder: Union[None, str, RE.Reordering] = None,
               multi_layout: str = "auto",
@@ -627,17 +668,31 @@ def make_plan(mat: F.SPC5Matrix, *, layout: str = "auto",
     tuner's pick when a store is present, else the :func:`lowering_cost`
     arbitration.
 
+    ``vdtype`` is the value-dtype axis ("f32" | "bf16" | "int8" | "auto"):
+    how the plan STORES values, with the kernels always accumulating in
+    f32 (quantised plans return f32 outputs regardless). "auto" takes a
+    quantised tuned pick when the store has one, else the legacy behaviour
+    (values kept at the matrix dtype, or cast by the ``dtype=``
+    passthrough -- the two knobs are mutually exclusive). int8 plans carry
+    a per-chunk f32 scale array (``plan.value_scale``) computed at build
+    time.
+
     ``verify`` is the opt-in static-analysis hook: ``True`` runs
     ``repro.analysis.verify.verify_plan`` on the finished plan and raises
     :class:`~repro.analysis.verify.PlanVerificationError` on any invariant
     violation; a callable receives the :class:`VerifyReport` instead (for
     cache-admission policies that want to log rather than raise).
     """
+    vdtype = F.canonical_vdtype(vdtype)
+    if vdtype not in ("", "auto") and dtype is not None:
+        raise ValueError(
+            f"pass either dtype= (legacy passthrough) or vdtype={vdtype!r}, "
+            f"not both -- the value-dtype axis owns the cast")
     st = PlanState(mat=mat, layout=canonical_layout(layout),
                    multi_layout=canonical_layout(multi_layout),
                    lowering=canonical_lowering(lowering),
                    pr=pr, xw=xw, cb=cb, nvec=nvec, align=align, dtype=dtype,
-                   store=store, tune=tune, reorder=reorder)
+                   vdtype=vdtype, store=store, tune=tune, reorder=reorder)
     # Each pass runs under an obs span and stamps its wall-time into its
     # own trace entry, so plan.trace records durations alongside decisions
     # (the trace-schema verify rule requires duration_s on every entry).
@@ -705,6 +760,27 @@ def execute_spmm(plan: SPC5Plan, x: jax.Array, *,
 
 def _gathered_x(plan: SPC5Plan, x: jax.Array) -> jax.Array:
     return x if plan.col_perm is None else jnp.take(x, plan.col_perm, axis=0)
+
+
+def _value_store(values: np.ndarray, chunk_vbase: np.ndarray,
+                 chunk_mask: np.ndarray, st: PlanState):
+    """Apply the resolved value-dtype axis to a build's packed value array:
+    legacy ``dtype=`` passthrough when no vdtype is in effect, else the
+    formats-layer store (bf16 cast / int8 + per-chunk f32 scales keyed by
+    the chunk's OWN nnz). Returns ``(values, scales_or_None)``."""
+    if not st.vdtype:
+        return (values if st.dtype is None
+                else values.astype(st.dtype)), None
+    return F.quantize_chunk_values(values, chunk_vbase, chunk_mask,
+                                   st.vdtype)
+
+
+def _plan_scale(plan: SPC5Plan):
+    """The per-chunk dequantisation scales of an int8 plan (None otherwise)
+    -- every lowering threads this into its kernel / reference oracle."""
+    if _meta_vdtype(plan.meta) == "int8":
+        return plan.value_scale
+    return None
 
 
 # ----------------------------------------------------------------------------
@@ -791,7 +867,9 @@ def _build_whole(st: PlanState):
         rows_fused = True
     geom = dict(r=ch.r, c=ch.c, cb=ch.cb, vmax=ch.vmax, nrows=ch.nrows,
                 ncols=ch.ncols, nnz=ch.nnz, nblocks=int(st.mat.nblocks),
-                lowering=st.lowering)
+                lowering=st.lowering, vdtype=st.vdtype)
+    values, scales = _value_store(ch.values, ch.chunk_vbase, ch.chunk_mask,
+                                  st)
     if st.lowering == LOWERING_DESC:
         # descriptor lowering: expand the masks once; a column permutation
         # folds into the static xcol table outright, so the plan carries no
@@ -805,38 +883,43 @@ def _build_whole(st: PlanState):
                                    ch.chunk_col, ch.chunk_row, r=ch.r,
                                    c=ch.c, vmax=ch.vmax, xmax=ch.ncols,
                                    ymax=ch.nrows, col_map=cmap)
-        values = (ch.values if st.dtype is None
-                  else ch.values.astype(st.dtype))
+        geom["desc_lane_nbytes"] = desc.lane_nbytes
         arrays = (jnp.asarray(values), jnp.asarray(desc.valid),
                   jnp.asarray(desc.vidx), jnp.asarray(desc.xcol),
                   jnp.asarray(desc.yrow), jnp.asarray(ch.chunk_vbase))
+        if scales is not None:
+            arrays = arrays + (jnp.asarray(scales),)
         return arrays, geom, {"rows_fused": rows_fused,
                               "cols_fused": cols_fused}
-    dev = R.device_put(ch, dtype=st.dtype)
-    return tuple(dev), geom, {"rows_fused": rows_fused}
+    dev = R.device_put(ch)._replace(values=jnp.asarray(values))
+    arrays = tuple(dev)
+    if scales is not None:
+        arrays = arrays + (jnp.asarray(scales),)
+    return arrays, geom, {"rows_fused": rows_fused}
 
 
 def _lower_spmv_whole(plan: SPC5Plan, x, *, use_pallas, double_buffer,
                       interpret):
     dev = plan.dev
+    scale = _plan_scale(plan)
     if plan.lowering == LOWERING_DESC:
         if not use_pallas:
-            return R.spmv_desc(dev, x, nrows=plan.nrows)
+            return R.spmv_desc(dev, x, scale, nrows=plan.nrows)
         fn = (spc5_spmv.spmv_pallas_desc_db if double_buffer
               else spc5_spmv.spmv_pallas_desc)
         return fn(dev.chunk_vbase, dev.desc_valid, dev.desc_vidx,
-                  dev.desc_xcol, dev.desc_yrow, dev.values, x,
+                  dev.desc_xcol, dev.desc_yrow, dev.values, x, scale,
                   r=plan.r, c=plan.c, cb=plan.cb, vmax=plan.vmax,
                   nrows=plan.nrows, ncols=plan.ncols, interpret=interpret)
     if not use_pallas:
-        return R.spmv(dev, _gathered_x(plan, x), r=plan.r, c=plan.c,
+        return R.spmv(dev, _gathered_x(plan, x), scale, r=plan.r, c=plan.c,
                       nrows=plan.nrows, ncols=plan.ncols)
     # fused x gather: the whole-vector kernels route their decode through
     # col_map, so x never materialises in permuted order
     fn = (spc5_spmv.spmv_pallas_db if double_buffer
           else spc5_spmv.spmv_pallas)
     return fn(dev.chunk_vbase, dev.chunk_col, dev.chunk_mask, dev.chunk_voff,
-              dev.chunk_row, dev.values, x, plan.col_perm,
+              dev.chunk_row, dev.values, x, plan.col_perm, scale,
               r=plan.r, c=plan.c, cb=plan.cb, vmax=plan.vmax,
               nrows=plan.nrows, ncols=plan.ncols, interpret=interpret)
 
@@ -844,20 +927,21 @@ def _lower_spmv_whole(plan: SPC5Plan, x, *, use_pallas, double_buffer,
 def _lower_spmm_whole(plan: SPC5Plan, x, *, use_pallas, nvt, double_buffer,
                       interpret):
     dev = plan.dev
+    scale = _plan_scale(plan)
     if plan.lowering == LOWERING_DESC:
         if not use_pallas:
-            return R.spmm_desc(dev, x, nrows=plan.nrows)
+            return R.spmm_desc(dev, x, scale, nrows=plan.nrows)
         return spc5_spmm.spmm_pallas_desc(
             dev.chunk_vbase, dev.desc_valid, dev.desc_vidx, dev.desc_xcol,
-            dev.desc_yrow, dev.values, x, r=plan.r, c=plan.c, cb=plan.cb,
-            vmax=plan.vmax, nrows=plan.nrows, ncols=plan.ncols,
+            dev.desc_yrow, dev.values, x, scale, r=plan.r, c=plan.c,
+            cb=plan.cb, vmax=plan.vmax, nrows=plan.nrows, ncols=plan.ncols,
             nvt=min(nvt, x.shape[1]), interpret=interpret)
     if not use_pallas:
-        return R.spmm(dev, _gathered_x(plan, x), r=plan.r, c=plan.c,
+        return R.spmm(dev, _gathered_x(plan, x), scale, r=plan.r, c=plan.c,
                       nrows=plan.nrows, ncols=plan.ncols)
     return spc5_spmm.spmm_pallas(
         dev.chunk_vbase, dev.chunk_col, dev.chunk_mask, dev.chunk_voff,
-        dev.chunk_row, dev.values, x, plan.col_perm,
+        dev.chunk_row, dev.values, x, plan.col_perm, scale,
         r=plan.r, c=plan.c, cb=plan.cb, vmax=plan.vmax, nrows=plan.nrows,
         ncols=plan.ncols, nvt=min(nvt, x.shape[1]), interpret=interpret)
 
@@ -1040,7 +1124,9 @@ def _build_panels(st: PlanState):
                 vmax=pan.vmax, npanels=pan.npanels, nchunks=pan.nchunks,
                 nrows=pan.nrows, ncols=pan.ncols, ncols_pad=pan.ncols_pad,
                 nnz=pan.nnz, nblocks=int(st.mat.nblocks),
-                lowering=st.lowering)
+                lowering=st.lowering, vdtype=st.vdtype)
+    values, scales = _value_store(pan.values, pan.chunk_vbase,
+                                  pan.chunk_mask, st)
     if st.lowering == LOWERING_DESC:
         # window-relative xcol / panel-relative yrow tables; a column
         # permutation cannot fold in (windows live in permuted column
@@ -1049,15 +1135,19 @@ def _build_panels(st: PlanState):
                                    pan.chunk_col, pan.chunk_row, r=pan.r,
                                    c=pan.c, vmax=pan.vmax, xmax=pan.xw,
                                    ymax=pan.pr)
-        values = (pan.values if st.dtype is None
-                  else pan.values.astype(st.dtype))
+        geom["desc_lane_nbytes"] = desc.lane_nbytes
         arrays = (jnp.asarray(values), jnp.asarray(desc.valid),
                   jnp.asarray(desc.vidx), jnp.asarray(desc.xcol),
                   jnp.asarray(desc.yrow), jnp.asarray(pan.chunk_vbase),
                   jnp.asarray(pan.chunk_xbase))
+        if scales is not None:
+            arrays = arrays + (jnp.asarray(scales),)
         return arrays, geom, {"rows_fused": rows_fused}
-    dev = R.device_put_panels(pan, dtype=st.dtype)
-    return tuple(dev), geom, {"rows_fused": rows_fused}
+    dev = R.device_put_panels(pan)._replace(values=jnp.asarray(values))
+    arrays = tuple(dev)
+    if scales is not None:
+        arrays = arrays + (jnp.asarray(scales),)
+    return arrays, geom, {"rows_fused": rows_fused}
 
 
 def _panel_fused_x(plan: SPC5Plan, x, nvec: int = 1):
@@ -1087,28 +1177,29 @@ def _lower_spmv_panels(plan: SPC5Plan, x, *, use_pallas, double_buffer,
     # materialised in permuted order here, except past the fused kernels'
     # VMEM budget (_panel_fused_x)
     dev = plan.dev
+    scale = _plan_scale(plan)
     if plan.lowering == LOWERING_DESC:
         if not use_pallas:
-            return R.spmv_panels_desc(dev, x, plan.col_perm, pr=plan.pr,
-                                      nrows=plan.nrows,
+            return R.spmv_panels_desc(dev, x, plan.col_perm, scale,
+                                      pr=plan.pr, nrows=plan.nrows,
                                       ncols_pad=plan.ncols_pad)
         xk, cmap = _panel_fused_x(plan, x)
         fn = (spc5_spmv.spmv_pallas_panels_desc_db if double_buffer
               else spc5_spmv.spmv_pallas_panels_desc)
         return fn(dev.chunk_vbase, dev.chunk_xbase, dev.desc_valid,
                   dev.desc_vidx, dev.desc_xcol, dev.desc_yrow, dev.values,
-                  xk, cmap, r=plan.r, c=plan.c, cb=plan.cb, vmax=plan.vmax,
-                  xw=plan.xw, pr=plan.pr, nrows=plan.nrows,
+                  xk, cmap, scale, r=plan.r, c=plan.c, cb=plan.cb,
+                  vmax=plan.vmax, xw=plan.xw, pr=plan.pr, nrows=plan.nrows,
                   ncols_pad=plan.ncols_pad, interpret=interpret)
     if not use_pallas:
-        return R.spmv_panels(dev, x, plan.col_perm, r=plan.r, c=plan.c,
-                             pr=plan.pr, nrows=plan.nrows,
+        return R.spmv_panels(dev, x, plan.col_perm, scale, r=plan.r,
+                             c=plan.c, pr=plan.pr, nrows=plan.nrows,
                              ncols_pad=plan.ncols_pad)
     xk, cmap = _panel_fused_x(plan, x)
     fn = (spc5_spmv.spmv_pallas_panels_db if double_buffer
           else spc5_spmv.spmv_pallas_panels)
     return fn(dev.chunk_vbase, dev.chunk_xbase, dev.chunk_col, dev.chunk_mask,
-              dev.chunk_voff, dev.chunk_row, dev.values, xk, cmap,
+              dev.chunk_voff, dev.chunk_row, dev.values, xk, cmap, scale,
               r=plan.r, c=plan.c, cb=plan.cb, vmax=plan.vmax, xw=plan.xw,
               pr=plan.pr, nrows=plan.nrows, ncols_pad=plan.ncols_pad,
               interpret=interpret)
@@ -1117,29 +1208,30 @@ def _lower_spmv_panels(plan: SPC5Plan, x, *, use_pallas, double_buffer,
 def _lower_spmm_panels(plan: SPC5Plan, x, *, use_pallas, nvt, double_buffer,
                        interpret):
     dev = plan.dev
+    scale = _plan_scale(plan)
     if plan.lowering == LOWERING_DESC:
         if not use_pallas:
-            return R.spmm_panels_desc(dev, x, plan.col_perm, pr=plan.pr,
-                                      nrows=plan.nrows,
+            return R.spmm_panels_desc(dev, x, plan.col_perm, scale,
+                                      pr=plan.pr, nrows=plan.nrows,
                                       ncols_pad=plan.ncols_pad)
         xk, cmap = _panel_fused_x(plan, x, nvec=x.shape[1])
         fn = (spc5_spmm.spmm_pallas_panels_desc_db if double_buffer
               else spc5_spmm.spmm_pallas_panels_desc)
         return fn(dev.chunk_vbase, dev.chunk_xbase, dev.desc_valid,
                   dev.desc_vidx, dev.desc_xcol, dev.desc_yrow, dev.values,
-                  xk, cmap, r=plan.r, c=plan.c, cb=plan.cb, vmax=plan.vmax,
-                  xw=plan.xw, pr=plan.pr, nrows=plan.nrows,
+                  xk, cmap, scale, r=plan.r, c=plan.c, cb=plan.cb,
+                  vmax=plan.vmax, xw=plan.xw, pr=plan.pr, nrows=plan.nrows,
                   ncols_pad=plan.ncols_pad, nvt=min(nvt, x.shape[1]),
                   interpret=interpret)
     if not use_pallas:
-        return R.spmm_panels(dev, x, plan.col_perm, r=plan.r, c=plan.c,
-                             pr=plan.pr, nrows=plan.nrows,
+        return R.spmm_panels(dev, x, plan.col_perm, scale, r=plan.r,
+                             c=plan.c, pr=plan.pr, nrows=plan.nrows,
                              ncols_pad=plan.ncols_pad)
     xk, cmap = _panel_fused_x(plan, x, nvec=x.shape[1])
     fn = (spc5_spmm.spmm_pallas_panels_db if double_buffer
           else spc5_spmm.spmm_pallas_panels)
     return fn(dev.chunk_vbase, dev.chunk_xbase, dev.chunk_col, dev.chunk_mask,
-              dev.chunk_voff, dev.chunk_row, dev.values, xk, cmap,
+              dev.chunk_voff, dev.chunk_row, dev.values, xk, cmap, scale,
               r=plan.r, c=plan.c, cb=plan.cb, vmax=plan.vmax, xw=plan.xw,
               pr=plan.pr, nrows=plan.nrows, ncols_pad=plan.ncols_pad,
               nvt=min(nvt, x.shape[1]), interpret=interpret)
@@ -1309,10 +1401,20 @@ def _bucket_tail_by_panel(rows: np.ndarray, cols: np.ndarray,
 
 def _build_test(st: PlanState):
     split = F.split_singletons(st.mat)
-    dt = st.dtype or st.mat.values.dtype
+    # tail value store: bf16 tails store bf16 (the COO tail paths upcast
+    # before accumulating); int8 tails STAY full precision -- the singleton
+    # tail has no chunk structure to hang per-chunk scales off, and its nnz
+    # share is too small for the bytes to matter
+    if st.vdtype == "bf16":
+        dt = F.value_dtype("bf16")
+    elif st.vdtype == "int8":
+        dt = np.float32
+    else:
+        dt = st.dtype or st.mat.values.dtype
     multi = make_plan(split.multi, layout=st.multi_layout, pr=st.pr,
                       xw=st.xw, cb=st.cb, nvec=st.nvec, align=st.align,
-                      dtype=st.dtype, store=st.store, tune=st.tune,
+                      dtype=st.dtype, vdtype=st.vdtype or "auto",
+                      store=st.store, tune=st.tune,
                       reorder=None, lowering=st.lowering)
     n_single = int(split.single_values.shape[0])
     if multi.layout == LAYOUT_PANELS and n_single:
@@ -1331,7 +1433,8 @@ def _build_test(st: PlanState):
         tail_pr, tail_xw, tail_pad = 0, 0, 0
     geom = dict(nrows=st.mat.nrows, ncols=st.mat.ncols, nnz=st.mat.nnz,
                 tail_pr=tail_pr, tail_xw=tail_xw, tail_ncols_pad=tail_pad,
-                n_single=n_single, lowering=multi.lowering)
+                n_single=n_single, lowering=multi.lowering,
+                vdtype=_meta_vdtype(multi.meta))
     return arrays, geom, {"children": (multi,)}
 
 
@@ -1450,6 +1553,7 @@ class ShardState:
 def shard_plan(mat: F.SPC5Matrix, ndev: int, *, layout: str = "auto",
                cb: Optional[int] = None,
                mesh=None, axis: str = "data", dtype=None,
+               vdtype: str = "auto",
                pr: Optional[int] = None, xw: int = 512,
                store: Optional[S.RecordStore] = None,
                config: Optional[S.PanelConfig] = None, tune: bool = True,
@@ -1472,6 +1576,11 @@ def shard_plan(mat: F.SPC5Matrix, ndev: int, *, layout: str = "auto",
     the tuned pick when the store has one, else the :func:`lowering_cost`
     arbitration -- tuned lowerings survive ``workers=ndev`` unchanged.
 
+    ``vdtype`` follows :func:`make_plan`'s axis with one restriction: the
+    shard hooks stack plain value casts, so "bf16" is served natively and
+    "int8" demotes to "bf16" (traced as ``vdtype_demoted``) -- per-chunk
+    scale arrays have no per-device stacking story yet.
+
     ``partition`` picks the row-slab balance objective: "blocks" (the
     paper's equal-block split), "nnz" (equal-nonzero split for skewed
     structure), or "auto", which reads the structure profile's per-part nnz
@@ -1486,6 +1595,21 @@ def shard_plan(mat: F.SPC5Matrix, ndev: int, *, layout: str = "auto",
     from jax.sharding import NamedSharding, PartitionSpec
 
     lowering = canonical_lowering(lowering)     # fail fast on typos
+    vdtype = F.canonical_vdtype(vdtype)
+    if vdtype not in ("", "auto") and dtype is not None:
+        raise ValueError(
+            f"pass either dtype= (legacy passthrough) or vdtype={vdtype!r}, "
+            f"not both -- the value-dtype axis owns the cast")
+    if vdtype == "auto":
+        vdtype = ""
+    # The shard hooks stack plain casts; per-chunk int8 scales have no
+    # per-device stacking story yet, so int8 demotes to the nearest
+    # scale-free narrow store (bf16) with the demotion traced.
+    vdtype_demoted = vdtype == "int8"
+    if vdtype_demoted:
+        vdtype = "bf16"
+    if vdtype:
+        dtype = F.value_dtype(vdtype)
     if partition not in P.PARTITION_MODES + ("auto",):
         raise ValueError(
             f"unknown partition mode {partition!r}; expected one of "
@@ -1597,6 +1721,10 @@ def shard_plan(mat: F.SPC5Matrix, ndev: int, *, layout: str = "auto",
                            np.dtype(dtype or mat.values.dtype).itemsize, n))
         lentry["reason"] = "cost-model"
     lentry["lowering"] = lowering
+    lentry["vdtype"] = vdtype
+    if vdtype_demoted:
+        lentry["vdtype_demoted"] = True
+        lentry["vdtype_demoted_reason"] = "no-sharded-int8-scales"
     lentry["duration_s"] = sp.finish().duration_s
     trace.append(lentry)
 
@@ -1629,6 +1757,7 @@ def shard_plan(mat: F.SPC5Matrix, ndev: int, *, layout: str = "auto",
                   else spec.shard_build)
     arrays, geom = build_hook(sstate)
     geom["lowering"] = lowering     # _resolve_attr keys array names off it
+    geom["vdtype"] = vdtype
     sentry = {"pass": "shard", "layout": layout, "ndev": int(ndev),
               "duration_s": sp.finish().duration_s,
               **{k: v for k, v in sorted(geom.items())

@@ -44,7 +44,24 @@ def device_put(chunked: SPC5Chunked, dtype=None) -> SPC5Device:
     )
 
 
-def _decode(dev: SPC5Device, r: int, c: int, ncols: int):
+def _upcast(vals: jax.Array, scale=None) -> jax.Array:
+    """The f32-accumulation contract shared by every decode.
+
+    Quantised storage (int8, or any sub-4-byte float such as bf16) is
+    upcast to f32 INSIDE the decode, and the optional per-chunk ``scale``
+    (leading chunk dims, broadcast over the trailing (cb, r*c) lane dims)
+    is applied right after -- so HBM reads narrow values but every multiply
+    and accumulate downstream runs in f32. f32 storage passes through
+    untouched (bit-identical to the pre-dtype-axis paths).
+    """
+    if vals.dtype.kind in "iu" or vals.dtype.itemsize < 4:
+        vals = vals.astype(jnp.float32)
+    if scale is not None:
+        vals = vals * scale[..., None, None].astype(vals.dtype)
+    return vals
+
+
+def _decode(dev: SPC5Device, r: int, c: int, ncols: int, scale=None):
     """Shared mask-decode: returns (vals, xcol, yrow) all (nchunks, cb, r*c)."""
     rc = r * c
     k = jnp.arange(rc, dtype=jnp.uint32)
@@ -54,7 +71,8 @@ def _decode(dev: SPC5Device, r: int, c: int, ncols: int):
     vidx = (dev.chunk_vbase[:, None, None].astype(jnp.int32)
             + dev.chunk_voff[..., None] + ranks)
     vidx = jnp.clip(vidx, 0, dev.values.shape[0] - 1)
-    vals = dev.values[vidx] * bits.astype(dev.values.dtype)
+    vals = _upcast(dev.values[vidx], scale)
+    vals = vals * bits.astype(vals.dtype)
     kk = jnp.arange(rc, dtype=jnp.int32)
     xcol = jnp.clip(dev.chunk_col[..., None] + (kk % c)[None, None, :],
                     0, ncols - 1)
@@ -63,22 +81,23 @@ def _decode(dev: SPC5Device, r: int, c: int, ncols: int):
 
 
 @functools.partial(jax.jit, static_argnames=("r", "c", "nrows", "ncols"))
-def spmv(dev: SPC5Device, x: jax.Array, *, r: int, c: int, nrows: int,
-         ncols: int) -> jax.Array:
-    """y = A @ x with A in chunked beta(r, c)."""
-    vals, xcol, yrow = _decode(dev, r, c, ncols)
+def spmv(dev: SPC5Device, x: jax.Array, value_scale=None, *, r: int, c: int,
+         nrows: int, ncols: int) -> jax.Array:
+    """y = A @ x with A in chunked beta(r, c); ``value_scale`` (nchunks,)
+    dequantises int8 values (see :func:`_upcast`)."""
+    vals, xcol, yrow = _decode(dev, r, c, ncols, scale=value_scale)
     contrib = vals * x[xcol]
-    y = jnp.zeros((nrows,), dtype=vals.dtype)
+    y = jnp.zeros((nrows,), dtype=contrib.dtype)
     return y.at[yrow.reshape(-1)].add(contrib.reshape(-1))
 
 
 @functools.partial(jax.jit, static_argnames=("r", "c", "nrows", "ncols"))
-def spmm(dev: SPC5Device, x: jax.Array, *, r: int, c: int, nrows: int,
-         ncols: int) -> jax.Array:
+def spmm(dev: SPC5Device, x: jax.Array, value_scale=None, *, r: int, c: int,
+         nrows: int, ncols: int) -> jax.Array:
     """Y = A @ X, X (ncols, nvec) -- the paper's 'multiple vectors' extension."""
-    vals, xcol, yrow = _decode(dev, r, c, ncols)
+    vals, xcol, yrow = _decode(dev, r, c, ncols, scale=value_scale)
     contrib = vals[..., None] * x[xcol]                  # (nch, cb, rc, nvec)
-    y = jnp.zeros((nrows, x.shape[1]), dtype=vals.dtype)
+    y = jnp.zeros((nrows, x.shape[1]), dtype=contrib.dtype)
     return y.at[yrow.reshape(-1)].add(
         contrib.reshape(-1, x.shape[1]))
 
@@ -114,7 +133,7 @@ def device_put_panels(panels: SPC5Panels, dtype=None) -> SPC5PanelDevice:
 
 
 def _decode_panels(dev: SPC5PanelDevice, r: int, c: int, pr: int,
-                   ncols_pad: int, cmap=None):
+                   ncols_pad: int, cmap=None, scale=None):
     """Panel decode with global index reconstruction.
 
     Returns (vals, xcol, yrow), each (npanels, nchunks, cb, r*c); xcol is a
@@ -134,7 +153,8 @@ def _decode_panels(dev: SPC5PanelDevice, r: int, c: int, pr: int,
     vidx = (dev.chunk_vbase[..., None, None].astype(jnp.int32)
             + dev.chunk_voff[..., None] + ranks)
     vidx = jnp.clip(vidx, 0, dev.values.shape[0] - 1)
-    vals = dev.values[vidx] * bits.astype(dev.values.dtype)
+    vals = _upcast(dev.values[vidx], scale)
+    vals = vals * bits.astype(vals.dtype)
     kk = jnp.arange(rc, dtype=jnp.int32)
     xcol = (dev.chunk_xbase[..., None, None] + dev.chunk_col[..., None]
             + (kk % c)[None, None, None, :])
@@ -156,34 +176,39 @@ def pad_cmap(cmap: jax.Array, ncols_pad: int) -> jax.Array:
 
 @functools.partial(jax.jit,
                    static_argnames=("r", "c", "pr", "nrows", "ncols_pad"))
-def spmv_panels(dev: SPC5PanelDevice, x: jax.Array, cmap=None, *, r: int,
-                c: int, pr: int, nrows: int, ncols_pad: int) -> jax.Array:
+def spmv_panels(dev: SPC5PanelDevice, x: jax.Array, cmap=None,
+                value_scale=None, *, r: int, c: int, pr: int, nrows: int,
+                ncols_pad: int) -> jax.Array:
     """y = A @ x with A in the row-panel-tiled layout; x (ncols,).
 
     ``cmap`` (optional, (ncols,) int32) fuses a column permutation into the
-    decode -- x stays in original order (see :func:`_decode_panels`)."""
+    decode -- x stays in original order (see :func:`_decode_panels`);
+    ``value_scale`` (npanels, nchunks) dequantises int8 values."""
     npanels = dev.chunk_mask.shape[0]
     xp = jnp.pad(x, (0, max(0, ncols_pad - x.shape[0])))
     cm = None if cmap is None else pad_cmap(cmap, ncols_pad)
-    vals, xcol, yrow = _decode_panels(dev, r, c, pr, ncols_pad, cmap=cm)
+    vals, xcol, yrow = _decode_panels(dev, r, c, pr, ncols_pad, cmap=cm,
+                                      scale=value_scale)
     contrib = vals * xp[xcol]
-    y = jnp.zeros((npanels * pr,), dtype=vals.dtype)
+    y = jnp.zeros((npanels * pr,), dtype=contrib.dtype)
     y = y.at[yrow.reshape(-1)].add(contrib.reshape(-1))
     return y[:nrows]
 
 
 @functools.partial(jax.jit,
                    static_argnames=("r", "c", "pr", "nrows", "ncols_pad"))
-def spmm_panels(dev: SPC5PanelDevice, x: jax.Array, cmap=None, *, r: int,
-                c: int, pr: int, nrows: int, ncols_pad: int) -> jax.Array:
-    """Y = A @ X with A panel-tiled; X (ncols, nvec). ``cmap`` as in
-    :func:`spmv_panels`."""
+def spmm_panels(dev: SPC5PanelDevice, x: jax.Array, cmap=None,
+                value_scale=None, *, r: int, c: int, pr: int, nrows: int,
+                ncols_pad: int) -> jax.Array:
+    """Y = A @ X with A panel-tiled; X (ncols, nvec). ``cmap`` and
+    ``value_scale`` as in :func:`spmv_panels`."""
     npanels = dev.chunk_mask.shape[0]
     xp = jnp.pad(x, ((0, max(0, ncols_pad - x.shape[0])), (0, 0)))
     cm = None if cmap is None else pad_cmap(cmap, ncols_pad)
-    vals, xcol, yrow = _decode_panels(dev, r, c, pr, ncols_pad, cmap=cm)
+    vals, xcol, yrow = _decode_panels(dev, r, c, pr, ncols_pad, cmap=cm,
+                                      scale=value_scale)
     contrib = vals[..., None] * xp[xcol]
-    y = jnp.zeros((npanels * pr, x.shape[1]), dtype=vals.dtype)
+    y = jnp.zeros((npanels * pr, x.shape[1]), dtype=contrib.dtype)
     y = y.at[yrow.reshape(-1)].add(contrib.reshape(-1, x.shape[1]))
     return y[:nrows]
 
@@ -221,76 +246,86 @@ class SPC5PanelDescDevice(NamedTuple):
 
 
 def _desc_vals(values: jax.Array, valid: jax.Array, vidx: jax.Array,
-               vbase: jax.Array) -> jax.Array:
-    """The descriptor expand: one gather + mask multiply."""
-    gidx = vbase[..., None, None].astype(jnp.int32) + vidx
+               vbase: jax.Array, scale=None) -> jax.Array:
+    """The descriptor expand: one gather + mask multiply (narrow ``vidx``
+    tables promote to int32 in the add; quantised values upcast to f32 and
+    apply the per-chunk ``scale`` before masking)."""
+    gidx = vbase[..., None, None].astype(jnp.int32) + vidx.astype(jnp.int32)
     gidx = jnp.clip(gidx, 0, values.shape[0] - 1)
-    return values[gidx] * valid.astype(values.dtype)
+    vals = _upcast(values[gidx], scale)
+    return vals * valid.astype(vals.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("nrows",))
-def spmv_desc(dev: SPC5DescDevice, x: jax.Array, *, nrows: int) -> jax.Array:
+def spmv_desc(dev: SPC5DescDevice, x: jax.Array, value_scale=None, *,
+              nrows: int) -> jax.Array:
     """y = A @ x through the precomputed descriptors (whole-vector)."""
     vals = _desc_vals(dev.values, dev.desc_valid, dev.desc_vidx,
-                      dev.chunk_vbase)
-    contrib = vals * x[dev.desc_xcol]
-    y = jnp.zeros((nrows,), dtype=vals.dtype)
-    return y.at[dev.desc_yrow.reshape(-1)].add(contrib.reshape(-1))
+                      dev.chunk_vbase, scale=value_scale)
+    contrib = vals * x[dev.desc_xcol.astype(jnp.int32)]
+    y = jnp.zeros((nrows,), dtype=contrib.dtype)
+    return y.at[dev.desc_yrow.astype(jnp.int32).reshape(-1)].add(
+        contrib.reshape(-1))
 
 
 @functools.partial(jax.jit, static_argnames=("nrows",))
-def spmm_desc(dev: SPC5DescDevice, x: jax.Array, *, nrows: int) -> jax.Array:
+def spmm_desc(dev: SPC5DescDevice, x: jax.Array, value_scale=None, *,
+              nrows: int) -> jax.Array:
     """Y = A @ X through the precomputed descriptors; X (ncols, nvec)."""
     vals = _desc_vals(dev.values, dev.desc_valid, dev.desc_vidx,
-                      dev.chunk_vbase)
-    contrib = vals[..., None] * x[dev.desc_xcol]
-    y = jnp.zeros((nrows, x.shape[1]), dtype=vals.dtype)
-    return y.at[dev.desc_yrow.reshape(-1)].add(
+                      dev.chunk_vbase, scale=value_scale)
+    contrib = vals[..., None] * x[dev.desc_xcol.astype(jnp.int32)]
+    y = jnp.zeros((nrows, x.shape[1]), dtype=contrib.dtype)
+    return y.at[dev.desc_yrow.astype(jnp.int32).reshape(-1)].add(
         contrib.reshape(-1, x.shape[1]))
 
 
 def _decode_panels_desc(dev: SPC5PanelDescDevice, pr: int, ncols_pad: int,
-                        cmap=None):
+                        cmap=None, scale=None):
     """Descriptor panel decode: globalise the window/panel-relative indices
     (a broadcast add -- the cumsum/bit work is gone)."""
     npanels = dev.desc_valid.shape[0]
     vals = _desc_vals(dev.values, dev.desc_valid, dev.desc_vidx,
-                      dev.chunk_vbase)
-    xcol = jnp.clip(dev.chunk_xbase[..., None, None] + dev.desc_xcol,
-                    0, ncols_pad - 1)
+                      dev.chunk_vbase, scale=scale)
+    xcol = jnp.clip(dev.chunk_xbase[..., None, None]
+                    + dev.desc_xcol.astype(jnp.int32), 0, ncols_pad - 1)
     if cmap is not None:
         xcol = jnp.take(cmap, xcol, axis=0)
     panel_row0 = (jnp.arange(npanels, dtype=jnp.int32)
                   * pr)[:, None, None, None]
-    yrow = panel_row0 + dev.desc_yrow
+    yrow = panel_row0 + dev.desc_yrow.astype(jnp.int32)
     return vals, xcol, yrow
 
 
 @functools.partial(jax.jit, static_argnames=("pr", "nrows", "ncols_pad"))
-def spmv_panels_desc(dev: SPC5PanelDescDevice, x: jax.Array, cmap=None, *,
-                     pr: int, nrows: int, ncols_pad: int) -> jax.Array:
+def spmv_panels_desc(dev: SPC5PanelDescDevice, x: jax.Array, cmap=None,
+                     value_scale=None, *, pr: int, nrows: int,
+                     ncols_pad: int) -> jax.Array:
     """y = A @ x through panel descriptors; ``cmap`` fuses a column
     permutation exactly as in :func:`spmv_panels`."""
     npanels = dev.desc_valid.shape[0]
     xp = jnp.pad(x, (0, max(0, ncols_pad - x.shape[0])))
     cm = None if cmap is None else pad_cmap(cmap, ncols_pad)
-    vals, xcol, yrow = _decode_panels_desc(dev, pr, ncols_pad, cmap=cm)
+    vals, xcol, yrow = _decode_panels_desc(dev, pr, ncols_pad, cmap=cm,
+                                           scale=value_scale)
     contrib = vals * xp[xcol]
-    y = jnp.zeros((npanels * pr,), dtype=vals.dtype)
+    y = jnp.zeros((npanels * pr,), dtype=contrib.dtype)
     y = y.at[yrow.reshape(-1)].add(contrib.reshape(-1))
     return y[:nrows]
 
 
 @functools.partial(jax.jit, static_argnames=("pr", "nrows", "ncols_pad"))
-def spmm_panels_desc(dev: SPC5PanelDescDevice, x: jax.Array, cmap=None, *,
-                     pr: int, nrows: int, ncols_pad: int) -> jax.Array:
+def spmm_panels_desc(dev: SPC5PanelDescDevice, x: jax.Array, cmap=None,
+                     value_scale=None, *, pr: int, nrows: int,
+                     ncols_pad: int) -> jax.Array:
     """Y = A @ X through panel descriptors; X (ncols, nvec)."""
     npanels = dev.desc_valid.shape[0]
     xp = jnp.pad(x, ((0, max(0, ncols_pad - x.shape[0])), (0, 0)))
     cm = None if cmap is None else pad_cmap(cmap, ncols_pad)
-    vals, xcol, yrow = _decode_panels_desc(dev, pr, ncols_pad, cmap=cm)
+    vals, xcol, yrow = _decode_panels_desc(dev, pr, ncols_pad, cmap=cm,
+                                           scale=value_scale)
     contrib = vals[..., None] * xp[xcol]
-    y = jnp.zeros((npanels * pr, x.shape[1]), dtype=vals.dtype)
+    y = jnp.zeros((npanels * pr, x.shape[1]), dtype=contrib.dtype)
     y = y.at[yrow.reshape(-1)].add(contrib.reshape(-1, x.shape[1]))
     return y[:nrows]
 
@@ -309,7 +344,7 @@ def spmv_coo(rows: jax.Array, cols: jax.Array, vals: jax.Array,
     touches exactly one x element per nonzero, none of the c-wide vector
     loads the block kernel would waste on 1-nnz blocks.
     """
-    prod = vals * x[cols]
+    prod = _upcast(vals) * x[cols]
     return jax.ops.segment_sum(prod, rows, num_segments=nrows)
 
 
@@ -317,7 +352,7 @@ def spmv_coo(rows: jax.Array, cols: jax.Array, vals: jax.Array,
 def spmm_coo(rows: jax.Array, cols: jax.Array, vals: jax.Array,
              x: jax.Array, *, nrows: int) -> jax.Array:
     """Multi-vector COO tail: Y contribution for X of shape (ncols, nvec)."""
-    prod = vals[:, None] * x[cols]
+    prod = _upcast(vals)[:, None] * x[cols]
     return jax.ops.segment_sum(prod, rows, num_segments=nrows)
 
 
@@ -335,7 +370,7 @@ def spmv_coo_panels(rows: jax.Array, cols: jax.Array, vals: jax.Array,
     (vals == 0) land on local row 0 of their panel and add nothing.
     """
     npanels = rows.shape[0]
-    prod = vals * x[cols]                                   # (npanels, smax)
+    prod = _upcast(vals) * x[cols]                          # (npanels, smax)
     seg = jax.vmap(
         lambda r_, p_: jax.ops.segment_sum(p_, r_, num_segments=pr))(rows,
                                                                      prod)

@@ -32,7 +32,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .formats import SUPPORTED_BLOCKS, CSRMatrix, SPC5Matrix, block_stats
+from .formats import (SUPPORTED_BLOCKS, CSRMatrix, SPC5Matrix, block_stats,
+                      canonical_vdtype)
 
 DEFAULT_KERNELS: Tuple[str, ...] = tuple(
     f"{r}x{c}" for (r, c) in SUPPORTED_BLOCKS if (r, c) != (1, 4)
@@ -41,9 +42,11 @@ DEFAULT_KERNELS: Tuple[str, ...] = tuple(
 #: JSONL record-store schema version (bumped on incompatible field changes).
 #: v2 adds the reorder fields (``reorder``/``bandwidth_post``/``nchunks``);
 #: v3 adds the kernel-lowering field (``lowering``: "mask" | "descriptor");
-#: v1/v2 stores load with the missing fields defaulted ("" == legacy record,
-#: treated as the mask lowering -- the only variant that existed).
-RECORDS_VERSION = 3
+#: v4 adds the value-dtype field (``vdtype``: "f32" | "bf16" | "int8");
+#: v1-v3 stores load with the missing fields defaulted ("" == legacy record,
+#: treated as the mask lowering / f32 values -- the only variants that
+#: existed).
+RECORDS_VERSION = 4
 
 #: Env var naming a record store (JSON/JSONL file or a directory of stores)
 #: that ``ops.prepare`` consults for auto-tuning when the caller passes none.
@@ -101,6 +104,10 @@ class PanelConfig:
     tables); it completes the configuration identity so the tuner learns
     per-matrix which side of the bytes-vs-decode trade wins (legacy ""
     normalises to "mask", the only variant that existed pre-v3).
+    ``vdtype`` names the value store the measurement ran at ("f32" |
+    "bf16" | "int8", schema v4); legacy "" normalises to "f32" -- the only
+    store that existed pre-v4 -- so old records pool with v4 f32 records
+    and the tuner learns per-matrix when quantisation pays.
     """
 
     layout: str = "auto"
@@ -109,11 +116,14 @@ class PanelConfig:
     cb: Optional[int] = None
     reorder: str = ""
     lowering: str = "mask"
+    vdtype: str = "f32"
 
     def __post_init__(self):
         object.__setattr__(self, "layout", _canon_layout(self.layout))
         object.__setattr__(self, "lowering",
                            _canon_lowering(self.lowering, legacy_as_mask=True))
+        object.__setattr__(self, "vdtype",
+                           canonical_vdtype(self.vdtype) or "f32")
 
 
 #: What ``tune`` returns when no record is usable -- matches the fixed
@@ -206,19 +216,26 @@ class Record:
     # only variant that existed -- config() normalises it so legacy records
     # pool with v3 mask measurements).
     lowering: str = ""
+    # Value dtype the measurement ran at (schema v4): "f32" | "bf16" |
+    # "int8"; "" == legacy v1-v3 record (ran f32 values, the only store
+    # that existed -- config() normalises it so legacy records pool with
+    # v4 f32 measurements).
+    vdtype: str = ""
 
     def __post_init__(self):
         # loader shim: legacy layout spellings in old stores normalise to
         # the plan registry's key set ("" stays "", inferred in config())
         self.layout = _canon_layout(self.layout)
         self.lowering = _canon_lowering(self.lowering)
+        self.vdtype = canonical_vdtype(self.vdtype)
 
     def config(self) -> PanelConfig:
         """Normalised layout configuration this record measured."""
         layout = self.layout or ("panels" if self.pr else "whole_vector")
         return PanelConfig(layout=layout, pr=int(self.pr), xw=int(self.xw),
                            cb=int(self.cb) if self.cb else None,
-                           reorder=self.reorder, lowering=self.lowering)
+                           reorder=self.reorder, lowering=self.lowering,
+                           vdtype=self.vdtype)
 
     def features(self) -> MatrixFeatures:
         rc = kernel_block(self.kernel)
@@ -257,13 +274,13 @@ class RecordStore:
             layout: str = "", nnz_row: float = 0.0, bandwidth: float = 0.0,
             fill: float = 0.0, reorder: str = "",
             bandwidth_post: float = 0.0, nchunks: int = 0,
-            lowering: str = "") -> None:
+            lowering: str = "", vdtype: str = "") -> None:
         self.records.append(Record(kernel, float(avg), int(workers),
                                    float(gflops), matrix, int(pr), int(xw),
                                    int(cb), layout, float(nnz_row),
                                    float(bandwidth), float(fill), reorder,
                                    float(bandwidth_post), int(nchunks),
-                                   lowering))
+                                   lowering, vdtype))
 
     def add_measurement(self, kernel: str, feats: MatrixFeatures,
                         config: PanelConfig, workers: int, gflops: float,
@@ -284,7 +301,7 @@ class RecordStore:
                  nnz_row=feats.nnz_row, bandwidth=feats.bandwidth,
                  fill=feats.fill, reorder=config.reorder,
                  bandwidth_post=bandwidth_post, nchunks=nchunks,
-                 lowering=config.lowering)
+                 lowering=config.lowering, vdtype=config.vdtype)
 
     def extend(self, other: "RecordStore") -> "RecordStore":
         self.records.extend(other.records)
@@ -736,4 +753,5 @@ def clamp_config(cfg: PanelConfig, *, nrows: int, ncols: int, r: int, c: int,
         if spec is not None and lowering not in spec.lowerings:
             lowering = "mask"
     return PanelConfig(layout=cfg.layout, pr=pr, xw=xw, cb=cb,
-                       reorder=cfg.reorder, lowering=lowering)
+                       reorder=cfg.reorder, lowering=lowering,
+                       vdtype=cfg.vdtype)

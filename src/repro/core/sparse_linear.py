@@ -72,7 +72,8 @@ class SparseLinear:
                    block: Optional[Tuple[int, int]] = None,
                    store: Optional[S.RecordStore] = None,
                    bias: Optional[np.ndarray] = None,
-                   cb: Optional[int] = None, dtype=None, layout: str = "auto",
+                   cb: Optional[int] = None, dtype=None,
+                   vdtype: str = "auto", layout: str = "auto",
                    pr: Optional[int] = None, xw: Optional[int] = None,
                    nvec: int = 128, tune: bool = True,
                    reorder=None, lowering: str = "auto",
@@ -93,15 +94,18 @@ class SparseLinear:
         original feature order (the handle gathers/scatters internally).
 
         ``lowering`` ("mask" | "descriptor" | "auto") selects the kernel
-        variant, exactly as on ``ops.prepare``; ``verify`` is the static
-        plan checker hook (``repro.analysis.verify``), also as on
-        ``ops.prepare``."""
+        variant, exactly as on ``ops.prepare``; ``vdtype`` ("f32" | "bf16" |
+        "int8" | "auto") the stored value dtype (quantised stores accumulate
+        in f32 -- useful for pruned-weight layers where activations stay
+        full precision); ``verify`` is the static plan checker hook
+        (``repro.analysis.verify``), also as on ``ops.prepare``."""
         w = prune_by_magnitude(np.asarray(w), density)
         csr = F.csr_from_dense(w)
         if block is None:
             block = choose_block(csr, store)
         mat = F.csr_to_spc5(csr, *block)
-        h = ops.prepare(mat, cb=cb, dtype=dtype, layout=layout, pr=pr, xw=xw,
+        h = ops.prepare(mat, cb=cb, dtype=dtype, vdtype=vdtype,
+                        layout=layout, pr=pr, xw=xw,
                         nvec=nvec, store=store, tune=tune, reorder=reorder,
                         lowering=lowering, verify=verify)
         b = None if bias is None else jnp.asarray(bias)

@@ -60,7 +60,8 @@ def prepare(mat: F.SPC5Matrix, *, layout: str = "auto",
             config: Optional[S.PanelConfig] = None, verify=False,
             pr: Optional[int] = None, xw: Optional[int] = None,
             cb: Optional[int] = None, nvec: int = 1, align: int = 8,
-            dtype=None, store: Optional[S.RecordStore] = None,
+            dtype=None, vdtype: str = "auto",
+            store: Optional[S.RecordStore] = None,
             tune: bool = True, multi_layout: str = "auto") -> P.SPC5Plan:
     """Build an execution plan for ``mat`` -- the one prepare entry point.
 
@@ -97,6 +98,14 @@ def prepare(mat: F.SPC5Matrix, *, layout: str = "auto",
     ``pr``/``xw`` default to 512; ``cb=None`` uses the layout's default
     chunk size (256 whole-vector, 64 panels).
 
+    **Value dtype**: ``vdtype`` selects the stored value dtype -- "f32"
+    (explicit float32 store), "bf16" (half-width store, f32 accumulate),
+    "int8" (per-chunk symmetric quantisation with f32 scales, f32
+    accumulate), or "auto" (default: the tuner's pick when a store carries
+    quantised measurements, else the legacy ``dtype=`` passthrough).
+    Quantised plans upcast inside the kernel decode; the output dtype never
+    narrows. ``vdtype`` and a non-default ``dtype=`` are mutually exclusive.
+
     **Lowering**: ``lowering`` selects the kernel variant -- "mask" (the
     paper's bit-mask decode, recomputed per execution) or "descriptor"
     (build-time gather tables; bytes-per-nnz traded for the decode FLOPs).
@@ -117,18 +126,22 @@ def prepare(mat: F.SPC5Matrix, *, layout: str = "auto",
             lowering = config.lowering
         if reorder is None and config.reorder:
             reorder = config.reorder
+        if vdtype == "auto" and config.vdtype and config.vdtype != "f32":
+            vdtype = config.vdtype
         # no tune=False needed: the config's layout is explicit, which
         # already bypasses the store in the tune pass (trace: "explicit")
     layout = P.canonical_layout(layout)
     if layout == P.LAYOUT_TEST:
         return P.make_plan(mat, layout=P.LAYOUT_TEST,
                            multi_layout=multi_layout, pr=pr, xw=xw, cb=cb,
-                           nvec=nvec, align=align, dtype=dtype, store=store,
+                           nvec=nvec, align=align, dtype=dtype,
+                           vdtype=vdtype, store=store,
                            tune=tune, reorder=reorder, lowering=lowering,
                            verify=verify)
     return P.make_plan(mat, layout=layout, pr=pr, xw=xw, cb=cb, nvec=nvec,
-                       align=align, dtype=dtype, store=store, tune=tune,
-                       reorder=reorder, lowering=lowering, verify=verify)
+                       align=align, dtype=dtype, vdtype=vdtype, store=store,
+                       tune=tune, reorder=reorder, lowering=lowering,
+                       verify=verify)
 
 
 def prepare_panels(mat: F.SPC5Matrix, pr: int = 512, cb: int = 64,

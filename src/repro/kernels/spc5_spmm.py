@@ -30,7 +30,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro._compat.pallas import CompilerParams as _CompilerParams
-from repro.kernels.spc5_spmv import _panel_scratch
+from repro.kernels.spc5_spmv import (_acc_itemsize, _desc_rest,
+                                     _desc_tile_bytes, _expand_vals,
+                                     _mask_rest, _out_dtype, _panel_scratch)
 
 # ----------------------------------------------------------------------------
 # VMEM contracts (read by repro.analysis.verify's "vmem-budget" rule)
@@ -42,29 +44,37 @@ def _nvt(nvec: int) -> int:
 
 
 def _vmem_whole_mask(geom, itemsize, nvec=1):
-    # (ncols, nvt) x tile + (nrows, nvt) y tile + double-buffered value
-    # window + chunk metadata + a potential fused col_map
-    return ((geom["nrows"] + geom["ncols"]) * itemsize * _nvt(nvec)
+    # (ncols, nvt) x tile + (nrows, nvt) y tile (both at the f32 accumulation
+    # width) + double-buffered value window at the storage ``itemsize`` +
+    # chunk metadata + a potential fused col_map
+    return ((geom["nrows"] + geom["ncols"])
+            * _acc_itemsize(itemsize) * _nvt(nvec)
             + 2 * geom["vmax"] * itemsize + 4 * 4 * geom["cb"]
             + 4 * geom["ncols"])
 
 
 def _vmem_whole_desc(geom, itemsize, nvec=1):
     rc = geom["r"] * geom["c"]
-    return ((geom["nrows"] + geom["ncols"]) * itemsize * _nvt(nvec)
-            + 2 * geom["vmax"] * itemsize + 4 * 4 * geom["cb"] * rc)
+    return ((geom["nrows"] + geom["ncols"])
+            * _acc_itemsize(itemsize) * _nvt(nvec)
+            + 2 * geom["vmax"] * itemsize
+            + _desc_tile_bytes(geom) * geom["cb"] * rc)
 
 
 def _vmem_panels_mask(geom, itemsize, nvec=1):
-    # (pr, nvt) y tile + double-buffered (xw, nvt) x slab + value window
-    return ((geom["pr"] + 2 * geom["xw"]) * itemsize * _nvt(nvec)
+    # (pr, nvt) y tile + double-buffered (xw, nvt) x slab (accumulation
+    # width) + value window at the storage ``itemsize``
+    return ((geom["pr"] + 2 * geom["xw"])
+            * _acc_itemsize(itemsize) * _nvt(nvec)
             + 2 * geom["vmax"] * itemsize + 4 * 4 * geom["cb"])
 
 
 def _vmem_panels_desc(geom, itemsize, nvec=1):
     rc = geom["r"] * geom["c"]
-    return ((geom["pr"] + 2 * geom["xw"]) * itemsize * _nvt(nvec)
-            + 2 * geom["vmax"] * itemsize + 4 * 4 * geom["cb"] * rc)
+    return ((geom["pr"] + 2 * geom["xw"])
+            * _acc_itemsize(itemsize) * _nvt(nvec)
+            + 2 * geom["vmax"] * itemsize
+            + _desc_tile_bytes(geom) * geom["cb"] * rc)
 
 
 #: (layout, lowering) -> fn(geom_dict, itemsize, nvec=1) -> resident bytes
@@ -81,11 +91,10 @@ SPMM_VMEM_CONTRACTS = {
 
 def _spmm_kernel(vbase_ref, col_ref, mask_ref, voff_ref, row_ref, values_hbm,
                  x_ref, *rest, r: int, c: int, cb: int,
-                 vmax: int, nrows: int, ncols: int, fused_cols: bool = False):
-    if fused_cols:      # extra input ref: the reorder subsystem's column map
-        cmap_ref, y_ref, vwin, sem = rest
-    else:
-        (y_ref, vwin, sem), cmap_ref = rest, None
+                 vmax: int, nrows: int, ncols: int, fused_cols: bool = False,
+                 has_scale: bool = False):
+    cmap_ref, scale_ref, (y_ref, vwin, sem) = _mask_rest(rest, fused_cols,
+                                                         has_scale)
     i = pl.program_id(1)  # chunk index (inner, sequential)
 
     @pl.when(i == 0)
@@ -106,7 +115,9 @@ def _spmm_kernel(vbase_ref, col_ref, mask_ref, voff_ref, row_ref, values_hbm,
     bits = ((mask[:, None] >> k[None, :]) & 1).astype(jnp.int32)    # (cb, rc)
     ranks = jnp.cumsum(bits, axis=1) - bits
     vidx = jnp.clip(voff[:, None] + ranks, 0, vmax - 1)
-    vals = jnp.take(vwin[...], vidx, axis=0) * bits.astype(vwin.dtype)
+    vals = _expand_vals(jnp.take(vwin[...], vidx, axis=0),
+                        None if scale_ref is None else scale_ref[0])
+    vals = vals * bits.astype(vals.dtype)
 
     # Gather the c columns of x once: (cb, c, nvt). Block columns are
     # contiguous in permuted space, so a fused column permutation routes the
@@ -127,14 +138,15 @@ def _spmm_kernel(vbase_ref, col_ref, mask_ref, voff_ref, row_ref, values_hbm,
     static_argnames=("r", "c", "cb", "vmax", "nrows", "ncols", "nvt",
                      "interpret"))
 def spmm_pallas(chunk_vbase, chunk_col, chunk_mask, chunk_voff, chunk_row,
-                values, x, col_map=None, *, r: int, c: int, cb: int,
-                vmax: int, nrows: int, ncols: int, nvt: int = 128,
+                values, x, col_map=None, value_scale=None, *, r: int, c: int,
+                cb: int, vmax: int, nrows: int, ncols: int, nvt: int = 128,
                 interpret: bool = False):
     """Y = A @ X with A chunked beta(r,c) and X of shape (ncols, nvec).
 
     ``col_map`` (optional, (ncols,) int32) fuses a column permutation into
     the decode -- X stays in original row order and the kernel gathers
     ``x[col_map[col]]`` (the reordering subsystem's zero-copy path).
+    ``value_scale`` (optional, (nchunks,) f32) dequantises int8 storage.
     """
     nchunks = chunk_col.shape[0]
     nvec = x.shape[1]
@@ -144,7 +156,8 @@ def spmm_pallas(chunk_vbase, chunk_col, chunk_mask, chunk_voff, chunk_row,
     fused_cols = col_map is not None
     kernel = functools.partial(_spmm_kernel, r=r, c=c, cb=cb, vmax=vmax,
                                nrows=nrows, ncols=ncols,
-                               fused_cols=fused_cols)
+                               fused_cols=fused_cols,
+                               has_scale=value_scale is not None)
     in_specs = [
         pl.BlockSpec((1, cb), lambda j, i, vb: (i, 0)),
         pl.BlockSpec((1, cb), lambda j, i, vb: (i, 0)),
@@ -158,6 +171,9 @@ def spmm_pallas(chunk_vbase, chunk_col, chunk_mask, chunk_voff, chunk_row,
     if fused_cols:
         in_specs.append(pl.BlockSpec((ncols,), lambda j, i, vb: (0,)))
         operands.append(col_map.astype(jnp.int32))
+    if value_scale is not None:
+        in_specs.append(pl.BlockSpec((1,), lambda j, i, vb: (i,)))
+        operands.append(value_scale)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(nvec // nvt, nchunks),
@@ -171,7 +187,7 @@ def spmm_pallas(chunk_vbase, chunk_col, chunk_mask, chunk_voff, chunk_row,
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((nrows, nvec), values.dtype),
+        out_shape=jax.ShapeDtypeStruct((nrows, nvec), _out_dtype(values, x)),
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary")),
@@ -208,10 +224,22 @@ def _panel_fused_operands_mm(x, col_map, ncols_pad, nvt):
     return [pl.BlockSpec(memory_space=pl.ANY)], [x], fused
 
 
+def _append_panel_scale_mm(xspecs, xops, value_scale):
+    """SpMM analogue of ``spc5_spmv._append_panel_scale``: one (1, 1) tile of
+    the (npanels, nchunks) scales per grid step, appended after the optional
+    fused column map (the ``_mask_rest`` unpack order)."""
+    if value_scale is None:
+        return xspecs, xops
+    return (xspecs
+            + [pl.BlockSpec((1, 1), lambda j, p, i, vb, xb: (p, i))],
+            xops + [value_scale])
+
+
 def _spmm_panel_kernel(vbase_ref, xbase_ref, col_ref, mask_ref, voff_ref,
                        row_ref, values_hbm, x_ref, *rest, r: int, c: int,
                        cb: int, vmax: int, xw: int, pr: int, nvt: int,
-                       ncols_pad: int, fused_cols: bool = False):
+                       ncols_pad: int, fused_cols: bool = False,
+                       has_scale: bool = False):
     """One (vec-tile, panel, chunk) grid step of the row-panel-tiled SpMM.
 
     The value window DMA is identical to the SpMV panel kernel; the x window
@@ -221,8 +249,9 @@ def _spmm_panel_kernel(vbase_ref, xbase_ref, col_ref, mask_ref, voff_ref,
     (pr, nvt) slab, revisited across the inner chunk dimension and written
     back once per (panel, vec-tile).
     """
-    if fused_cols:              # extra input ref: the column map (VMEM)
-        cmap_ref, y_ref, vwin, vsem = rest
+    cmap_ref, scale_ref, rest = _mask_rest(rest, fused_cols, has_scale)
+    if fused_cols:
+        y_ref, vwin, vsem = rest
     else:
         y_ref, vwin, xwin, vsem, xsem = rest
     j = pl.program_id(0)
@@ -251,7 +280,9 @@ def _spmm_panel_kernel(vbase_ref, xbase_ref, col_ref, mask_ref, voff_ref,
     bits = ((mask[:, None] >> k[None, :]) & 1).astype(jnp.int32)    # (cb, rc)
     ranks = jnp.cumsum(bits, axis=1) - bits
     vidx = jnp.clip(voff_ref[0, 0][:, None] + ranks, 0, vmax - 1)
-    vals = jnp.take(vwin[...], vidx, axis=0) * bits.astype(vwin.dtype)
+    vals = _expand_vals(jnp.take(vwin[...], vidx, axis=0),
+                        None if scale_ref is None else scale_ref[0, 0])
+    vals = vals * bits.astype(vals.dtype)
 
     # gather the c columns of the x slab: (cb, c, nvt)
     if fused_cols:
@@ -276,7 +307,8 @@ def _spmm_panel_kernel(vbase_ref, xbase_ref, col_ref, mask_ref, voff_ref,
     static_argnames=("r", "c", "cb", "vmax", "xw", "pr", "nrows", "ncols_pad",
                      "nvt", "interpret"))
 def spmm_pallas_panels(chunk_vbase, chunk_xbase, chunk_col, chunk_mask,
-                       chunk_voff, chunk_row, values, x, col_map=None, *,
+                       chunk_voff, chunk_row, values, x, col_map=None,
+                       value_scale=None, *,
                        r: int, c: int, cb: int, vmax: int, xw: int, pr: int,
                        nrows: int, ncols_pad: int, nvt: int = 128,
                        interpret: bool = False):
@@ -292,9 +324,11 @@ def spmm_pallas_panels(chunk_vbase, chunk_xbase, chunk_col, chunk_mask,
     xp = jnp.pad(x, ((0, max(0, ncols_pad - x.shape[0])), (0, 0)))
     xspecs, xops, fused = _panel_fused_operands_mm(xp, col_map, ncols_pad,
                                                    nvt)
+    xspecs, xops = _append_panel_scale_mm(xspecs, xops, value_scale)
     kernel = functools.partial(_spmm_panel_kernel, r=r, c=c, cb=cb, vmax=vmax,
                                xw=xw, pr=pr, nvt=nvt, ncols_pad=ncols_pad,
-                               fused_cols=fused)
+                               fused_cols=fused,
+                               has_scale=value_scale is not None)
     scratch = _panel_scratch(fused, 1, vmax, values.dtype, (xw, nvt),
                              x.dtype)
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -313,7 +347,8 @@ def spmm_pallas_panels(chunk_vbase, chunk_xbase, chunk_col, chunk_mask,
     y = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((npanels * pr, nvec), values.dtype),
+        out_shape=jax.ShapeDtypeStruct((npanels * pr, nvec),
+                                       _out_dtype(values, x)),
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
@@ -326,7 +361,8 @@ def _spmm_panel_db_kernel(vbase_ref, xbase_ref, col_ref, mask_ref, voff_ref,
                           row_ref, values_hbm, x_ref, *rest, r: int, c: int,
                           cb: int, vmax: int, xw: int, pr: int, nvt: int,
                           ncols_pad: int, npanels: int, nchunks: int,
-                          nsteps: int, fused_cols: bool = False):
+                          nsteps: int, fused_cols: bool = False,
+                          has_scale: bool = False):
     """Double-buffered panel SpMM: overlap the NEXT (vec-tile, panel, chunk)
     step's value/x-slab DMAs with this step's decode (the SpMM analogue of
     ``_spmv_panel_db_kernel``). Buffers are indexed by the linearised step
@@ -334,8 +370,9 @@ def _spmm_panel_db_kernel(vbase_ref, xbase_ref, col_ref, mask_ref, voff_ref,
     order, so the prefetch target is always the step that runs next. With
     the fused column map the x tile is VMEM-resident and only the value
     window double-buffers."""
-    if fused_cols:              # extra input ref: the column map (VMEM)
-        cmap_ref, y_ref, vwin, vsem = rest
+    cmap_ref, scale_ref, rest = _mask_rest(rest, fused_cols, has_scale)
+    if fused_cols:
+        y_ref, vwin, vsem = rest
     else:
         y_ref, vwin, xwin, vsem, xsem = rest
     j = pl.program_id(0)
@@ -384,7 +421,9 @@ def _spmm_panel_db_kernel(vbase_ref, xbase_ref, col_ref, mask_ref, voff_ref,
     bits = ((mask[:, None] >> k[None, :]) & 1).astype(jnp.int32)    # (cb, rc)
     ranks = jnp.cumsum(bits, axis=1) - bits
     vidx = jnp.clip(voff_ref[0, 0][:, None] + ranks, 0, vmax - 1)
-    vals = jnp.take(vwin[slot], vidx, axis=0) * bits.astype(vwin.dtype)
+    vals = _expand_vals(jnp.take(vwin[slot], vidx, axis=0),
+                        None if scale_ref is None else scale_ref[0, 0])
+    vals = vals * bits.astype(vals.dtype)
 
     if fused_cols:
         xcol = jnp.clip(col_ref[0, 0][:, None] + xbase_ref[p, i]
@@ -408,7 +447,8 @@ def _spmm_panel_db_kernel(vbase_ref, xbase_ref, col_ref, mask_ref, voff_ref,
     static_argnames=("r", "c", "cb", "vmax", "xw", "pr", "nrows", "ncols_pad",
                      "nvt", "interpret"))
 def spmm_pallas_panels_db(chunk_vbase, chunk_xbase, chunk_col, chunk_mask,
-                          chunk_voff, chunk_row, values, x, col_map=None, *,
+                          chunk_voff, chunk_row, values, x, col_map=None,
+                          value_scale=None, *,
                           r: int, c: int, cb: int, vmax: int, xw: int,
                           pr: int, nrows: int, ncols_pad: int, nvt: int = 128,
                           interpret: bool = False):
@@ -424,10 +464,12 @@ def spmm_pallas_panels_db(chunk_vbase, chunk_xbase, chunk_col, chunk_mask,
     xp = jnp.pad(x, ((0, max(0, ncols_pad - x.shape[0])), (0, 0)))
     xspecs, xops, fused = _panel_fused_operands_mm(xp, col_map, ncols_pad,
                                                    nvt)
+    xspecs, xops = _append_panel_scale_mm(xspecs, xops, value_scale)
     kernel = functools.partial(
         _spmm_panel_db_kernel, r=r, c=c, cb=cb, vmax=vmax, xw=xw, pr=pr,
         nvt=nvt, ncols_pad=ncols_pad, npanels=npanels, nchunks=nchunks,
-        nsteps=(nvec // nvt) * npanels * nchunks, fused_cols=fused)
+        nsteps=(nvec // nvt) * npanels * nchunks, fused_cols=fused,
+        has_scale=value_scale is not None)
     scratch = _panel_scratch(fused, 2, vmax, values.dtype, (xw, nvt),
                              x.dtype)
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -446,7 +488,8 @@ def spmm_pallas_panels_db(chunk_vbase, chunk_xbase, chunk_col, chunk_mask,
     y = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((npanels * pr, nvec), values.dtype),
+        out_shape=jax.ShapeDtypeStruct((npanels * pr, nvec),
+                                       _out_dtype(values, x)),
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
@@ -466,14 +509,16 @@ def spmm_pallas_panels_db(chunk_vbase, chunk_xbase, chunk_col, chunk_mask,
 # column permutation already folded in) and ``desc_yrow[:, ::c]`` the
 # per-block-row scatter targets -- the expand is one gather + mask multiply.
 
-def _spmm_desc_vals(vwin, valid, vidx):
-    return jnp.take(vwin, vidx, axis=0) * valid.astype(vwin.dtype)
+def _spmm_desc_vals(vwin, valid, vidx, scale=None):
+    vals = _expand_vals(jnp.take(vwin, vidx.astype(jnp.int32), axis=0), scale)
+    return vals * valid.astype(vals.dtype)
 
 
 def _spmm_desc_kernel(vbase_ref, valid_ref, vidx_ref, xcol_ref, yrow_ref,
-                      values_hbm, x_ref, y_ref, vwin, sem, *, r: int, c: int,
-                      cb: int, vmax: int):
+                      values_hbm, x_ref, *rest, r: int, c: int,
+                      cb: int, vmax: int, has_scale: bool = False):
     """Whole-vector descriptor SpMM step (grid: vec-tiles x chunks)."""
+    scale_ref, (y_ref, vwin, sem) = _desc_rest(rest, has_scale)
     i = pl.program_id(1)
 
     @pl.when(i == 0)
@@ -485,10 +530,13 @@ def _spmm_desc_kernel(vbase_ref, valid_ref, vidx_ref, xcol_ref, yrow_ref,
     copy.start()
     copy.wait()
 
-    vals = _spmm_desc_vals(vwin[...], valid_ref[0], vidx_ref[0])
-    xg = jnp.take(x_ref[...], xcol_ref[0][:, :c], axis=0)       # (cb, c, nvt)
+    vals = _spmm_desc_vals(vwin[...], valid_ref[0], vidx_ref[0],
+                           None if scale_ref is None else scale_ref[0])
+    xg = jnp.take(x_ref[...], xcol_ref[0][:, :c].astype(jnp.int32),
+                  axis=0)                                       # (cb, c, nvt)
+    yrow = yrow_ref[0].astype(jnp.int32)
     y_ref[...] = _spmm_block_accumulate(
-        y_ref[...], vals, xg, lambda lr: yrow_ref[0][:, lr * c], r, c, cb)
+        y_ref[...], vals, xg, lambda lr: yrow[:, lr * c], r, c, cb)
 
 
 @functools.partial(
@@ -496,9 +544,9 @@ def _spmm_desc_kernel(vbase_ref, valid_ref, vidx_ref, xcol_ref, yrow_ref,
     static_argnames=("r", "c", "cb", "vmax", "nrows", "ncols", "nvt",
                      "interpret"))
 def spmm_pallas_desc(chunk_vbase, desc_valid, desc_vidx, desc_xcol,
-                     desc_yrow, values, x, *, r: int, c: int, cb: int,
-                     vmax: int, nrows: int, ncols: int, nvt: int = 128,
-                     interpret: bool = False):
+                     desc_yrow, values, x, value_scale=None, *, r: int,
+                     c: int, cb: int, vmax: int, nrows: int, ncols: int,
+                     nvt: int = 128, interpret: bool = False):
     """Whole-vector Y = A @ X over build-time descriptors
     (lowering="descriptor"; column permutations are folded into
     ``desc_xcol`` at build time, so there is no ``col_map`` input)."""
@@ -508,17 +556,23 @@ def spmm_pallas_desc(chunk_vbase, desc_valid, desc_vidx, desc_xcol,
     if nvec % nvt:
         raise ValueError(f"nvec={nvec} not divisible by tile {nvt}")
     rc = r * c
+    in_specs = [
+        pl.BlockSpec((1, cb, rc), lambda j, i, vb: (i, 0, 0)),
+        pl.BlockSpec((1, cb, rc), lambda j, i, vb: (i, 0, 0)),
+        pl.BlockSpec((1, cb, rc), lambda j, i, vb: (i, 0, 0)),
+        pl.BlockSpec((1, cb, rc), lambda j, i, vb: (i, 0, 0)),
+        pl.BlockSpec(memory_space=pl.ANY),                  # values
+        pl.BlockSpec((ncols, nvt), lambda j, i, vb: (0, j)),  # x tile
+    ]
+    operands = [chunk_vbase, desc_valid, desc_vidx, desc_xcol, desc_yrow,
+                values, x]
+    if value_scale is not None:
+        in_specs.append(pl.BlockSpec((1,), lambda j, i, vb: (i,)))
+        operands.append(value_scale)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(nvec // nvt, nchunks),
-        in_specs=[
-            pl.BlockSpec((1, cb, rc), lambda j, i, vb: (i, 0, 0)),
-            pl.BlockSpec((1, cb, rc), lambda j, i, vb: (i, 0, 0)),
-            pl.BlockSpec((1, cb, rc), lambda j, i, vb: (i, 0, 0)),
-            pl.BlockSpec((1, cb, rc), lambda j, i, vb: (i, 0, 0)),
-            pl.BlockSpec(memory_space=pl.ANY),                  # values
-            pl.BlockSpec((ncols, nvt), lambda j, i, vb: (0, j)),  # x tile
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((nrows, nvt), lambda j, i, vb: (0, j)),
         scratch_shapes=[
             pltpu.VMEM((vmax,), values.dtype),
@@ -526,23 +580,26 @@ def spmm_pallas_desc(chunk_vbase, desc_valid, desc_vidx, desc_xcol,
         ],
     )
     return pl.pallas_call(
-        functools.partial(_spmm_desc_kernel, r=r, c=c, cb=cb, vmax=vmax),
+        functools.partial(_spmm_desc_kernel, r=r, c=c, cb=cb, vmax=vmax,
+                          has_scale=value_scale is not None),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((nrows, nvec), values.dtype),
+        out_shape=jax.ShapeDtypeStruct((nrows, nvec), _out_dtype(values, x)),
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary")),
-    )(chunk_vbase, desc_valid, desc_vidx, desc_xcol, desc_yrow, values, x)
+    )(*operands)
 
 
 def _spmm_panel_desc_kernel(vbase_ref, xbase_ref, valid_ref, vidx_ref,
                             xcol_ref, yrow_ref, values_hbm, x_ref, *rest,
                             r: int, c: int, cb: int, vmax: int, xw: int,
                             pr: int, nvt: int, ncols_pad: int,
-                            fused_cols: bool = False):
+                            fused_cols: bool = False,
+                            has_scale: bool = False):
     """Panel descriptor SpMM step (grid: vec-tiles x panels x chunks)."""
+    cmap_ref, scale_ref, rest = _mask_rest(rest, fused_cols, has_scale)
     if fused_cols:
-        cmap_ref, y_ref, vwin, vsem = rest
+        y_ref, vwin, vsem = rest
     else:
         y_ref, vwin, xwin, vsem, xsem = rest
     j = pl.program_id(0)
@@ -565,16 +622,19 @@ def _spmm_panel_desc_kernel(vbase_ref, xbase_ref, valid_ref, vidx_ref,
     if not fused_cols:
         xcopy.wait()
 
-    vals = _spmm_desc_vals(vwin[...], valid_ref[0, 0], vidx_ref[0, 0])
+    vals = _spmm_desc_vals(vwin[...], valid_ref[0, 0], vidx_ref[0, 0],
+                           None if scale_ref is None else scale_ref[0, 0])
     if fused_cols:
-        xcol = jnp.clip(xcol_ref[0, 0][:, :c] + xbase_ref[p, i],
-                        0, ncols_pad - 1)
+        xcol = jnp.clip(xcol_ref[0, 0][:, :c].astype(jnp.int32)
+                        + xbase_ref[p, i], 0, ncols_pad - 1)
         xcol = jnp.take(cmap_ref[...], xcol, axis=0)
         xg = jnp.take(x_ref[...], xcol, axis=0)
     else:
-        xg = jnp.take(xwin[...], xcol_ref[0, 0][:, :c], axis=0)
+        xg = jnp.take(xwin[...], xcol_ref[0, 0][:, :c].astype(jnp.int32),
+                      axis=0)
+    yrow = yrow_ref[0, 0].astype(jnp.int32)
     y_ref[...] = _spmm_block_accumulate(
-        y_ref[...], vals, xg, lambda lr: yrow_ref[0, 0][:, lr * c], r, c, cb)
+        y_ref[...], vals, xg, lambda lr: yrow[:, lr * c], r, c, cb)
 
 
 def _spmm_desc_panel_specs(cb, rc, xspecs):
@@ -592,7 +652,8 @@ def _spmm_desc_panel_specs(cb, rc, xspecs):
     static_argnames=("r", "c", "cb", "vmax", "xw", "pr", "nrows", "ncols_pad",
                      "nvt", "interpret"))
 def spmm_pallas_panels_desc(chunk_vbase, chunk_xbase, desc_valid, desc_vidx,
-                            desc_xcol, desc_yrow, values, x, col_map=None, *,
+                            desc_xcol, desc_yrow, values, x, col_map=None,
+                            value_scale=None, *,
                             r: int, c: int, cb: int, vmax: int, xw: int,
                             pr: int, nrows: int, ncols_pad: int,
                             nvt: int = 128, interpret: bool = False):
@@ -605,6 +666,7 @@ def spmm_pallas_panels_desc(chunk_vbase, chunk_xbase, desc_valid, desc_vidx,
     xp = jnp.pad(x, ((0, max(0, ncols_pad - x.shape[0])), (0, 0)))
     xspecs, xops, fused = _panel_fused_operands_mm(xp, col_map, ncols_pad,
                                                    nvt)
+    xspecs, xops = _append_panel_scale_mm(xspecs, xops, value_scale)
     scratch = _panel_scratch(fused, 1, vmax, values.dtype, (xw, nvt),
                              x.dtype)
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -617,9 +679,11 @@ def spmm_pallas_panels_desc(chunk_vbase, chunk_xbase, desc_valid, desc_vidx,
     y = pl.pallas_call(
         functools.partial(_spmm_panel_desc_kernel, r=r, c=c, cb=cb,
                           vmax=vmax, xw=xw, pr=pr, nvt=nvt,
-                          ncols_pad=ncols_pad, fused_cols=fused),
+                          ncols_pad=ncols_pad, fused_cols=fused,
+                          has_scale=value_scale is not None),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((npanels * pr, nvec), values.dtype),
+        out_shape=jax.ShapeDtypeStruct((npanels * pr, nvec),
+                                       _out_dtype(values, x)),
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
@@ -633,11 +697,13 @@ def _spmm_panel_desc_db_kernel(vbase_ref, xbase_ref, valid_ref, vidx_ref,
                                r: int, c: int, cb: int, vmax: int, xw: int,
                                pr: int, nvt: int, ncols_pad: int,
                                npanels: int, nchunks: int, nsteps: int,
-                               fused_cols: bool = False):
+                               fused_cols: bool = False,
+                               has_scale: bool = False):
     """Double-buffered panel descriptor SpMM (same linearised-step
     pipelining as ``_spmm_panel_db_kernel``)."""
+    cmap_ref, scale_ref, rest = _mask_rest(rest, fused_cols, has_scale)
     if fused_cols:
-        cmap_ref, y_ref, vwin, vsem = rest
+        y_ref, vwin, vsem = rest
     else:
         y_ref, vwin, xwin, vsem, xsem = rest
     j = pl.program_id(0)
@@ -680,16 +746,19 @@ def _spmm_panel_desc_db_kernel(vbase_ref, xbase_ref, valid_ref, vidx_ref,
             x_ref.at[pl.ds(xbase_ref[p, i], xw), pl.ds(j * nvt, nvt)],
             xwin.at[slot], xsem.at[slot]).wait()
 
-    vals = _spmm_desc_vals(vwin[slot], valid_ref[0, 0], vidx_ref[0, 0])
+    vals = _spmm_desc_vals(vwin[slot], valid_ref[0, 0], vidx_ref[0, 0],
+                           None if scale_ref is None else scale_ref[0, 0])
     if fused_cols:
-        xcol = jnp.clip(xcol_ref[0, 0][:, :c] + xbase_ref[p, i],
-                        0, ncols_pad - 1)
+        xcol = jnp.clip(xcol_ref[0, 0][:, :c].astype(jnp.int32)
+                        + xbase_ref[p, i], 0, ncols_pad - 1)
         xcol = jnp.take(cmap_ref[...], xcol, axis=0)
         xg = jnp.take(x_ref[...], xcol, axis=0)
     else:
-        xg = jnp.take(xwin[slot], xcol_ref[0, 0][:, :c], axis=0)
+        xg = jnp.take(xwin[slot], xcol_ref[0, 0][:, :c].astype(jnp.int32),
+                      axis=0)
+    yrow = yrow_ref[0, 0].astype(jnp.int32)
     y_ref[...] = _spmm_block_accumulate(
-        y_ref[...], vals, xg, lambda lr: yrow_ref[0, 0][:, lr * c], r, c, cb)
+        y_ref[...], vals, xg, lambda lr: yrow[:, lr * c], r, c, cb)
 
 
 @functools.partial(
@@ -698,7 +767,8 @@ def _spmm_panel_desc_db_kernel(vbase_ref, xbase_ref, valid_ref, vidx_ref,
                      "nvt", "interpret"))
 def spmm_pallas_panels_desc_db(chunk_vbase, chunk_xbase, desc_valid,
                                desc_vidx, desc_xcol, desc_yrow, values, x,
-                               col_map=None, *, r: int, c: int, cb: int,
+                               col_map=None, value_scale=None, *,
+                               r: int, c: int, cb: int,
                                vmax: int, xw: int, pr: int, nrows: int,
                                ncols_pad: int, nvt: int = 128,
                                interpret: bool = False):
@@ -711,6 +781,7 @@ def spmm_pallas_panels_desc_db(chunk_vbase, chunk_xbase, desc_valid,
     xp = jnp.pad(x, ((0, max(0, ncols_pad - x.shape[0])), (0, 0)))
     xspecs, xops, fused = _panel_fused_operands_mm(xp, col_map, ncols_pad,
                                                    nvt)
+    xspecs, xops = _append_panel_scale_mm(xspecs, xops, value_scale)
     scratch = _panel_scratch(fused, 2, vmax, values.dtype, (xw, nvt),
                              x.dtype)
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -726,9 +797,11 @@ def spmm_pallas_panels_desc_db(chunk_vbase, chunk_xbase, desc_valid,
                           ncols_pad=ncols_pad, npanels=npanels,
                           nchunks=nchunks,
                           nsteps=(nvec // nvt) * npanels * nchunks,
-                          fused_cols=fused),
+                          fused_cols=fused,
+                          has_scale=value_scale is not None),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((npanels * pr, nvec), values.dtype),
+        out_shape=jax.ShapeDtypeStruct((npanels * pr, nvec),
+                                       _out_dtype(values, x)),
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),

@@ -49,6 +49,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -62,34 +63,52 @@ from repro._compat.pallas import CompilerParams as _CompilerParams
 #: compiler headroom; the contracts below must stay safely under it).
 VMEM_LIMIT_BYTES = 16 * 2**20
 
-#: int32 descriptor words per block lane (valid/vidx/xcol/yrow tiles).
+#: Un-narrowed descriptor bytes per block lane (4 int32 valid/vidx/xcol/yrow
+#: tiles) -- the fallback when a geometry predates ``desc_lane_nbytes``.
 _DESC_TILE_BYTES = 4 * 4
 
 
+def _acc_itemsize(itemsize):
+    """x/y vector bytes: quantised values upcast to f32 before touching the
+    vectors, so those terms never shrink below 4 bytes per element."""
+    return max(int(itemsize), 4)
+
+
+def _desc_tile_bytes(geom):
+    """Descriptor tile bytes per lane from the plan's narrowed tables."""
+    return int(geom.get("desc_lane_nbytes", _DESC_TILE_BYTES))
+
+
 def _vmem_whole_mask(geom, itemsize, nvec=1):
-    # x (ncols) + y (nrows) + double-buffered value window + chunk metadata
-    # (4 int32 tables of cb) + a potential fused col_map (ncols int32)
-    return ((geom["nrows"] + geom["ncols"] + 2 * geom["vmax"]) * itemsize
+    # x (ncols) + y (nrows) at accumulation width + double-buffered value
+    # window at the STORAGE itemsize + chunk metadata (4 int32 tables of cb)
+    # + a potential fused col_map (ncols int32)
+    return ((geom["nrows"] + geom["ncols"]) * _acc_itemsize(itemsize)
+            + 2 * geom["vmax"] * itemsize
             + 4 * 4 * geom["cb"] + 4 * geom["ncols"])
 
 
 def _vmem_whole_desc(geom, itemsize, nvec=1):
     rc = geom["r"] * geom["c"]
-    return ((geom["nrows"] + geom["ncols"] + 2 * geom["vmax"]) * itemsize
-            + _DESC_TILE_BYTES * geom["cb"] * rc)
+    return ((geom["nrows"] + geom["ncols"]) * _acc_itemsize(itemsize)
+            + 2 * geom["vmax"] * itemsize
+            + _desc_tile_bytes(geom) * geom["cb"] * rc)
 
 
 def _vmem_panels_mask(geom, itemsize, nvec=1):
-    # one (pr,) y slice + one (xw,) x window (double-buffered) + the value
-    # window (double-buffered) + chunk metadata -- matrix-size independent
-    return ((geom["pr"] + 2 * geom["xw"] + 2 * geom["vmax"]) * itemsize
+    # one (pr,) y slice + one (xw,) x window (double-buffered), both at
+    # accumulation width + the value window (double-buffered) at the storage
+    # itemsize + chunk metadata -- matrix-size independent
+    return ((geom["pr"] + 2 * geom["xw"]) * _acc_itemsize(itemsize)
+            + 2 * geom["vmax"] * itemsize
             + 4 * 4 * geom["cb"])
 
 
 def _vmem_panels_desc(geom, itemsize, nvec=1):
     rc = geom["r"] * geom["c"]
-    return ((geom["pr"] + 2 * geom["xw"] + 2 * geom["vmax"]) * itemsize
-            + _DESC_TILE_BYTES * geom["cb"] * rc)
+    return ((geom["pr"] + 2 * geom["xw"]) * _acc_itemsize(itemsize)
+            + 2 * geom["vmax"] * itemsize
+            + _desc_tile_bytes(geom) * geom["cb"] * rc)
 
 
 #: (layout, lowering) -> fn(geom_dict, itemsize, nvec=1) -> resident bytes
@@ -105,8 +124,36 @@ SPMV_VMEM_CONTRACTS = {
 }
 
 
+def _quantised(dtype) -> bool:
+    """True when the storage dtype needs an in-decode upcast to f32 (int8,
+    or any sub-4-byte float such as bf16)."""
+    dt = np.dtype(dtype)
+    return dt.kind in "iu" or dt.itemsize < 4
+
+
+def _out_dtype(values, x):
+    """Kernel output dtype: quantised storage accumulates (and returns) in
+    f32 -- promoted with x so f64 inputs keep their width -- while full-width
+    storage keeps the pre-dtype-axis behaviour (values.dtype) exactly."""
+    if _quantised(values.dtype):
+        return jnp.promote_types(jnp.float32, x.dtype)
+    return values.dtype
+
+
+def _expand_vals(vals, scale=None):
+    """The f32-accumulation contract: quantised values upcast inside the
+    decode, then the per-chunk dequantisation ``scale`` (a scalar here --
+    one chunk per grid step) applies. f32 storage passes through untouched.
+    """
+    if _quantised(vals.dtype):
+        vals = vals.astype(jnp.float32)
+    if scale is not None:
+        vals = vals * scale
+    return vals
+
+
 def _decode_chunk(mask, voff, col, vwin, x, *, r: int, c: int, ncols: int,
-                  vmax: int, cmap=None):
+                  vmax: int, cmap=None, scale=None):
     """Mask-expand one chunk: returns contrib (cb, r*c) and local row offsets.
 
     ``cmap`` is the fused column-permutation map of the reordering subsystem
@@ -115,13 +162,15 @@ def _decode_chunk(mask, voff, col, vwin, x, *, r: int, c: int, ncols: int,
     itself -- instead the decode routes its gather through ``cmap`` (one
     extra VMEM-resident int32 vector), reading original-order x with zero
     HBM cost. None keeps the pre-reorder index path bit-for-bit intact.
+    ``scale`` is the chunk's scalar dequantisation factor (int8 storage).
     """
     rc = r * c
     k = jnp.arange(rc, dtype=jnp.int32)
     bits = ((mask[:, None] >> k[None, :]) & 1).astype(jnp.int32)   # (cb, rc)
     ranks = jnp.cumsum(bits, axis=1) - bits
     vidx = jnp.clip(voff[:, None] + ranks, 0, vmax - 1)
-    vals = jnp.take(vwin, vidx, axis=0) * bits.astype(vwin.dtype)
+    vals = _expand_vals(jnp.take(vwin, vidx, axis=0), scale)
+    vals = vals * bits.astype(vals.dtype)
     xcol = jnp.clip(col[:, None] + (k % c)[None, :], 0, ncols - 1)
     if cmap is not None:
         xcol = jnp.take(cmap, xcol, axis=0)
@@ -129,13 +178,22 @@ def _decode_chunk(mask, voff, col, vwin, x, *, r: int, c: int, ncols: int,
     return vals * xg
 
 
+def _mask_rest(rest, fused_cols, has_scale):
+    """Uniform ``*rest`` unpacking of the mask kernels: the optional fused
+    column map then the optional per-chunk scale tile lead the input refs,
+    followed by the output and scratch refs."""
+    rest = list(rest)
+    cmap_ref = rest.pop(0) if fused_cols else None
+    scale_ref = rest.pop(0) if has_scale else None
+    return cmap_ref, scale_ref, rest
+
+
 def _spmv_kernel(vbase_ref, col_ref, mask_ref, voff_ref, row_ref, values_hbm,
                  x_ref, *rest, r: int, c: int, cb: int,
-                 vmax: int, nrows: int, ncols: int, fused_cols: bool = False):
-    if fused_cols:                  # extra input ref: the column map (VMEM)
-        cmap_ref, y_ref, vwin, sem = rest
-    else:
-        (y_ref, vwin, sem), cmap_ref = rest, None
+                 vmax: int, nrows: int, ncols: int, fused_cols: bool = False,
+                 has_scale: bool = False):
+    cmap_ref, scale_ref, (y_ref, vwin, sem) = _mask_rest(rest, fused_cols,
+                                                         has_scale)
     i = pl.program_id(0)
 
     @pl.when(i == 0)
@@ -151,7 +209,8 @@ def _spmv_kernel(vbase_ref, col_ref, mask_ref, voff_ref, row_ref, values_hbm,
     mask = mask_ref[0]
     contrib = _decode_chunk(mask, voff_ref[0], col_ref[0], vwin[...],
                             x_ref[...], r=r, c=c, ncols=ncols, vmax=vmax,
-                            cmap=None if cmap_ref is None else cmap_ref[...])
+                            cmap=None if cmap_ref is None else cmap_ref[...],
+                            scale=None if scale_ref is None else scale_ref[0])
     k = jnp.arange(r * c, dtype=jnp.int32)
     yrow = jnp.clip(row_ref[0][:, None] + (k // c)[None, :], 0, nrows - 1)
     y = y_ref[...]
@@ -162,18 +221,20 @@ def _spmv_kernel(vbase_ref, col_ref, mask_ref, voff_ref, row_ref, values_hbm,
     jax.jit,
     static_argnames=("r", "c", "cb", "vmax", "nrows", "ncols", "interpret"))
 def spmv_pallas(chunk_vbase, chunk_col, chunk_mask, chunk_voff, chunk_row,
-                values, x, col_map=None, *, r: int, c: int, cb: int,
-                vmax: int, nrows: int, ncols: int,
+                values, x, col_map=None, value_scale=None, *, r: int, c: int,
+                cb: int, vmax: int, nrows: int, ncols: int,
                 interpret: bool = False) -> jax.Array:
     """``col_map`` (optional, (ncols,) int32) fuses a column permutation into
     the decode: x stays in original order in VMEM and the kernel gathers
     ``x[col_map[col]]`` -- the reordering subsystem's zero-copy path (see
-    ``_decode_chunk``)."""
+    ``_decode_chunk``). ``value_scale`` (optional, (nchunks,) f32) is the
+    int8 lowering's per-chunk dequantisation factor."""
     nchunks = chunk_col.shape[0]
     fused_cols = col_map is not None
+    has_scale = value_scale is not None
     kernel = functools.partial(_spmv_kernel, r=r, c=c, cb=cb, vmax=vmax,
                                nrows=nrows, ncols=ncols,
-                               fused_cols=fused_cols)
+                               fused_cols=fused_cols, has_scale=has_scale)
     in_specs = [
         pl.BlockSpec((1, cb), lambda i, vb: (i, 0)),   # chunk_col
         pl.BlockSpec((1, cb), lambda i, vb: (i, 0)),   # chunk_mask
@@ -187,6 +248,9 @@ def spmv_pallas(chunk_vbase, chunk_col, chunk_mask, chunk_voff, chunk_row,
     if fused_cols:
         in_specs.append(pl.BlockSpec((ncols,), lambda i, vb: (0,)))
         operands.append(col_map.astype(jnp.int32))
+    if has_scale:
+        in_specs.append(pl.BlockSpec((1,), lambda i, vb: (i,)))
+        operands.append(value_scale)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(nchunks,),
@@ -200,7 +264,7 @@ def spmv_pallas(chunk_vbase, chunk_col, chunk_mask, chunk_voff, chunk_row,
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((nrows,), values.dtype),
+        out_shape=jax.ShapeDtypeStruct((nrows,), _out_dtype(values, x)),
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",)),
@@ -228,6 +292,16 @@ def _panel_fused_operands(x, col_map, ncols_pad):
     return [pl.BlockSpec(memory_space=pl.ANY)], [x], fused
 
 
+def _append_panel_scale(xspecs, xops, value_scale):
+    """Append the (npanels, nchunks) per-chunk dequantisation scales as one
+    (1, 1) tile per grid step, AFTER the optional fused column map (the
+    ``_mask_rest`` unpack order every panel kernel shares)."""
+    if value_scale is None:
+        return xspecs, xops
+    return (xspecs + [pl.BlockSpec((1, 1), lambda p, i, vb, xb: (p, i))],
+            xops + [value_scale])
+
+
 def _panel_scratch(fused, nbuf, vmax, vdtype, xshape, xdtype):
     """Scratch shapes of the panel kernels (shared by the mask/descriptor x
     SpMV/SpMM x single/double-buffered wrappers): ``nbuf`` value windows +
@@ -248,14 +322,16 @@ def _panel_scratch(fused, nbuf, vmax, vdtype, xshape, xdtype):
 def _spmv_panel_kernel(vbase_ref, xbase_ref, col_ref, mask_ref, voff_ref,
                        row_ref, values_hbm, x_ref, *rest, r: int, c: int,
                        cb: int, vmax: int, xw: int, pr: int, ncols_pad: int,
-                       fused_cols: bool = False):
+                       fused_cols: bool = False, has_scale: bool = False):
     """One (panel, chunk) grid step: DMA the chunk's value window (and x
     window, unless the fused column map keeps x fully VMEM-resident),
     decode, accumulate into the panel's (pr,) y tile."""
-    if fused_cols:              # extra input ref: the column map (VMEM)
-        cmap_ref, y_ref, vwin, vsem = rest
+    cmap_ref, scale_ref, rest = _mask_rest(rest, fused_cols, has_scale)
+    if fused_cols:
+        y_ref, vwin, vsem = rest
     else:
         y_ref, vwin, xwin, vsem, xsem = rest
+    scale = None if scale_ref is None else scale_ref[0, 0]
     p = pl.program_id(0)
     i = pl.program_id(1)
 
@@ -281,12 +357,12 @@ def _spmv_panel_kernel(vbase_ref, xbase_ref, col_ref, mask_ref, voff_ref,
         contrib = _decode_chunk(mask_ref[0, 0], voff_ref[0, 0],
                                 col_ref[0, 0] + xbase_ref[p, i], vwin[...],
                                 x_ref[...], r=r, c=c, ncols=ncols_pad,
-                                vmax=vmax, cmap=cmap_ref[...])
+                                vmax=vmax, cmap=cmap_ref[...], scale=scale)
     else:
         # chunk_col is window-relative: decode against the x window directly
         contrib = _decode_chunk(mask_ref[0, 0], voff_ref[0, 0], col_ref[0, 0],
                                 vwin[...], xwin[...], r=r, c=c, ncols=xw,
-                                vmax=vmax)
+                                vmax=vmax, scale=scale)
     k = jnp.arange(r * c, dtype=jnp.int32)
     yrow = jnp.clip(row_ref[0, 0][:, None] + (k // c)[None, :], 0, pr - 1)
     y = y_ref[...]
@@ -298,21 +374,24 @@ def _spmv_panel_kernel(vbase_ref, xbase_ref, col_ref, mask_ref, voff_ref,
     static_argnames=("r", "c", "cb", "vmax", "xw", "pr", "nrows",
                      "ncols_pad", "interpret"))
 def spmv_pallas_panels(chunk_vbase, chunk_xbase, chunk_col, chunk_mask,
-                       chunk_voff, chunk_row, values, x, col_map=None, *,
-                       r: int, c: int, cb: int, vmax: int, xw: int, pr: int,
-                       nrows: int, ncols_pad: int,
-                       interpret: bool = False) -> jax.Array:
+                       chunk_voff, chunk_row, values, x, col_map=None,
+                       value_scale=None, *, r: int, c: int, cb: int,
+                       vmax: int, xw: int, pr: int, nrows: int,
+                       ncols_pad: int, interpret: bool = False) -> jax.Array:
     """Row-panel-tiled SpMV. x is padded to ncols_pad; returns y[:nrows].
 
     ``col_map`` (optional, (ncols,) int32) fuses a column permutation into
     the decode -- x stays in original order (see
-    :func:`_panel_fused_operands` for the VMEM trade)."""
+    :func:`_panel_fused_operands` for the VMEM trade); ``value_scale``
+    (optional, (npanels, nchunks) f32) dequantises int8 values."""
     npanels, nchunks = chunk_vbase.shape
     xp = jnp.pad(x, (0, max(0, ncols_pad - x.shape[0])))
     xspecs, xops, fused = _panel_fused_operands(xp, col_map, ncols_pad)
+    xspecs, xops = _append_panel_scale(xspecs, xops, value_scale)
     kernel = functools.partial(_spmv_panel_kernel, r=r, c=c, cb=cb, vmax=vmax,
                                xw=xw, pr=pr, ncols_pad=ncols_pad,
-                               fused_cols=fused)
+                               fused_cols=fused,
+                               has_scale=value_scale is not None)
     scratch = _panel_scratch(fused, 1, vmax, values.dtype, (xw,), x.dtype)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                  # chunk_vbase, chunk_xbase
@@ -330,7 +409,7 @@ def spmv_pallas_panels(chunk_vbase, chunk_xbase, chunk_col, chunk_mask,
     y = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((npanels * pr,), values.dtype),
+        out_shape=jax.ShapeDtypeStruct((npanels * pr,), _out_dtype(values, x)),
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary")),
@@ -343,16 +422,18 @@ def _spmv_panel_db_kernel(vbase_ref, xbase_ref, col_ref, mask_ref, voff_ref,
                           row_ref, values_hbm, x_ref, *rest, r: int, c: int,
                           cb: int, vmax: int, xw: int, pr: int,
                           ncols_pad: int, nchunks: int, nsteps: int,
-                          fused_cols: bool = False):
+                          fused_cols: bool = False, has_scale: bool = False):
     """Double-buffered panel variant: overlap the NEXT (panel, chunk) step's
     value/x-window DMAs with this step's decode (the 2-D-grid analogue of
     the asm kernel's software pipelining). Buffers are indexed by the
     linearised step t = p * nchunks + i. With the fused column map x is
     fully VMEM-resident, so only the value window double-buffers."""
-    if fused_cols:              # extra input ref: the column map (VMEM)
-        cmap_ref, y_ref, vwin, vsem = rest
+    cmap_ref, scale_ref, rest = _mask_rest(rest, fused_cols, has_scale)
+    if fused_cols:
+        y_ref, vwin, vsem = rest
     else:
         y_ref, vwin, xwin, vsem, xsem = rest
+    scale = None if scale_ref is None else scale_ref[0, 0]
     p = pl.program_id(0)
     i = pl.program_id(1)
     t = p * nchunks + i
@@ -391,11 +472,11 @@ def _spmv_panel_db_kernel(vbase_ref, xbase_ref, col_ref, mask_ref, voff_ref,
         contrib = _decode_chunk(mask_ref[0, 0], voff_ref[0, 0],
                                 col_ref[0, 0] + xbase_ref[p, i], vwin[slot],
                                 x_ref[...], r=r, c=c, ncols=ncols_pad,
-                                vmax=vmax, cmap=cmap_ref[...])
+                                vmax=vmax, cmap=cmap_ref[...], scale=scale)
     else:
         contrib = _decode_chunk(mask_ref[0, 0], voff_ref[0, 0], col_ref[0, 0],
                                 vwin[slot], xwin[slot], r=r, c=c, ncols=xw,
-                                vmax=vmax)
+                                vmax=vmax, scale=scale)
     k = jnp.arange(r * c, dtype=jnp.int32)
     yrow = jnp.clip(row_ref[0, 0][:, None] + (k // c)[None, :], 0, pr - 1)
     y = y_ref[...]
@@ -407,19 +488,22 @@ def _spmv_panel_db_kernel(vbase_ref, xbase_ref, col_ref, mask_ref, voff_ref,
     static_argnames=("r", "c", "cb", "vmax", "xw", "pr", "nrows",
                      "ncols_pad", "interpret"))
 def spmv_pallas_panels_db(chunk_vbase, chunk_xbase, chunk_col, chunk_mask,
-                          chunk_voff, chunk_row, values, x, col_map=None, *,
-                          r: int, c: int, cb: int, vmax: int, xw: int,
-                          pr: int, nrows: int, ncols_pad: int,
-                          interpret: bool = False):
-    """``col_map`` fuses a column permutation into the decode, exactly as in
+                          chunk_voff, chunk_row, values, x, col_map=None,
+                          value_scale=None, *, r: int, c: int, cb: int,
+                          vmax: int, xw: int, pr: int, nrows: int,
+                          ncols_pad: int, interpret: bool = False):
+    """``col_map`` / ``value_scale`` fuse a column permutation / per-chunk
+    dequantisation into the decode, exactly as in
     :func:`spmv_pallas_panels`."""
     npanels, nchunks = chunk_vbase.shape
     xp = jnp.pad(x, (0, max(0, ncols_pad - x.shape[0])))
     xspecs, xops, fused = _panel_fused_operands(xp, col_map, ncols_pad)
+    xspecs, xops = _append_panel_scale(xspecs, xops, value_scale)
     kernel = functools.partial(_spmv_panel_db_kernel, r=r, c=c, cb=cb,
                                vmax=vmax, xw=xw, pr=pr, ncols_pad=ncols_pad,
                                nchunks=nchunks, nsteps=npanels * nchunks,
-                               fused_cols=fused)
+                               fused_cols=fused,
+                               has_scale=value_scale is not None)
     scratch = _panel_scratch(fused, 2, vmax, values.dtype, (xw,), x.dtype)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -437,7 +521,7 @@ def spmv_pallas_panels_db(chunk_vbase, chunk_xbase, chunk_col, chunk_mask,
     y = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((npanels * pr,), values.dtype),
+        out_shape=jax.ShapeDtypeStruct((npanels * pr,), _out_dtype(values, x)),
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary")),
@@ -460,7 +544,7 @@ def _spmv_tail_kernel(xbase_ref, rows_ref, cols_ref, vals_ref, x_hbm, y_ref,
     copy = pltpu.make_async_copy(x_hbm.at[pl.ds(xbase_ref[p], xw)], xwin, sem)
     copy.start()
     copy.wait()
-    vals = vals_ref[0]
+    vals = _expand_vals(vals_ref[0])
     rel = jnp.clip(cols_ref[0] - xbase_ref[p], 0, xw - 1)
     prod = vals * jnp.take(xwin[...], rel, axis=0)
     rows = jnp.clip(rows_ref[0], 0, pr - 1)
@@ -499,7 +583,7 @@ def spmv_tail_pallas(tail_xbase, rows, cols, vals, x, *, pr: int, xw: int,
     y = pl.pallas_call(
         functools.partial(_spmv_tail_kernel, pr=pr, xw=xw),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((npanels * pr,), vals.dtype),
+        out_shape=jax.ShapeDtypeStruct((npanels * pr,), _out_dtype(vals, x)),
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",)),
@@ -511,19 +595,32 @@ def spmv_tail_pallas(tail_xbase, rows, cols, vals, x, *, pr: int, xw: int,
 # Descriptor lowering: precomputed gather tables, no in-kernel mask decode
 # ----------------------------------------------------------------------------
 
-def _desc_contrib(valid, vidx, xcol, vwin, x):
+def _desc_contrib(valid, vidx, xcol, vwin, x, scale=None):
     """The descriptor inner loop: two gathers + a masked FMA. The bit
     expansion and rank cumsum of ``_decode_chunk`` were hoisted to build
     time (``repro.core.formats.chunk_descriptors``); a fused column
-    permutation is already folded into ``xcol``."""
-    vals = jnp.take(vwin, vidx, axis=0) * valid.astype(vwin.dtype)
-    return vals * jnp.take(x, xcol, axis=0)
+    permutation is already folded into ``xcol``. The narrowed int8/int16
+    tables promote to int32 in-VMEM before the gathers (HBM read the narrow
+    bytes); ``scale`` dequantises int8 values after the f32 upcast."""
+    vals = _expand_vals(jnp.take(vwin, vidx.astype(jnp.int32), axis=0), scale)
+    vals = vals * valid.astype(vals.dtype)
+    return vals * jnp.take(x, xcol.astype(jnp.int32), axis=0)
+
+
+def _desc_rest(rest, has_scale):
+    """``*rest`` unpacking of the whole-vector descriptor kernels: the
+    optional per-chunk scale tile leads the output/scratch refs."""
+    rest = list(rest)
+    scale_ref = rest.pop(0) if has_scale else None
+    return scale_ref, rest
 
 
 def _spmv_desc_kernel(vbase_ref, valid_ref, vidx_ref, xcol_ref, yrow_ref,
-                      values_hbm, x_ref, y_ref, vwin, sem, *, vmax: int):
+                      values_hbm, x_ref, *rest, vmax: int,
+                      has_scale: bool = False):
     """Whole-vector descriptor SpMV: one chunk per grid step, value window
     DMA'd exactly like the mask kernel, but the decode is gone."""
+    scale_ref, (y_ref, vwin, sem) = _desc_rest(rest, has_scale)
     i = pl.program_id(0)
 
     @pl.when(i == 0)
@@ -536,9 +633,11 @@ def _spmv_desc_kernel(vbase_ref, valid_ref, vidx_ref, xcol_ref, yrow_ref,
     copy.wait()
 
     contrib = _desc_contrib(valid_ref[0], vidx_ref[0], xcol_ref[0],
-                            vwin[...], x_ref[...])
+                            vwin[...], x_ref[...],
+                            scale=None if scale_ref is None else scale_ref[0])
     y = y_ref[...]
-    y_ref[...] = y.at[yrow_ref[0].reshape(-1)].add(contrib.reshape(-1))
+    y_ref[...] = y.at[yrow_ref[0].astype(jnp.int32).reshape(-1)].add(
+        contrib.reshape(-1))
 
 
 def _desc_whole_specs(cb, rc, ncols):
@@ -556,8 +655,8 @@ def _desc_whole_specs(cb, rc, ncols):
     jax.jit,
     static_argnames=("r", "c", "cb", "vmax", "nrows", "ncols", "interpret"))
 def spmv_pallas_desc(chunk_vbase, desc_valid, desc_vidx, desc_xcol,
-                     desc_yrow, values, x, *, r: int, c: int, cb: int,
-                     vmax: int, nrows: int, ncols: int,
+                     desc_yrow, values, x, value_scale=None, *, r: int,
+                     c: int, cb: int, vmax: int, nrows: int, ncols: int,
                      interpret: bool = False) -> jax.Array:
     """Whole-vector SpMV over build-time descriptors (lowering="descriptor").
 
@@ -565,10 +664,16 @@ def spmv_pallas_desc(chunk_vbase, desc_valid, desc_vidx, desc_xcol,
     (validity, value index, x column, y row -- column permutations already
     folded in), so there is no ``col_map`` input and no bit/cumsum work."""
     nchunks = desc_valid.shape[0]
+    in_specs = _desc_whole_specs(cb, r * c, ncols)
+    operands = [chunk_vbase, desc_valid, desc_vidx, desc_xcol, desc_yrow,
+                values, x]
+    if value_scale is not None:
+        in_specs.append(pl.BlockSpec((1,), lambda i, vb: (i,)))
+        operands.append(value_scale)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(nchunks,),
-        in_specs=_desc_whole_specs(cb, r * c, ncols),
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((nrows,), lambda i, vb: (0,)),
         scratch_shapes=[
             pltpu.VMEM((vmax,), values.dtype),
@@ -576,20 +681,22 @@ def spmv_pallas_desc(chunk_vbase, desc_valid, desc_vidx, desc_xcol,
         ],
     )
     return pl.pallas_call(
-        functools.partial(_spmv_desc_kernel, vmax=vmax),
+        functools.partial(_spmv_desc_kernel, vmax=vmax,
+                          has_scale=value_scale is not None),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((nrows,), values.dtype),
+        out_shape=jax.ShapeDtypeStruct((nrows,), _out_dtype(values, x)),
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",)),
-    )(chunk_vbase, desc_valid, desc_vidx, desc_xcol, desc_yrow, values, x)
+    )(*operands)
 
 
 def _spmv_desc_db_kernel(vbase_ref, valid_ref, vidx_ref, xcol_ref, yrow_ref,
-                         values_hbm, x_ref, y_ref, vwin, sem, *, vmax: int,
-                         nchunks: int):
+                         values_hbm, x_ref, *rest, vmax: int,
+                         nchunks: int, has_scale: bool = False):
     """Double-buffered whole-vector descriptor SpMV (same pipelining as
     ``_spmv_db_kernel``)."""
+    scale_ref, (y_ref, vwin, sem) = _desc_rest(rest, has_scale)
     i = pl.program_id(0)
     slot = jax.lax.rem(i, jnp.int32(2))
 
@@ -609,24 +716,32 @@ def _spmv_desc_db_kernel(vbase_ref, valid_ref, vidx_ref, xcol_ref, yrow_ref,
                           vwin.at[slot], sem.at[slot]).wait()
 
     contrib = _desc_contrib(valid_ref[0], vidx_ref[0], xcol_ref[0],
-                            vwin[slot], x_ref[...])
+                            vwin[slot], x_ref[...],
+                            scale=None if scale_ref is None else scale_ref[0])
     y = y_ref[...]
-    y_ref[...] = y.at[yrow_ref[0].reshape(-1)].add(contrib.reshape(-1))
+    y_ref[...] = y.at[yrow_ref[0].astype(jnp.int32).reshape(-1)].add(
+        contrib.reshape(-1))
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("r", "c", "cb", "vmax", "nrows", "ncols", "interpret"))
 def spmv_pallas_desc_db(chunk_vbase, desc_valid, desc_vidx, desc_xcol,
-                        desc_yrow, values, x, *, r: int, c: int, cb: int,
-                        vmax: int, nrows: int, ncols: int,
+                        desc_yrow, values, x, value_scale=None, *, r: int,
+                        c: int, cb: int, vmax: int, nrows: int, ncols: int,
                         interpret: bool = False) -> jax.Array:
     """Double-buffered :func:`spmv_pallas_desc`."""
     nchunks = desc_valid.shape[0]
+    in_specs = _desc_whole_specs(cb, r * c, ncols)
+    operands = [chunk_vbase, desc_valid, desc_vidx, desc_xcol, desc_yrow,
+                values, x]
+    if value_scale is not None:
+        in_specs.append(pl.BlockSpec((1,), lambda i, vb: (i,)))
+        operands.append(value_scale)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(nchunks,),
-        in_specs=_desc_whole_specs(cb, r * c, ncols),
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((nrows,), lambda i, vb: (0,)),
         scratch_shapes=[
             pltpu.VMEM((2, vmax), values.dtype),
@@ -634,27 +749,31 @@ def spmv_pallas_desc_db(chunk_vbase, desc_valid, desc_vidx, desc_xcol,
         ],
     )
     return pl.pallas_call(
-        functools.partial(_spmv_desc_db_kernel, vmax=vmax, nchunks=nchunks),
+        functools.partial(_spmv_desc_db_kernel, vmax=vmax, nchunks=nchunks,
+                          has_scale=value_scale is not None),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((nrows,), values.dtype),
+        out_shape=jax.ShapeDtypeStruct((nrows,), _out_dtype(values, x)),
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",)),
-    )(chunk_vbase, desc_valid, desc_vidx, desc_xcol, desc_yrow, values, x)
+    )(*operands)
 
 
 def _spmv_panel_desc_kernel(vbase_ref, xbase_ref, valid_ref, vidx_ref,
                             xcol_ref, yrow_ref, values_hbm, x_ref, *rest,
                             vmax: int, xw: int, ncols_pad: int,
-                            fused_cols: bool = False):
+                            fused_cols: bool = False,
+                            has_scale: bool = False):
     """Panel descriptor SpMV step: value window DMA + two gathers + masked
     FMA into the panel's (pr,) tile. ``desc_xcol`` is window-relative; the
     fused variant globalises it with ``xbase`` and routes through the
     column map against fully-VMEM-resident original-order x."""
+    cmap_ref, scale_ref, rest = _mask_rest(rest, fused_cols, has_scale)
     if fused_cols:
-        cmap_ref, y_ref, vwin, vsem = rest
+        y_ref, vwin, vsem = rest
     else:
         y_ref, vwin, xwin, vsem, xsem = rest
+    scale = None if scale_ref is None else scale_ref[0, 0]
     p = pl.program_id(0)
     i = pl.program_id(1)
 
@@ -674,15 +793,18 @@ def _spmv_panel_desc_kernel(vbase_ref, xbase_ref, valid_ref, vidx_ref,
         xcopy.wait()
 
     if fused_cols:
-        xcol = jnp.clip(xcol_ref[0, 0] + xbase_ref[p, i], 0, ncols_pad - 1)
+        xcol = jnp.clip(xcol_ref[0, 0].astype(jnp.int32) + xbase_ref[p, i],
+                        0, ncols_pad - 1)
         xcol = jnp.take(cmap_ref[...], xcol, axis=0)
         contrib = _desc_contrib(valid_ref[0, 0], vidx_ref[0, 0], xcol,
-                                vwin[...], x_ref[...])
+                                vwin[...], x_ref[...], scale=scale)
     else:
         contrib = _desc_contrib(valid_ref[0, 0], vidx_ref[0, 0],
-                                xcol_ref[0, 0], vwin[...], xwin[...])
+                                xcol_ref[0, 0], vwin[...], xwin[...],
+                                scale=scale)
     y = y_ref[...]
-    y_ref[...] = y.at[yrow_ref[0, 0].reshape(-1)].add(contrib.reshape(-1))
+    y_ref[...] = y.at[yrow_ref[0, 0].astype(jnp.int32).reshape(-1)].add(
+        contrib.reshape(-1))
 
 
 def _desc_panel_specs(cb, rc, xspecs):
@@ -700,7 +822,8 @@ def _desc_panel_specs(cb, rc, xspecs):
     static_argnames=("r", "c", "cb", "vmax", "xw", "pr", "nrows",
                      "ncols_pad", "interpret"))
 def spmv_pallas_panels_desc(chunk_vbase, chunk_xbase, desc_valid, desc_vidx,
-                            desc_xcol, desc_yrow, values, x, col_map=None, *,
+                            desc_xcol, desc_yrow, values, x, col_map=None,
+                            value_scale=None, *,
                             r: int, c: int, cb: int, vmax: int, xw: int,
                             pr: int, nrows: int, ncols_pad: int,
                             interpret: bool = False) -> jax.Array:
@@ -708,6 +831,7 @@ def spmv_pallas_panels_desc(chunk_vbase, chunk_xbase, desc_valid, desc_vidx,
     npanels, nchunks = chunk_vbase.shape
     xp = jnp.pad(x, (0, max(0, ncols_pad - x.shape[0])))
     xspecs, xops, fused = _panel_fused_operands(xp, col_map, ncols_pad)
+    xspecs, xops = _append_panel_scale(xspecs, xops, value_scale)
     scratch = _panel_scratch(fused, 1, vmax, values.dtype, (xw,), x.dtype)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                  # chunk_vbase, chunk_xbase
@@ -718,9 +842,11 @@ def spmv_pallas_panels_desc(chunk_vbase, chunk_xbase, desc_valid, desc_vidx,
     )
     y = pl.pallas_call(
         functools.partial(_spmv_panel_desc_kernel, vmax=vmax, xw=xw,
-                          ncols_pad=ncols_pad, fused_cols=fused),
+                          ncols_pad=ncols_pad, fused_cols=fused,
+                          has_scale=value_scale is not None),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((npanels * pr,), values.dtype),
+        out_shape=jax.ShapeDtypeStruct((npanels * pr,),
+                                       _out_dtype(values, x)),
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary")),
@@ -733,13 +859,16 @@ def _spmv_panel_desc_db_kernel(vbase_ref, xbase_ref, valid_ref, vidx_ref,
                                xcol_ref, yrow_ref, values_hbm, x_ref, *rest,
                                vmax: int, xw: int, ncols_pad: int,
                                nchunks: int, nsteps: int,
-                               fused_cols: bool = False):
+                               fused_cols: bool = False,
+                               has_scale: bool = False):
     """Double-buffered panel descriptor SpMV (pipelining as the mask db
     kernel; with fused cols only the value window double-buffers)."""
+    cmap_ref, scale_ref, rest = _mask_rest(rest, fused_cols, has_scale)
     if fused_cols:
-        cmap_ref, y_ref, vwin, vsem = rest
+        y_ref, vwin, vsem = rest
     else:
         y_ref, vwin, xwin, vsem, xsem = rest
+    scale = None if scale_ref is None else scale_ref[0, 0]
     p = pl.program_id(0)
     i = pl.program_id(1)
     t = p * nchunks + i
@@ -775,15 +904,18 @@ def _spmv_panel_desc_db_kernel(vbase_ref, xbase_ref, valid_ref, vidx_ref,
                               xwin.at[slot], xsem.at[slot]).wait()
 
     if fused_cols:
-        xcol = jnp.clip(xcol_ref[0, 0] + xbase_ref[p, i], 0, ncols_pad - 1)
+        xcol = jnp.clip(xcol_ref[0, 0].astype(jnp.int32) + xbase_ref[p, i],
+                        0, ncols_pad - 1)
         xcol = jnp.take(cmap_ref[...], xcol, axis=0)
         contrib = _desc_contrib(valid_ref[0, 0], vidx_ref[0, 0], xcol,
-                                vwin[slot], x_ref[...])
+                                vwin[slot], x_ref[...], scale=scale)
     else:
         contrib = _desc_contrib(valid_ref[0, 0], vidx_ref[0, 0],
-                                xcol_ref[0, 0], vwin[slot], xwin[slot])
+                                xcol_ref[0, 0], vwin[slot], xwin[slot],
+                                scale=scale)
     y = y_ref[...]
-    y_ref[...] = y.at[yrow_ref[0, 0].reshape(-1)].add(contrib.reshape(-1))
+    y_ref[...] = y.at[yrow_ref[0, 0].astype(jnp.int32).reshape(-1)].add(
+        contrib.reshape(-1))
 
 
 @functools.partial(
@@ -792,7 +924,8 @@ def _spmv_panel_desc_db_kernel(vbase_ref, xbase_ref, valid_ref, vidx_ref,
                      "ncols_pad", "interpret"))
 def spmv_pallas_panels_desc_db(chunk_vbase, chunk_xbase, desc_valid,
                                desc_vidx, desc_xcol, desc_yrow, values, x,
-                               col_map=None, *, r: int, c: int, cb: int,
+                               col_map=None, value_scale=None, *,
+                               r: int, c: int, cb: int,
                                vmax: int, xw: int, pr: int, nrows: int,
                                ncols_pad: int,
                                interpret: bool = False) -> jax.Array:
@@ -800,6 +933,7 @@ def spmv_pallas_panels_desc_db(chunk_vbase, chunk_xbase, desc_valid,
     npanels, nchunks = chunk_vbase.shape
     xp = jnp.pad(x, (0, max(0, ncols_pad - x.shape[0])))
     xspecs, xops, fused = _panel_fused_operands(xp, col_map, ncols_pad)
+    xspecs, xops = _append_panel_scale(xspecs, xops, value_scale)
     scratch = _panel_scratch(fused, 2, vmax, values.dtype, (xw,), x.dtype)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -811,9 +945,11 @@ def spmv_pallas_panels_desc_db(chunk_vbase, chunk_xbase, desc_valid,
     y = pl.pallas_call(
         functools.partial(_spmv_panel_desc_db_kernel, vmax=vmax, xw=xw,
                           ncols_pad=ncols_pad, nchunks=nchunks,
-                          nsteps=npanels * nchunks, fused_cols=fused),
+                          nsteps=npanels * nchunks, fused_cols=fused,
+                          has_scale=value_scale is not None),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((npanels * pr,), values.dtype),
+        out_shape=jax.ShapeDtypeStruct((npanels * pr,),
+                                       _out_dtype(values, x)),
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary")),
@@ -825,13 +961,11 @@ def spmv_pallas_panels_desc_db(chunk_vbase, chunk_xbase, desc_valid,
 def _spmv_db_kernel(vbase_ref, col_ref, mask_ref, voff_ref, row_ref,
                     values_hbm, x_ref, *rest, r: int, c: int,
                     cb: int, vmax: int, nrows: int, ncols: int, nchunks: int,
-                    fused_cols: bool = False):
+                    fused_cols: bool = False, has_scale: bool = False):
     """Double-buffered variant: overlap chunk i+1's value DMA with chunk i's
     compute (the Pallas analogue of the asm kernel's software pipelining)."""
-    if fused_cols:                  # extra input ref: the column map (VMEM)
-        cmap_ref, y_ref, vwin, sem = rest
-    else:
-        (y_ref, vwin, sem), cmap_ref = rest, None
+    cmap_ref, scale_ref, (y_ref, vwin, sem) = _mask_rest(
+        rest, fused_cols, has_scale)
     i = pl.program_id(0)
     slot = jax.lax.rem(i, jnp.int32(2))
 
@@ -852,7 +986,8 @@ def _spmv_db_kernel(vbase_ref, col_ref, mask_ref, voff_ref, row_ref,
 
     contrib = _decode_chunk(mask_ref[0], voff_ref[0], col_ref[0], vwin[slot],
                             x_ref[...], r=r, c=c, ncols=ncols, vmax=vmax,
-                            cmap=None if cmap_ref is None else cmap_ref[...])
+                            cmap=None if cmap_ref is None else cmap_ref[...],
+                            scale=None if scale_ref is None else scale_ref[0])
     k = jnp.arange(r * c, dtype=jnp.int32)
     yrow = jnp.clip(row_ref[0][:, None] + (k // c)[None, :], 0, nrows - 1)
     y = y_ref[...]
@@ -863,8 +998,8 @@ def _spmv_db_kernel(vbase_ref, col_ref, mask_ref, voff_ref, row_ref,
     jax.jit,
     static_argnames=("r", "c", "cb", "vmax", "nrows", "ncols", "interpret"))
 def spmv_pallas_db(chunk_vbase, chunk_col, chunk_mask, chunk_voff, chunk_row,
-                   values, x, col_map=None, *, r: int, c: int, cb: int,
-                   vmax: int, nrows: int, ncols: int,
+                   values, x, col_map=None, value_scale=None, *, r: int,
+                   c: int, cb: int, vmax: int, nrows: int, ncols: int,
                    interpret: bool = False):
     """``col_map`` fuses a column permutation into the decode, exactly as in
     :func:`spmv_pallas`."""
@@ -872,7 +1007,8 @@ def spmv_pallas_db(chunk_vbase, chunk_col, chunk_mask, chunk_voff, chunk_row,
     fused_cols = col_map is not None
     kernel = functools.partial(_spmv_db_kernel, r=r, c=c, cb=cb, vmax=vmax,
                                nrows=nrows, ncols=ncols, nchunks=nchunks,
-                               fused_cols=fused_cols)
+                               fused_cols=fused_cols,
+                               has_scale=value_scale is not None)
     in_specs = [
         pl.BlockSpec((1, cb), lambda i, vb: (i, 0)),
         pl.BlockSpec((1, cb), lambda i, vb: (i, 0)),
@@ -886,6 +1022,9 @@ def spmv_pallas_db(chunk_vbase, chunk_col, chunk_mask, chunk_voff, chunk_row,
     if fused_cols:
         in_specs.append(pl.BlockSpec((ncols,), lambda i, vb: (0,)))
         operands.append(col_map.astype(jnp.int32))
+    if value_scale is not None:
+        in_specs.append(pl.BlockSpec((1,), lambda i, vb: (i,)))
+        operands.append(value_scale)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(nchunks,),
@@ -899,7 +1038,7 @@ def spmv_pallas_db(chunk_vbase, chunk_col, chunk_mask, chunk_voff, chunk_row,
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((nrows,), values.dtype),
+        out_shape=jax.ShapeDtypeStruct((nrows,), _out_dtype(values, x)),
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",)),

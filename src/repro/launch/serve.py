@@ -22,7 +22,9 @@ reordering subsystem (repro.core.reorder) before the layout is built --
 the layer's call signature is unchanged, the permutation is internal --
 and ``--lowering mask|descriptor|auto`` selects the kernel variant (the
 bit-mask decode vs build-time descriptors; auto lets the tuner/cost model
-arbitrate). Adding ``--qps RATE`` routes the vocab bench through the
+arbitrate). ``--vdtype f32|bf16|int8|auto`` picks the stored value dtype
+(quantised stores halve/quarter the value bytes and accumulate in f32).
+Adding ``--qps RATE`` routes the vocab bench through the
 persistent serving tier instead: plan cache, request coalescing, and an
 open-loop Poisson traffic run (``repro.launch.server``).
 """
@@ -136,10 +138,12 @@ def _bench_vocab(config: SV.ServeConfig, cfg) -> None:
     if config.reorder:
         kw["reorder"] = config.reorder
     kw["lowering"] = config.lowering
+    kw["vdtype"] = config.vdtype
     rng = np.random.default_rng(0)
     w = rng.standard_normal((cfg.vocab, cfg.d_model)).astype(np.float32)
+    dtype = np.float32 if config.vdtype == "auto" else None
     lin = SparseLinear.from_dense(w, density=config.vocab_spmv,
-                                  dtype=np.float32, nvec=1, **kw)
+                                  dtype=dtype, nvec=1, **kw)
     x = jnp.asarray(rng.standard_normal(cfg.d_model), jnp.float32)
     h = lin.handle
     if config.verify:
@@ -165,7 +169,8 @@ def _bench_vocab(config: SV.ServeConfig, cfg) -> None:
     else:
         reo_str = ""
     cfg_str = ",".join(f"{k}={v}" for k, v in h.meta
-                       if k in ("pr", "xw", "cb", "lowering"))
+                       if k in ("pr", "xw", "cb", "lowering", "vdtype") and
+                       v != "")
     src = ("explicit --panel" if config.panel
            else ("tuned" if config.records else "defaults"))
     print(f"vocab_spmv[{cfg.vocab}x{cfg.d_model}@{config.vocab_spmv}]: "

@@ -97,6 +97,9 @@ class ServeConfig:
                              "auto; empty = none)")
     lowering: str = _knob("auto", "kernel lowering",
                           choices=["auto", "mask", "descriptor"])
+    vdtype: str = _knob("auto", "stored value dtype for the sparse layer "
+                                "(quantised stores accumulate in f32)",
+                        choices=["auto", "f32", "bf16", "int8"])
     verify: bool = _knob(False, "statically verify records on load and "
                                 "every plan at cache-admission time")
 
@@ -147,7 +150,8 @@ def config_from_args(args: argparse.Namespace, cls=ServeConfig):
 def plan_request(config: ServeConfig) -> Dict[str, object]:
     """The ``ops.prepare`` keyword request a config describes -- also the
     cache-key payload (``plan.plan_cache_key`` normalises the defaults)."""
-    req: Dict[str, object] = {"lowering": config.lowering}
+    req: Dict[str, object] = {"lowering": config.lowering,
+                              "vdtype": config.vdtype}
     if config.panel:
         pr, xw, cb = (int(v) for v in config.panel.split(","))
         req.update(layout="panels", pr=pr, xw=xw, cb=cb, tune=False)
@@ -164,9 +168,10 @@ class PlanExecStats:
     """Per-plan execution stats, recorded on the cache entry: how many
     dispatches this plan served, how many request columns they carried,
     and the achieved gflops against the roofline ceiling for THIS plan's
-    layout x lowering (``formats.spmv_bytes_per_nnz`` at the plan's
-    measured avg nnz/block x the model HBM bandwidth) -- the measured
-    signal ROADMAP open item 2's learned cost model wants."""
+    layout x lowering x value dtype (``formats.spmv_bytes_per_nnz`` at the
+    plan's measured avg nnz/block, its ACTUAL value itemsize and descriptor
+    lane bytes, x the model HBM bandwidth) -- the measured signal ROADMAP
+    open item 2's learned cost model wants."""
 
     def __init__(self, plan: P.SPC5Plan):
         meta = dict(plan.meta)
@@ -180,8 +185,12 @@ class PlanExecStats:
         lowering = meta.get("lowering")
         if self.nnz and r and c and nblocks and lowering in (
                 P.LOWERING_MASK, P.LOWERING_DESC):
-            bpn = F.spmv_bytes_per_nnz(int(r), int(c), self.nnz / nblocks,
-                                       lowering)
+            # quantised plans move fewer value bytes and narrowed
+            # descriptor tables fewer index bytes: the ceiling rises
+            bpn = F.spmv_bytes_per_nnz(
+                int(r), int(c), self.nnz / nblocks, lowering,
+                s_float=F.value_itemsize(meta.get("vdtype") or ""),
+                desc_lane_nbytes=meta.get("desc_lane_nbytes"))
             self.gflops_roofline = 2.0 / bpn * P.LOWERING_HBM_BW / 1e9
 
     def record(self, ncols: int, seconds: float) -> None:

@@ -236,7 +236,7 @@ def test_record_store_v1_v2_v3_roundtrip(tmp_path):
     store.save_jsonl(str(out))
     with open(out) as f:
         head = json.loads(f.readline())
-    assert head["spc5_records_version"] == S.RECORDS_VERSION == 3
+    assert head["spc5_records_version"] == S.RECORDS_VERSION == 4
     store2 = S.RecordStore(str(out))
     assert store2.records == store.records
     # a store claiming a NEWER version than supported refuses to load

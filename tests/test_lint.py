@@ -201,7 +201,8 @@ def test_rule_registry_complete():
     assert L.rule_names() == ("layout-dispatch", "layout-lowerings-declared",
                               "no-adhoc-timing", "no-dense-in-core",
                               "no-deprecated-entry-points", "pallas-call",
-                              "record-schema-sync", "serve-config-knobs")
+                              "record-schema-sync", "serve-config-knobs",
+                              "vmem-contract-itemsize")
     with pytest.raises(SystemExit):
         L.main(["--rule", "not-a-rule"])
 

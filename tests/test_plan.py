@@ -486,7 +486,8 @@ def test_plan_trace_golden():
     lay2 = dict(t2[2])
     assert lay2.pop("duration_s") >= 0
     assert lay2 == {"pass": "layout", "layout": "panels",
-                    "reason": "requested", "lowering": "mask"}
+                    "reason": "requested", "lowering": "mask",
+                    "vdtype": ""}
     assert h2.strategy == "rcm" and h2.is_reordered
     # the test split delegates tuning to its multi sub-plan
     ht = ops.prepare(F.csr_to_spc5(scr, 1, 8), layout="test",

@@ -40,6 +40,16 @@ def test_all_nan_prior_section_skips(capsys):
     assert "no prior" in capsys.readouterr().out
 
 
+def test_new_current_section_notes_and_passes(capsys):
+    # a fresh section (e.g. a new vdtype bench) must skip-with-note, not
+    # fail its introducing PR
+    cur = payload(a=lines(*[2.0] * 6), fresh_bf16=lines(*[3.0] * 6))
+    pri = payload(a=lines(*[2.0] * 6))
+    assert G.compare(cur, pri) == []
+    out = capsys.readouterr().out
+    assert "NEW in the current run" in out and "no prior baseline" in out
+
+
 def test_prior_only_section_notes_and_passes(capsys):
     cur = payload(a=lines(*[2.0] * 6))
     pri = payload(a=lines(*[2.0] * 6), removed=lines(*[9.0] * 6))

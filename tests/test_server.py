@@ -147,9 +147,10 @@ def test_serve_config_argparse_round_trip():
     assert cfg.cache_mb == 16
     req = SV.plan_request(cfg)
     assert req == {"lowering": "descriptor", "layout": "panels", "pr": 128,
-                   "xw": 64, "cb": 32, "tune": False}
+                   "xw": 64, "cb": 32, "tune": False, "vdtype": "auto"}
     # defaults produce an all-auto request (nothing splits the cache)
-    assert SV.plan_request(SV.ServeConfig()) == {"lowering": "auto"}
+    assert SV.plan_request(SV.ServeConfig()) == {"lowering": "auto",
+                                                 "vdtype": "auto"}
 
 
 def test_start_builds_server_from_config():

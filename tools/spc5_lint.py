@@ -32,7 +32,13 @@ layout-lowerings-declared
 record-schema-sync
     Runtime rule: the benchmark record schema is defined once. The
     ``RecordStore.add`` signature mirrors the ``Record`` dataclass fields
-    in order, and the JSONL v3 field list matches.
+    in order, and the JSONL v4 field list matches (17 fields ending in
+    ``vdtype``).
+vmem-contract-itemsize
+    Every VMEM contract helper (``_vmem_*``) in the kernel modules computes
+    its footprint from the plan's value ``itemsize`` argument -- a contract
+    that hard-codes 4-byte values under-budgets f64 plans and over-budgets
+    the bf16/int8 stores.
 serve-config-knobs
     Serve knobs are declared once, on ``launch.server.ServeConfig``. Any
     literal ``add_argument("--flag")`` in the launch modules must map back
@@ -396,12 +402,38 @@ def check_record_schema_sync(root: str = REPO_ROOT) -> List[Finding]:
             "record-schema-sync", rel, 1,
             f"RecordStore.add params {add_params} out of sync with Record "
             f"fields {fields}"))
-    if fields[-1] != "lowering" or len(fields) != 16:
+    if fields[-1] != "vdtype" or len(fields) != 17:
         out.append(Finding(
             "record-schema-sync", rel, 1,
-            f"Record schema drifted from JSONL v3 (16 fields ending in "
-            f"'lowering'); got {len(fields)} fields ending in "
+            f"Record schema drifted from JSONL v4 (17 fields ending in "
+            f"'vdtype'); got {len(fields)} fields ending in "
             f"{fields[-1]!r} -- bump RECORDS_VERSION"))
+    return out
+
+
+@_rule("vmem-contract-itemsize")
+def check_vmem_contract_itemsize(root: str = REPO_ROOT) -> List[Finding]:
+    out: List[Finding] = []
+    for fn in ("spc5_spmv.py", "spc5_spmm.py"):
+        rel = os.path.join("src", "repro", "kernels", fn)
+        ap = os.path.join(root, rel)
+        if not os.path.exists(ap):
+            continue
+        tree = _parse(ap)
+        if tree is None:
+            continue
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.FunctionDef)
+                    and node.name.startswith("_vmem_")):
+                continue
+            used = {n.id for n in ast.walk(node)
+                    if isinstance(n, ast.Name)}
+            if "itemsize" not in used:
+                out.append(Finding(
+                    "vmem-contract-itemsize", rel, node.lineno,
+                    f"VMEM contract {node.name} never reads 'itemsize'; "
+                    f"compute the footprint from the plan's value itemsize "
+                    f"(a hard-coded 4 misbudgets f64/bf16/int8 stores)"))
     return out
 
 
