@@ -110,6 +110,8 @@ def main(argv=None) -> None:
 
     from . import bench_serve
     sections.append(("spmv_serve", lambda: bench_serve.run(quick=quick)))
+    sections.append(("spmv_serve_overload",
+                     lambda: bench_serve.overload(quick=quick)))
 
     from . import roofline
     def _roofline():

@@ -598,7 +598,8 @@ _TRACE_KEYS = {"tune": ("source", "duration_s"),
                "reorder": ("strategy", "applied", "duration_s"),
                "layout": ("layout", "reason", "lowering", "vdtype",
                           "duration_s"),
-               "build": ("layout", "rows_fused", "duration_s")}
+               "build": ("layout", "rows_fused", "duration_s"),
+               "degrade": ("rung", "reason", "duration_s")}
 
 
 @_rule("trace-schema")
@@ -606,7 +607,10 @@ def _r_trace_schema(ctx: _Ctx) -> bool:
     """``plan.trace`` is complete and schema-valid: every pipeline pass
     present in order, required keys per pass, the build/layout entries
     naming THIS plan's layout, and every demotion flag carrying a sibling
-    ``*_reason`` (demotions must be explained, not just flagged)."""
+    ``*_reason`` (demotions must be explained, not just flagged). The
+    degradation ladder may append trailing ``degrade`` entries after
+    ``build`` -- each must name the rung it demoted to and the failure
+    that forced it."""
     rule = "trace-schema"
     try:
         trace = ctx.plan.trace
@@ -618,8 +622,11 @@ def _r_trace_schema(ctx: _Ctx) -> bool:
         ctx.fail(rule, "trace is not a list of pass entries")
         return True
     passes = tuple(e.get("pass") for e in trace)
-    if passes != _TRACE_PASSES:
-        ctx.fail(rule, f"pass sequence {passes} != {_TRACE_PASSES}")
+    n = len(_TRACE_PASSES)
+    if passes[:n] != _TRACE_PASSES or \
+            any(p != "degrade" for p in passes[n:]):
+        ctx.fail(rule, f"pass sequence {passes} != {_TRACE_PASSES} "
+                       f"(+ optional trailing 'degrade' entries)")
         return True
     for entry in trace:
         name = entry["pass"]
@@ -631,7 +638,7 @@ def _r_trace_schema(ctx: _Ctx) -> bool:
                     and not entry.get(key + "_reason"):
                 ctx.fail(rule, f"{name} entry flags {key!r} without a "
                                f"{key}_reason")
-    tune, _, layout, build = trace
+    tune, _, layout, build = trace[:n]
     if tune.get("source") not in _TUNE_SOURCES:
         ctx.fail(rule, f"tune source {tune.get('source')!r} not in "
                        f"{_TUNE_SOURCES}")

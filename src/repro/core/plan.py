@@ -621,6 +621,7 @@ def _build_pass(st: PlanState) -> SPC5Plan:
     into its static gather indices (the descriptor builds do), so no
     ``col_perm`` rides on the plan at all; ``extra["rows_fused"]`` likewise
     drops the inverse row permutation."""
+    obs.faults.get_faults().maybe_fail("plan.build")
     spec = get_layout(st.layout)
     with obs.span("plan.build", layout=st.layout) as sp:
         arrays, geom, extra = spec.build(st)
@@ -729,6 +730,7 @@ def execute_spmv(plan: SPC5Plan, x: jax.Array, *,
     inverse row permutation -- unless the build fused it into the scatter
     indices (``rows_fused``).
     """
+    obs.faults.get_faults().maybe_fail("exec.spmv")
     if use_pallas is None:
         use_pallas = _on_tpu()
     if interpret is None:
@@ -746,6 +748,7 @@ def execute_spmm(plan: SPC5Plan, x: jax.Array, *,
                  double_buffer: bool = True,
                  interpret: Optional[bool] = None) -> jax.Array:
     """Y = A @ X, X of shape (ncols, nvec), through the registered lowering."""
+    obs.faults.get_faults().maybe_fail("exec.spmm")
     if use_pallas is None:
         use_pallas = _on_tpu()
     if interpret is None:
@@ -828,6 +831,19 @@ def plan_cache_key(mat: F.SPC5Matrix, **request) -> str:
     h.update(matrix_fingerprint(mat).encode())
     h.update(json.dumps(norm, sort_keys=True).encode())
     return h.hexdigest()
+
+
+def append_trace_entries(plan: SPC5Plan, entries: List[dict]) -> SPC5Plan:
+    """A copy of ``plan`` with ``entries`` appended to its pass trace.
+
+    The degradation ladder uses this to stamp ``{"pass": "degrade", ...}``
+    entries onto a plan that was rebuilt on a lower rung, so the demotion
+    history is inspectable on the plan itself (the trace-schema verify
+    rule admits trailing ``degrade`` entries and requires each to carry
+    ``rung``/``reason``/``duration_s``)."""
+    return dataclasses.replace(
+        plan, trace_json=json.dumps(plan.trace + list(entries),
+                                    sort_keys=True))
 
 
 def plan_nbytes(plan: SPC5Plan) -> int:

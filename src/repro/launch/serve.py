@@ -124,8 +124,16 @@ def _serve_vocab(config: SV.ServeConfig, cfg) -> None:
           f"offered={res['qps_offered']:.0f}qps "
           f"achieved={res['qps_achieved']:.0f}qps "
           f"p50={res['p50_us']:.0f}us p99={res['p99_us']:.0f}us "
+          f"shed={res['shed']} expired={res['expired']} "
+          f"errors={res['errors']} "
           f"(batches={st['batches']}, mean_batch={st['mean_batch']:.1f}, "
+          f"degraded={st['degraded']}, restarts={st['worker_restarts']}, "
           f"cache {c['hits']}h/{c['misses']}m/{c['evictions']}e)")
+    fr = obs.faults.get_faults()
+    if fr:
+        print("faults: " + ", ".join(
+            f"{name}@{s['rate']:g} {s['fired']}/{s['checks']}"
+            for name, s in fr.stats().items()))
 
 
 def _bench_vocab(config: SV.ServeConfig, cfg) -> None:

@@ -23,17 +23,21 @@ samples -- so "what happened and how long did it take" has one answer.
     ``no-adhoc-timing`` lint rule bans the raw calls.
   * :mod:`repro.obs.export` renders a registry as a JSON snapshot,
     Prometheus text, or a Chrome ``trace_event`` timeline.
+  * :mod:`repro.obs.faults` is the deterministic fault-injection
+    registry (``SPC5_FAULTS=point:rate:seed``) the resilience layer and
+    the chaos suite arm; off by default via the same shared-no-op
+    pattern as a disabled Registry.
 """
 from __future__ import annotations
 
-from repro.obs import export
+from repro.obs import export, faults
 from repro.obs.metrics import (BUCKET_RATIO, HISTOGRAM_BOUNDS, Counter,
                                Gauge, Histogram, Registry)
 from repro.obs.spans import SpanEvent, SpanHandle, monotonic
 
 __all__ = ["Counter", "Gauge", "Histogram", "Registry", "SpanEvent",
            "SpanHandle", "BUCKET_RATIO", "HISTOGRAM_BOUNDS", "export",
-           "monotonic", "get_registry", "set_registry", "span",
+           "faults", "monotonic", "get_registry", "set_registry", "span",
            "snapshot"]
 
 _global_registry = Registry()

@@ -198,7 +198,8 @@ def test_record_schema_sync_detects_drift(monkeypatch):
 
 
 def test_rule_registry_complete():
-    assert L.rule_names() == ("layout-dispatch", "layout-lowerings-declared",
+    assert L.rule_names() == ("fault-points-registered", "layout-dispatch",
+                              "layout-lowerings-declared",
                               "no-adhoc-timing", "no-dense-in-core",
                               "no-deprecated-entry-points", "pallas-call",
                               "record-schema-sync", "serve-config-knobs",
@@ -283,6 +284,39 @@ def test_no_adhoc_timing_sanctioned_clock_is_clean(tmp_path):
             return obs.monotonic(), sp.duration_s
     """)
     assert L.check_no_adhoc_timing(root) == []
+
+
+def test_fault_points_registered_fires(tmp_path):
+    root = plant(tmp_path, "launch/bad.py", """
+        from repro import obs
+
+        def f(name):
+            obs.faults.get_faults().maybe_fail("serve.bogus")
+            obs.faults.get_faults().maybe_fail(name)
+            if obs.faults.get_faults().check("exec.spmv"):
+                raise RuntimeError
+    """)
+    findings = L.check_fault_points_registered(root)
+    bad = [f for f in findings if f.path.endswith("bad.py")]
+    assert len(bad) == 2
+    msgs = "\n".join(f.message for f in bad)
+    assert "'serve.bogus'" in msgs          # uncatalogued literal
+    assert "string literal" in msgs         # computed name
+    # exec.spmv IS wired in the planted tree; the other catalogued points
+    # have no call site there, which the coverage half of the rule reports
+    uncovered = [f for f in findings if "no call site" in f.message]
+    assert not any("'exec.spmv'" in f.message for f in uncovered)
+    assert any("'plan.build'" in f.message for f in uncovered)
+
+
+def test_fault_points_registered_ignores_unrelated_check(tmp_path):
+    # .check() on a non-fault receiver is not an injection site
+    root = plant(tmp_path, "core/ok.py", """
+        def f(report):
+            return report.check("anything-at-all")
+    """)
+    assert [f for f in L.check_fault_points_registered(root)
+            if f.path.endswith("ok.py")] == []
 
 
 def test_serve_config_knobs_clean_and_fires(tmp_path):

@@ -58,6 +58,14 @@ no-adhoc-timing
     ``benchmarks/timing.py`` (the one sanctioned clock user; ``repro.obs``
     itself lives outside the scanned trees). Ad-hoc clocks are how serve
     counters and bench numbers drift out of the exported metrics.
+fault-points-registered
+    Runtime rule: fault injection is a closed catalogue. Every
+    ``maybe_fail(...)`` / fault-registry ``check(...)`` call site in
+    ``src/repro`` and ``benchmarks`` names its point as a STRING LITERAL
+    found in ``repro.obs.faults.CATALOGUE`` (a computed or uncatalogued
+    name silently escapes the CI chaos matrix), and every catalogued
+    point is wired at least once (a catalogue entry with no call site is
+    a fault the chaos suite believes it covers but never fires).
 
 The rules are importable (tests/test_lint.py, and test_plan.py's dispatch
 test is a thin wrapper over ``layout-dispatch``); the CLI is what CI runs.
@@ -466,6 +474,72 @@ def check_serve_config_knobs(root: str = REPO_ROOT) -> List[Finding]:
                     f"literal CLI knob {flag!r} has no ServeConfig field "
                     f"{knob!r}; declare serve knobs on the dataclass and "
                     f"let add_config_args generate the flag"))
+    return out
+
+
+#: The fault registry itself resolves point names from variables (its own
+#: plumbing, not a wired injection site).
+FAULTS_ALLOWLIST = {
+    os.path.join("src", "repro", "obs", "faults.py"),
+}
+
+
+@_rule("fault-points-registered")
+def check_fault_points_registered(root: str = REPO_ROOT) -> List[Finding]:
+    _import_repro(root)
+    from repro.obs.faults import CATALOGUE
+    out: List[Finding] = []
+    wired: Dict[str, int] = {}
+
+    def _is_fault_call(node: ast.Call) -> bool:
+        name = _call_name(node)
+        if name == "maybe_fail":
+            return True
+        if name != "check" or not isinstance(node.func, ast.Attribute):
+            return False
+        # .check() is everywhere; only a fault-registry receiver counts
+        # (faults.check, get_faults().check, self._faults_now().check)
+        return "fault" in ast.unparse(node.func.value).lower()
+
+    for sub in (os.path.join("src", "repro"), "benchmarks"):
+        if not os.path.isdir(os.path.join(root, sub)):
+            continue
+        for ap, _ in _py_files(root, sub):
+            rel = _rel(root, ap)
+            if rel in FAULTS_ALLOWLIST:
+                continue
+            tree = _parse(ap)
+            if tree is None:
+                continue
+            for node in ast.walk(tree):
+                if not (isinstance(node, ast.Call)
+                        and _is_fault_call(node)):
+                    continue
+                if not (node.args and isinstance(node.args[0], ast.Constant)
+                        and isinstance(node.args[0].value, str)):
+                    out.append(Finding(
+                        "fault-points-registered", rel, node.lineno,
+                        "fault point must be a string literal; a computed "
+                        "name escapes the catalogue and the CI chaos "
+                        "matrix"))
+                    continue
+                point = node.args[0].value
+                if point not in CATALOGUE:
+                    out.append(Finding(
+                        "fault-points-registered", rel, node.lineno,
+                        f"fault point {point!r} is not in "
+                        f"repro.obs.faults.CATALOGUE; register it there "
+                        f"(name, where-it-fires) so the chaos matrix "
+                        f"covers it"))
+                    continue
+                wired[point] = wired.get(point, 0) + 1
+    for point in sorted(set(CATALOGUE) - set(wired)):
+        out.append(Finding(
+            "fault-points-registered",
+            os.path.join("src", "repro", "obs", "faults.py"), 1,
+            f"catalogued fault point {point!r} has no call site under "
+            f"src/repro or benchmarks; the chaos matrix believes it is "
+            f"covered but it never fires"))
     return out
 
 
